@@ -1,0 +1,51 @@
+"""Fig. 10: expert-selection prediction accuracy.
+
+Average absolute difference per expert between real and predicted routed-
+token counts, across models / expert counts / top-k, ours (token+position+
+attention-ID posterior, Eq. 1-2) vs the Lina baseline (token-ID only).
+The corpus is the synthetic Zipf stand-in (EXPERIMENTS.md §Setup).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, small_runtime
+from repro.core.predictor import ExpertPredictor
+
+CASES = [
+    ("bert-moe", {}),                       # basic Bert MoE: 4e top-1
+    ("bert-moe", {"variant_experts": 8}),
+    ("bert-moe", {"variant_experts": 16}),
+    ("bert-moe", {"variant_top_k": 2}),     # top-2 routing
+    ("gpt2-moe", {}),                       # basic GPT2 MoE
+    ("gpt2-moe", {"seed": 7}),              # different corpus (cf. Lambda)
+    ("bert2bert-moe", {}),                  # basic Bert2Bert MoE
+]
+
+
+def run() -> None:
+    for arch, over in CASES:
+        tag = arch + "".join(f"_{k}{v}" for k, v in over.items())
+        rt = small_runtime(arch, **over)
+        rt.profile_table()
+        b = rt.learn_batches()[0]
+        real = rt.real_demand(b)
+        for mode in ("full", "lina"):
+            t0 = time.perf_counter()
+            p = ExpertPredictor(rt.table, mode=mode, top_k=rt.top_k).fit()
+            dem = p.predict_demand(b, mode="map")       # Eq. 2 (paper)
+            us = (time.perf_counter() - t0) * 1e6
+            diff = p.prediction_difference(dem, real)
+            name = "ours" if mode == "full" else "lina"
+            emit(f"fig10_{tag}_{name}", us, f"diff={diff:.2f}")
+        # beyond-paper: expected-count demand (ablation)
+        p = ExpertPredictor(rt.table, top_k=rt.top_k).fit()
+        dem = p.predict_demand(b, mode="expected")
+        emit(f"fig10_{tag}_ours_expected", 0.0,
+             f"diff={p.prediction_difference(dem, real):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig. 11: billed cost + throughput of the three scatter-gather designs.
+
+Evaluates the Eq. 3-11 time models at the paper's operating points
+(256 vs 2560-token batches, 3008 MB functions, no replicas) for a Bert-MoE-
+scale expert. Direct transfer must win small batches; indirect (pipelined)
+must win large ones; direct becomes infeasible past the payload cap.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import comm
+from repro.core.costmodel import ModelProfile, PlatformSpec
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=12, experts_per_layer=4,
+    expert_param_bytes=3 * 768 * 3072 * 4.0,
+    token_in_bytes=768 * 4.0, token_out_bytes=768 * 4.0,
+    u_ref_s=1.2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+
+def run() -> None:
+    E = 4
+    for n_tokens in (256, 2560, 10240):
+        r = np.full(E, n_tokens / E, float)
+        g = np.ones(E)
+        mem = np.full(E, 3008.0)
+        for a, label in ((1, "pipelined_indirect"), (2, "indirect"),
+                         (3, "direct")):
+            beta = max(min(n_tokens // E // 4, 1024), 1) if a == 1 else 1
+            times = comm.layer_times(a, r, g, mem, beta, PROF, SPEC)
+            cost = comm.layer_billed_cost(times, mem, SPEC) * 12  # 12 layers
+            feasible = bool(times.feasible.all())
+            tput = n_tokens / (12 * times.t_latency) if feasible else 0.0
+            emit(f"fig11_{n_tokens}tok_{label}",
+                 times.t_latency * 1e6,
+                 f"cost=${cost:.6f};tput={tput:.1f}t/s;feasible={feasible}")
+
+
+if __name__ == "__main__":
+    run()

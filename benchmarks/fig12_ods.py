@@ -1,0 +1,58 @@
+"""Fig. 12: billed cost of ODS vs joint-MIQCP vs random deployment across
+inference-throughput targets.
+
+"MIQCP" here is the single-method exact solver forced to ONE method for all
+layers (the paper's monolithic-solver baseline: no per-layer mixing);
+ODS mixes methods per layer under the SLO (Alg. 1).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import comm
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.deployment import ods, random_policy, solve_fixed_method
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=12, experts_per_layer=4,
+    expert_param_bytes=3 * 768 * 3072 * 4.0,
+    token_in_bytes=768 * 4.0, token_out_bytes=768 * 4.0,
+    u_ref_s=1.2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+N_TOKENS = 10_240
+
+
+def _demand(seed=0):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, 5)) ** 1.2
+    base = N_TOKENS * zipf / zipf.sum()
+    return np.stack([rng.permutation(base) for _ in range(12)])
+
+
+def run() -> None:
+    d = _demand()
+    for tput_target in (5, 10, 20, 40):
+        t_limit = N_TOKENS / tput_target
+        t0 = time.perf_counter()
+        sols = {a: solve_fixed_method(a, d, PROF, SPEC)
+                for a in comm.METHODS}
+        pol = ods(sols, d, PROF, SPEC, t_limit_s=t_limit)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig12_ods_tput{tput_target}", us,
+             f"cost=${pol.total_cost:.4f};slo_met={pol.meets_slo}")
+        # single-method joint solver (no per-layer mixing)
+        best = min((np.where(np.isfinite(s.layer_cost), s.layer_cost,
+                             1e12).sum(), a) for a, s in sols.items())
+        emit(f"fig12_miqcp_single_tput{tput_target}", us,
+             f"cost=${best[0]:.4f};method={best[1]}")
+        rnd = random_policy(d, PROF, SPEC, seed=1)
+        emit(f"fig12_random_tput{tput_target}", 0.0,
+             f"cost=${rnd.total_cost:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Fig. 14: overall billed cost + throughput across deployment baselines.
+
+Serverless (BO / real-distribution oracle / no-BO / Lina / LambdaML /
+random) vs CPU cluster (plain + betterTransformer) for Bert-MoE and
+GPT2-MoE. The paper's headline claims: >=75.67% cheaper than the CPU
+cluster and >=43.41% cheaper than LambdaML with <=18.76% throughput loss.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, paper_regime_spec, small_runtime
+
+
+def run(bo_iters: int = 4) -> None:
+    for arch in ("bert-moe", "gpt2-moe"):
+        # MAP demand (Eq. 2, paper-faithful) + a serving SLO tight enough
+        # that ODS must buy memory/replicas for throughput (paper's setup)
+        rt = small_runtime(arch, demand_mode="map", slo_s=8.0,
+                           spec=paper_regime_spec())
+        res = rt.run_bo(Q=40, max_iters=bo_iters, seed=0)
+        t0 = time.perf_counter()
+        out = rt.evaluate_all(bo_table=res.best_table)
+        us = (time.perf_counter() - t0) * 1e6 / max(len(out), 1)
+        ours = out["serverless_bo"]["billed_cost"]
+        for name, v in out.items():
+            emit(f"fig14_{arch}_{name}", us,
+                 f"cost=${v['billed_cost']:.6f};"
+                 f"tput={v['throughput_tps']:.1f}t/s")
+        cpu = out["cpu_cluster"]["billed_cost"]
+        lam = out["lambdaml"]["billed_cost"]
+        emit(f"fig14_{arch}_headline", 0.0,
+             f"vs_cpu={100 * (1 - ours / cpu):.1f}%_cheaper;"
+             f"vs_lambdaml={100 * (1 - ours / lam):.1f}%_cheaper;"
+             f"tput_drop_vs_lambdaml="
+             f"{100 * (1 - out['serverless_bo']['throughput_tps'] / out['lambdaml']['throughput_tps']):.1f}%")
+
+
+if __name__ == "__main__":
+    run()

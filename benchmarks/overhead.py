@@ -1,0 +1,48 @@
+"""§V-F: algorithm overhead — profiling, prediction, ODS, BO iteration.
+
+The paper reports (at full scale on their testbed): profiling ~28.89 s /
+100 batches, prediction ~20.31 s / 10 batches, ODS ~2.27 s, BO ~62.15 s
+per iteration. Our numbers are at reduced scale; the derived field carries
+the per-unit cost so the scaling is visible.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, small_runtime
+from repro.core.predictor import ExpertPredictor
+
+
+def run() -> None:
+    rt = small_runtime("gpt2-moe", profile_batches=4)
+    t0 = time.perf_counter()
+    rt.profile_table()
+    prof_s = time.perf_counter() - t0
+    emit("overhead_profiling", prof_s * 1e6,
+         f"{prof_s / 4:.2f}s_per_batch")
+
+    p = ExpertPredictor(rt.table, top_k=rt.top_k).fit()
+    b = rt.learn_batches()[0]
+    t0 = time.perf_counter()
+    p.predict_demand(b)
+    pred_s = time.perf_counter() - t0
+    emit("overhead_prediction", pred_s * 1e6, f"{pred_s:.2f}s_per_batch")
+
+    pred = ExpertPredictor(rt.table, top_k=rt.top_k).fit()
+    dem = pred.predict_demand(b)
+    t0 = time.perf_counter()
+    rt.plan(dem)
+    ods_s = time.perf_counter() - t0
+    emit("overhead_ods_3solvers", ods_s * 1e6, f"{ods_s:.2f}s")
+
+    eval_fn = rt.make_eval_fn()
+    t0 = time.perf_counter()
+    eval_fn(rt.table)
+    it_s = time.perf_counter() - t0
+    emit("overhead_bo_iteration", it_s * 1e6, f"{it_s:.2f}s_per_iter")
+
+
+if __name__ == "__main__":
+    run()

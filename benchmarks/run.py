@@ -1,0 +1,57 @@
+"""Benchmark harness — one entry per paper table/figure plus roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figures map to the paper:
+  fig10_*    expert-selection prediction accuracy   (paper Fig. 10)
+  fig11_*    scatter-gather communication designs   (paper Fig. 11)
+  fig12_*    ODS vs MIQCP vs random deployment      (paper Fig. 12)
+  fig13_*    BO acquisition comparison              (paper Fig. 13)
+  fig14_*    overall cost/throughput baselines      (paper Fig. 14)
+  overhead_* algorithm overhead                     (paper §V-F)
+  kernel_*   Pallas kernel micro-benchmarks
+  roofline_* dominant roofline term per arch/shape  (EXPERIMENTS.md §Roofline)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig10_prediction, fig11_comm, fig12_ods,
+                            fig13_bo, fig14_overall, kernels_bench,
+                            overhead)
+    suites = [
+        ("fig11_comm", fig11_comm.run),
+        ("fig12_ods", fig12_ods.run),
+        ("kernels", kernels_bench.run),
+        ("overhead", overhead.run),
+        ("fig10_prediction", fig10_prediction.run),
+        ("fig13_bo", fig13_bo.run),
+        ("fig14_overall", fig14_overall.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:            # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    # roofline summary (reads experiments/dryrun; skip gracefully if absent)
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_all()
+        for r in rows:
+            if r["mesh"] == "single":
+                dom = r["dominant"]
+                print(f"roofline_{r['arch']}_{r['shape']},"
+                      f"{r[dom + '_s'] * 1e6:.1f},dominant={dom}")
+    except Exception:                # noqa: BLE001
+        traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

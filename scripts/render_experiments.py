@@ -1,0 +1,66 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json. Injects between the AUTOGEN markers."""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import analyze_record, render_table  # noqa: E402
+
+
+def dryrun_table(recs, mesh):
+    hdr = ("| arch | shape | status | compile s | args GB/dev | "
+           "temp GB/dev | a2a MB | all-gather MB | all-reduce MB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in recs:
+        if r["mesh"] != mesh or r.get("variant", "baseline") != "baseline":
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skipped | - | - "
+                         f"| - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        m = r["memory"]
+        c = r["collective_bytes_per_device"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.1f} | "
+            f"{m['argument_bytes'] / 1e9:.2f} | {m['temp_bytes'] / 1e9:.2f} | "
+            f"{c['all-to-all'] / 1e6:.0f} | {c['all-gather'] / 1e6:.0f} | "
+            f"{c['all-reduce'] / 1e6:.0f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = [json.loads(p.read_text())
+            for p in sorted(Path("experiments/dryrun").glob("*.json"))]
+    rows = [analyze_record(r) for r in recs]
+    rows = [r for r in rows if r]
+
+    blocks = {
+        "DRYRUN_SINGLE": dryrun_table(recs, "single"),
+        "DRYRUN_MULTI": dryrun_table(recs, "multi"),
+        "ROOFLINE_SINGLE": render_table(rows, "single"),
+        "ROOFLINE_MULTI": render_table(rows, "multi"),
+    }
+    path = Path("EXPERIMENTS.md")
+    text = path.read_text()
+    for key, table in blocks.items():
+        pat = re.compile(
+            rf"(<!-- AUTOGEN:{key} -->).*?(<!-- /AUTOGEN:{key} -->)",
+            re.DOTALL)
+        text = pat.sub(lambda m: f"{m.group(1)}\n{table}\n{m.group(2)}",
+                       text)
+    path.write_text(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Msgpack-based checkpointing for params / optimizer pytrees.
+
+Layout: one ``.msgpack`` file holding {flat_key: (dtype, shape, bytes)}.
+Keys are "/"-joined tree paths, so checkpoints are portable across runs as
+long as the config matches.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_params(path: str | Path, tree: Any) -> None:
+    flat = _flatten(tree)
+    payload = {k: (str(v.dtype), list(v.shape), v.tobytes())
+               for k, v in flat.items()}
+    Path(path).parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload))
+
+
+def load_params(path: str | Path, like: Any) -> Any:
+    """Load into the structure of ``like`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat_like[0]:
+        key = "/".join(p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+                       for p in pth)
+        dtype, shape, raw = payload[key]
+        arr = np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape)
+        if tuple(shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint {shape} != model "
+                             f"{leaf.shape}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

@@ -1,0 +1,26 @@
+"""codeqwen1.5-7b [dense] — qwen1.5 architecture, code model.
+
+[hf:Qwen/CodeQwen1.5-7B] 32L, d_model=4096, 32 heads (GQA kv=32 == MHA),
+d_ff=13440, vocab=92416, RoPE theta 1e6, SwiGLU, RMSNorm.
+"""
+from repro.config import LayerSpec, ModelConfig, register_arch
+
+
+@register_arch("codeqwen1.5-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="codeqwen1.5-7b",
+        arch_type="dense",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=13440,
+        vocab_size=92416,
+        pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=1_000_000.0,
+        max_seq_len=65_536,
+        source="hf:Qwen/CodeQwen1.5-7B",
+        supports_long_context=False,
+        notes="pure full attention -> long_500k skipped (see DESIGN.md §8)",
+    )

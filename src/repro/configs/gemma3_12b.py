@@ -1,0 +1,34 @@
+"""gemma3-12b [dense] — 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-1b-pt family, 12B sibling] 48L, d_model=3840, 16 heads
+(GQA kv=8), d_ff=15360, vocab=262144, qk-norm, sliding window 1024 on local
+layers, every 6th layer global.
+"""
+from repro.config import LayerSpec, ModelConfig, register_arch
+
+_UNIT = tuple([LayerSpec("swa", "dense")] * 5 + [LayerSpec("attn", "dense")])
+
+
+@register_arch("gemma3-12b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-12b",
+        arch_type="dense",
+        num_layers=48,
+        d_model=3840,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=256,
+        d_ff=15360,
+        vocab_size=262144,
+        pattern=_UNIT,
+        qk_norm=True,
+        sliding_window=1024,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        max_seq_len=131_072,
+        source="hf:google/gemma-3-1b-pt (12B sibling)",
+        supports_long_context=True,
+        notes="long_500k runs: local layers cap KV at window=1024; global "
+              "layers keep the full 500k cache sharded over 'data'.",
+    )

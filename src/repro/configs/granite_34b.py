@@ -1,0 +1,32 @@
+"""granite-34b [dense] — llama-ish code model with MQA (GPTBigCode lineage).
+
+[arXiv:2405.04324] 88L, d_model=6144, 48 heads (GQA kv=1 == MQA),
+d_ff=24576, vocab=49152, learned positions, LayerNorm, GELU.
+"""
+from repro.config import LayerSpec, ModelConfig, register_arch
+
+
+@register_arch("granite-34b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b",
+        arch_type="dense",
+        num_layers=88,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=1,
+        d_ff=24576,
+        vocab_size=49152,
+        pattern=(LayerSpec("attn", "dense"),),
+        pos_embed="learned",
+        norm="layernorm",
+        activation="gelu",
+        # model card is 8k; extended so the assigned decode_32k shape has
+        # learned positions available (deviation noted in DESIGN.md)
+        max_seq_len=32_768,
+        source="arXiv:2405.04324 (Granite Code Models)",
+        supports_long_context=False,
+        notes=("MQA: kv=1 cannot shard over the 16-way model axis; KV "
+               "projections + cache replicated over 'model' (DESIGN.md §7). "
+               "Pure full attention -> long_500k skipped."),
+    )

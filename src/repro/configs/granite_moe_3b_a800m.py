@@ -1,0 +1,34 @@
+"""granite-moe-3b-a800m [moe] — 40 routed experts top-8.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base family, 3b sibling] 32L,
+d_model=1536, 24 heads (GQA kv=8), per-expert d_ff=512, vocab=49155,
+40 experts top-8, no shared experts.
+"""
+from repro.config import LayerSpec, MoEConfig, ModelConfig, register_arch
+
+
+@register_arch("granite-moe-3b-a800m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m",
+        arch_type="moe",
+        num_layers=32,
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=512,
+        vocab_size=49155,
+        pattern=(LayerSpec("attn", "moe"),),
+        moe=MoEConfig(
+            num_experts=40,
+            top_k=8,
+            d_expert_ff=512,
+            dispatch="expert_parallel",
+        ),
+        tie_embeddings=True,
+        max_seq_len=8_192,
+        source="hf:ibm-granite/granite-3.0-1b-a400m-base (3b sibling)",
+        supports_long_context=False,
+        notes="experts padded 40->48; vocab padded 49155->49408 for 16-way "
+              "sharding (DESIGN.md §7). Full attention -> long_500k skipped.",
+    )

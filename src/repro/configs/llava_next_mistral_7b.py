@@ -1,0 +1,34 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone + anyres vision stub.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf] 32L, d_model=4096, 32 heads
+(GQA kv=8), d_ff=14336, vocab=32000. The SigLIP/CLIP ViT + projector is a
+STUB: input_specs() supplies precomputed patch embeddings (anyres tiling
+approximated by a fixed budget of 5 tiles x 576 patches = 2880 tokens).
+Sliding window 4096 per Mistral-7B-v0.1 (enables the long_500k path; the
+v0.2 base removed SWA — deviation noted).
+"""
+from repro.config import LayerSpec, ModelConfig, register_arch
+
+
+@register_arch("llava-next-mistral-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-mistral-7b",
+        arch_type="vlm",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=32000,
+        pattern=(LayerSpec("swa", "dense"),),
+        sliding_window=4096,
+        rope_theta=1_000_000.0,
+        max_seq_len=32_768,
+        frontend="vision_stub",
+        frontend_tokens=2880,
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+        supports_long_context=True,
+        notes="vision frontend stubbed (DESIGN.md §5); SWA=4096 rolling cache "
+              "makes long_500k sub-quadratic.",
+    )

@@ -1,0 +1,34 @@
+"""bert2bert-moe — the paper's Bert2Bert encoder-decoder MoE model (§V-A).
+
+Bert2Bert [arXiv:2110.07143]: 12-layer encoder + 12-layer decoder
+(24 MoE layers after conversion), d_model=768, 4 experts per MoE layer.
+"""
+from repro.config import (EncoderConfig, LayerSpec, MoEConfig, ModelConfig,
+                          register_arch)
+
+
+def bert2bert_moe_config(num_experts: int = 4, top_k: int = 1) -> ModelConfig:
+    return ModelConfig(
+        name=f"bert2bert-moe-{num_experts}e-top{top_k}",
+        arch_type="moe",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=30522,
+        pattern=(LayerSpec("attn", "moe"),),
+        moe=MoEConfig(num_experts=num_experts, top_k=top_k, d_expert_ff=3072),
+        encoder=EncoderConfig(num_layers=12, num_heads=12, d_ff=3072,
+                              source_len=512),
+        pos_embed="learned",
+        norm="layernorm",
+        activation="gelu",
+        max_seq_len=512,
+        source="paper §V-A: Bert2Bert [arXiv:2110.07143] converted to MoE",
+    )
+
+
+@register_arch("bert2bert-moe")
+def config() -> ModelConfig:
+    return bert2bert_moe_config()

@@ -1,0 +1,35 @@
+"""bert-moe — the paper's Bert-based MoE model (§V-A).
+
+Bert-base [arXiv:1810.04805], 12 encoder layers, d_model=768, 12 heads,
+every MLP converted to an MoE layer with a linear gating network.
+The paper evaluates 4/8/16 experts with top-1/top-2 routing; the registry
+entry is the "basic Bert MoE" (4 experts, top-1); variants via
+``bert_moe_config(num_experts=..., top_k=...)``.
+"""
+from repro.config import LayerSpec, MoEConfig, ModelConfig, register_arch
+
+
+def bert_moe_config(num_experts: int = 4, top_k: int = 1) -> ModelConfig:
+    return ModelConfig(
+        name=f"bert-moe-{num_experts}e-top{top_k}",
+        arch_type="moe",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=30522,
+        pattern=(LayerSpec("attn", "moe"),),
+        moe=MoEConfig(num_experts=num_experts, top_k=top_k, d_expert_ff=3072),
+        pos_embed="learned",
+        norm="layernorm",
+        activation="gelu",
+        causal=False,
+        max_seq_len=512,
+        source="paper §V-A: Bert [arXiv:1810.04805] converted to MoE",
+    )
+
+
+@register_arch("bert-moe")
+def config() -> ModelConfig:
+    return bert_moe_config()

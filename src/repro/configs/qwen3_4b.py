@@ -1,0 +1,30 @@
+"""qwen3-4b [dense] — qk_norm + GQA.
+
+[hf:Qwen/Qwen3-8B family] 36L, d_model=2560, 32 heads (GQA kv=8),
+d_ff=9728, vocab=151936, qk-norm, RoPE theta 1e6, SwiGLU, RMSNorm.
+"""
+from repro.config import LayerSpec, ModelConfig, register_arch
+
+
+@register_arch("qwen3-4b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b",
+        arch_type="dense",
+        num_layers=36,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=9728,
+        vocab_size=151936,
+        pattern=(LayerSpec("attn", "dense"),),
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        max_seq_len=32_768,
+        source="hf:Qwen/Qwen3-8B (4B sibling)",
+        supports_long_context=False,
+        notes="kv=8 not divisible by model axis 16 -> KV replicated. "
+              "Pure full attention -> long_500k skipped.",
+    )

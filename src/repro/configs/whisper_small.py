@@ -1,0 +1,38 @@
+"""whisper-small [audio] — encoder-decoder transformer backbone.
+
+[arXiv:2212.04356] 12L decoder + 12L encoder, d_model=768, 12 heads
+(kv=12), d_ff=3072, vocab=51865. The mel-spectrogram + conv frontend is a
+STUB: input_specs() supplies (batch, 1500, d_model) frame embeddings.
+"""
+from repro.config import EncoderConfig, LayerSpec, ModelConfig, register_arch
+
+
+@register_arch("whisper-small")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        arch_type="audio",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51865,
+        pattern=(LayerSpec("attn", "dense"),),
+        encoder=EncoderConfig(num_layers=12, num_heads=12, d_ff=3072,
+                              source_len=1500),
+        pos_embed="learned",
+        norm="layernorm",
+        activation="gelu",
+        max_seq_len=32_768,
+        frontend="audio_stub",
+        frontend_tokens=1500,
+        source="arXiv:2212.04356 (Whisper)",
+        supports_long_context=False,
+        notes="12 heads / d_model 768 do not divide the 16-way model axis: "
+              "attention replicated, MLP sharded (DESIGN.md §7). Model card "
+              "caps decoder at 448 positions; decode_32k runs with an "
+              "extended learned-position table (deviation noted). long_500k "
+              "inapplicable for a 30s-audio decoder -> skipped. Vocab padded "
+              "51865->51968.",
+    )

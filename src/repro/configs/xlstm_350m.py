@@ -1,0 +1,38 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks.
+
+[arXiv:2405.04517] 24L, d_model=1024, 4 heads, no FFN (blocks carry their
+own projections), vocab=50304. Pattern 3:1 mLSTM:sLSTM. Attention-free;
+recurrent state -> long_500k runs.
+"""
+from repro.config import LayerSpec, ModelConfig, SSMConfig, register_arch
+
+_UNIT = (
+    LayerSpec("mlstm", "none"),
+    LayerSpec("mlstm", "none"),
+    LayerSpec("mlstm", "none"),
+    LayerSpec("slstm", "none"),
+)
+
+
+@register_arch("xlstm-350m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        arch_type="ssm",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        pattern=_UNIT,
+        ssm=SSMConfig(mlstm_heads=4, slstm_heads=4, proj_factor=2.0,
+                      chunk_size=256, conv_width=4),
+        pos_embed="none",
+        max_seq_len=32_768,
+        source="arXiv:2405.04517 (xLSTM)",
+        supports_long_context=True,
+        notes="attention-free: the paper's attention-ID feature is undefined "
+              "(DESIGN.md §6); no MoE -> technique inapplicable, arch still "
+              "fully deployed.",
+    )

@@ -1,0 +1,38 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + globally shared attention block.
+
+[arXiv:2411.15242] 81L, d_model=3584, 32 heads (kv=32), d_ff=14336,
+ssm_state=64. Pattern: two Mamba2 layers then one shared-attention layer
+(the attention weights are a single globally shared block, zamba-style).
+Hybrid recurrence -> long_500k runs.
+"""
+from repro.config import LayerSpec, ModelConfig, SSMConfig, register_arch
+
+_UNIT = (
+    LayerSpec("mamba2", "none"),
+    LayerSpec("mamba2", "none"),
+    LayerSpec("shared_attn", "dense"),
+)
+
+
+@register_arch("zamba2-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        arch_type="hybrid",
+        num_layers=81,
+        d_model=3584,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=14336,
+        vocab_size=32000,
+        pattern=_UNIT,
+        ssm=SSMConfig(state_size=64, head_dim=64, expand=2, conv_width=4,
+                      chunk_size=256),
+        max_seq_len=32_768,
+        source="arXiv:2411.15242 (Zamba2)",
+        supports_long_context=True,
+        notes="shared attention realized as ONE parameter block reused at "
+              "every shared_attn position (Zamba's core trick); the per-"
+              "position LoRA adapters of the real model are omitted "
+              "(deviation noted in DESIGN.md).",
+    )

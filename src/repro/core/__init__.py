@@ -1,0 +1,15 @@
+"""The paper's contribution: serverless MoE deployment optimization.
+
+Pipeline: profile routing -> Bayesian expert-selection prediction (Eq. 1-2)
+-> comm-design time models (Eq. 3-11) -> per-method deployment solver + ODS
+(Alg. 1) -> BO with multi-dimensional epsilon-greedy search (Alg. 2), with
+the serverless simulator standing in for AWS Lambda.
+"""
+from repro.core.costmodel import (CPUClusterSpec, ModelProfile,  # noqa: F401
+                                  PlatformSpec)
+from repro.core.table import KVTable  # noqa: F401
+from repro.core.predictor import ExpertPredictor  # noqa: F401
+from repro.core.deployment import (DeploymentPolicy, ods,  # noqa: F401
+                                   solve_fixed_method)
+from repro.core.simulator import ServerlessSimulator  # noqa: F401
+from repro.core.bo import BOOptimizer  # noqa: F401

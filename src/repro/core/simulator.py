@@ -1,0 +1,144 @@
+"""Serverless execution simulator — the ground truth standing in for AWS
+Lambda (DESIGN.md §3).
+
+Given a deployment policy (planned from PREDICTED expert demand) and the
+REAL routing counts observed when the JAX MoE model processes a batch, the
+simulator accounts:
+
+* billed GB-seconds per expert function (Eq. 4 evaluated at real counts,
+  including memory-overrun penalties: an overrun forces a re-invocation at
+  the real working set, billed at the deploy-time memory but with extra
+  round-trips — the failure feedback consumed by Alg. 2 case (i));
+* payload violations under direct transfer (Alg. 2 case (ii));
+* per-layer MoE-E2E latency and end-to-end throughput.
+
+Determinism: jitter is seeded; with ``jitter=0`` results are exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import comm
+from repro.core.costmodel import MB, CPUClusterSpec, ModelProfile, PlatformSpec
+from repro.core.deployment import DeploymentPolicy
+
+
+@dataclass
+class SimResult:
+    billed_cost: float                 # total $ for all MoE layers
+    latency_s: float                   # end-to-end inference time
+    throughput_tps: float              # tokens / second
+    layer_cost: np.ndarray             # (L,)
+    layer_latency: np.ndarray          # (L,)
+    mem_overrun: np.ndarray            # (L, E) bool
+    payload_violation: np.ndarray      # (L, E) bool
+    real_demand: np.ndarray            # (L, E)
+    min_mem_required_mb: np.ndarray    # (L, E) M^real
+
+
+class ServerlessSimulator:
+    def __init__(self, prof: ModelProfile, spec: PlatformSpec, *,
+                 jitter: float = 0.0, seed: int = 0):
+        self.prof = prof
+        self.spec = spec
+        self.jitter = jitter
+        self.rng = np.random.default_rng(seed)
+
+    def run(self, policy: DeploymentPolicy, real_demand: np.ndarray,
+            num_tokens: int) -> SimResult:
+        prof, spec = self.prof, self.spec
+        real_demand = np.asarray(real_demand, float)
+        L, E = real_demand.shape
+        layer_cost = np.zeros(L)
+        layer_lat = np.zeros(L)
+        overrun = np.zeros((L, E), bool)
+        payload_bad = np.zeros((L, E), bool)
+        min_mem = np.zeros((L, E))
+
+        for e in range(L):
+            a = int(policy.method[e])
+            g = policy.replicas[e].astype(float)
+            mem = policy.mem_mb[e]
+            r_real = real_demand[e] / np.maximum(g, 1)
+            min_mem[e] = comm.memory_required_mb(r_real, prof)
+            overrun[e] = (min_mem[e] > mem) & (real_demand[e] > 0)
+            if a == 3:
+                payload_bad[e] = (r_real * prof.token_in_bytes
+                                  > spec.payload_bytes)
+            eff_a = a
+            if payload_bad[e].any():
+                # the platform rejects oversized payloads; execution falls
+                # back to storage relay, paying both attempts' head time
+                eff_a = 2
+            times = comm.layer_times(eff_a, r_real, g, mem, policy.beta,
+                                     prof, spec)
+            t_total = times.t_total.copy()
+            t_lat = times.t_latency
+            if overrun[e].any():
+                # overrun functions crash + retry with spilled buffers:
+                # extra head time and 2x storage traffic on retried experts
+                retry = overrun[e]
+                penalty = (comm.head_time(prof, spec)
+                           + 2 * spec.t_storage_access_s
+                           + r_real * (prof.token_in_bytes
+                                       + prof.token_out_bytes)
+                           / (spec.bw_storage_mb_s * MB))
+                t_total = t_total + np.where(retry, g * penalty, 0.0)
+                t_lat += float(np.max(np.where(retry, penalty, 0.0)))
+            if payload_bad[e].any():
+                t_lat += spec.t_warm_start_s       # rejected attempt
+            if self.jitter > 0:
+                t_total = t_total * (1 + self.jitter
+                                     * self.rng.standard_normal(E))
+                t_total = np.maximum(t_total, 0.0)
+            layer_cost[e] = comm.layer_billed_cost(
+                comm.LayerTimes(times.t_rep, t_total, t_lat, times.feasible),
+                mem, spec)
+            layer_lat[e] = t_lat
+
+        total_lat = (prof.t_head_s + prof.t_tail_s
+                     + layer_lat.sum() + L * prof.t_nonmoe_s)
+        return SimResult(
+            billed_cost=float(layer_cost.sum()),
+            latency_s=float(total_lat),
+            throughput_tps=num_tokens / max(total_lat, 1e-9),
+            layer_cost=layer_cost,
+            layer_latency=layer_lat,
+            mem_overrun=overrun,
+            payload_violation=payload_bad,
+            real_demand=real_demand,
+            min_mem_required_mb=min_mem,
+        )
+
+
+def cpu_cluster_result(prof: ModelProfile, cluster: CPUClusterSpec,
+                       real_demand: np.ndarray, num_tokens: int, *,
+                       better_transformer: bool = False) -> SimResult:
+    """Paper baselines (5)/(6): the whole MoE model on a CPU cluster.
+
+    All experts of a layer execute concurrently across cores; the cluster
+    bills wall-clock at its hourly rate regardless of utilization.
+    """
+    real_demand = np.asarray(real_demand, float)
+    L, E = real_demand.shape
+    speed = cluster.speedup_vs_function
+    if better_transformer:
+        speed *= cluster.better_transformer_speedup
+    per_layer = real_demand.max(axis=1) * prof.u_ref_s / speed \
+        + prof.t_nonmoe_s
+    total = float(per_layer.sum()) + prof.t_head_s + prof.t_tail_s
+    cost = cluster.billed_cost(total)
+    lc = cluster.billed_cost(per_layer.sum()) * per_layer / \
+        max(per_layer.sum(), 1e-9)
+    return SimResult(
+        billed_cost=cost, latency_s=total,
+        throughput_tps=num_tokens / max(total, 1e-9),
+        layer_cost=lc, layer_latency=per_layer,
+        mem_overrun=np.zeros((L, E), bool),
+        payload_violation=np.zeros((L, E), bool),
+        real_demand=real_demand,
+        min_mem_required_mb=np.zeros((L, E)),
+    )

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SyntheticCorpus, zipf_token_stream,  # noqa: F401
+                                  make_batch)

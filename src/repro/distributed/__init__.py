@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (batch_spec, cache_shardings,  # noqa: F401
+                                        param_shardings)

@@ -1,0 +1,29 @@
+"""Public jit'd wrapper for the GQA flash-decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            valid_len, *, block_t: int = 512,
+                            interpret: bool = True) -> jnp.ndarray:
+    """q: (B, N, G, D); k/v: (B, T, N, D); valid_len scalar or (B,)."""
+    B, N, G, D = q.shape
+    T = k.shape[1]
+    valid = jnp.asarray(valid_len, jnp.int32)
+    if valid.ndim == 0:
+        valid = jnp.full((B,), valid, jnp.int32)
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        cfg = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, cfg)
+        v = jnp.pad(v, cfg)
+    return decode_attention_kernel(q, k, v, valid, block_t=bt,
+                                   interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for GQA flash-decode over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid_len) -> jnp.ndarray:
+    """q: (B, N, G, D); k, v: (B, T, N, D); valid_len: scalar or (B,).
+
+    One-token decode: softmax over the first ``valid_len`` cache slots
+    (keys are already rope'd at their true positions, so masking is pure
+    slot validity — same convention as ``repro.models.attention``).
+    """
+    B, N, G, D = q.shape
+    T = k.shape[1]
+    scale = D ** -0.5
+    scores = jnp.einsum("bngd,btnd->bngt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.asarray(valid_len)
+    if valid.ndim == 0:
+        valid = jnp.full((B,), valid)
+    mask = jnp.arange(T)[None, None, None, :] < valid[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.expert_ffn.ops import expert_ffn_pallas  # noqa: F401

@@ -1,0 +1,49 @@
+"""Public jit'd wrapper for the expert FFN kernel.
+
+On this CPU container the kernel body executes under ``interpret=True``;
+on a real TPU pass ``interpret=False`` (the BlockSpecs are TPU-shaped).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.expert_ffn.kernel import expert_ffn_kernel
+
+
+@partial(jax.jit, static_argnames=("activation", "block_c", "block_f",
+                                   "interpret"))
+def expert_ffn_pallas(buf: jnp.ndarray, w_gate: jnp.ndarray,
+                      w_up: Optional[jnp.ndarray], w_down: jnp.ndarray, *,
+                      activation: str = "swiglu", block_c: int = 128,
+                      block_f: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    # pad capacity / ffn dims up to the block multiples
+    E, C, D = buf.shape
+    F = w_gate.shape[-1]
+    bc, bf = min(block_c, max(C, 8)), min(block_f, max(F, 8))
+    pc, pf = (-C) % bc, (-F) % bf
+    if pc:
+        buf = jnp.pad(buf, ((0, 0), (0, pc), (0, 0)))
+    if pf:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, pf)))
+        if w_up is not None:
+            w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, pf)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, pf), (0, 0)))
+    out = expert_ffn_kernel(buf, w_gate, w_up, w_down,
+                            activation=activation, block_c=bc, block_f=bf,
+                            interpret=interpret)
+    return out[:, :C] if pc else out
+
+
+def moe_expert_ffn_adapter(params, buf, activation, *, interpret=True):
+    """Drop-in for ``repro.models.moe.expert_ffn`` (same signature)."""
+    if activation == "swiglu":
+        return expert_ffn_pallas(buf, params["w_gate"], params["w_up"],
+                                 params["w_down"], activation="swiglu",
+                                 interpret=interpret)
+    return expert_ffn_pallas(buf, params["w_in"], None, params["w_out"],
+                             activation="gelu", interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the blocked grouped expert FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(buf: jnp.ndarray, w_gate: jnp.ndarray,
+                   w_up: jnp.ndarray | None, w_down: jnp.ndarray,
+                   activation: str = "swiglu") -> jnp.ndarray:
+    """buf: (E, C, D); w_gate/w_up: (E, D, F); w_down: (E, F, D)."""
+    x = buf.astype(jnp.float32)
+    if activation == "swiglu":
+        assert w_up is not None
+        g = jnp.einsum("ecd,edf->ecf", x, w_gate.astype(jnp.float32))
+        u = jnp.einsum("ecd,edf->ecf", x, w_up.astype(jnp.float32))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x,
+                                   w_gate.astype(jnp.float32)))
+    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(jnp.float32))
+    return out.astype(buf.dtype)

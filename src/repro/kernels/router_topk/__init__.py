@@ -1,0 +1,1 @@
+from repro.kernels.router_topk.ops import router_topk_pallas  # noqa: F401

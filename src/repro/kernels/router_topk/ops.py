@@ -1,0 +1,28 @@
+"""Public jit'd wrapper for the fused router top-k kernel."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.router_topk.kernel import router_topk_kernel
+
+
+@partial(jax.jit, static_argnames=("k", "valid_experts", "block_n",
+                                   "interpret"))
+def router_topk_pallas(x: jnp.ndarray, router_w: jnp.ndarray, *, k: int,
+                       valid_experts: int | None = None, block_n: int = 256,
+                       interpret: bool = True
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    N, D = x.shape
+    E = router_w.shape[-1]
+    ve = valid_experts if valid_experts is not None else E
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    vals, idx = router_topk_kernel(x, router_w, k=k, valid_experts=ve,
+                                   block_n=bn, interpret=interpret)
+    return (vals[:N], idx[:N]) if pad else (vals, idx)

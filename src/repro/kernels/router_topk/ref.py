@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused router softmax + top-k."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def router_topk_ref(x: jnp.ndarray, router_w: jnp.ndarray, k: int,
+                    valid_experts: int | None = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (N, D); router_w: (D, E) -> (weights (N,k) f32, idx (N,k) i32).
+
+    Weights are softmax probs of the selected experts, re-normalized to
+    sum to one (the qwen-MoE convention used by ``repro.models.moe.route``).
+    """
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    E = logits.shape[-1]
+    if valid_experts is not None and valid_experts < E:
+        col = jnp.arange(E)
+        logits = jnp.where(col < valid_experts, logits, -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return vals, idx.astype(jnp.int32)

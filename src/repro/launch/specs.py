@@ -1,0 +1,86 @@
+"""Input specifications for every (architecture x input shape) pair.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for the lowered step function:
+
+* train / prefill shapes -> {tokens, labels [, frontend | enc_tokens]}
+* decode shapes          -> {tokens (B,1), cache, pos}
+
+``applicable()`` encodes the DESIGN.md §8 skip matrix (long_500k only for
+sub-quadratic archs; whisper long_500k inapplicable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, SHAPES, get_arch
+from repro.distributed.sharding import batch_spec, cache_shardings
+from repro.models import Model
+from repro.models.frontends import frontend_token_count
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch (or 30s-audio decoder): "
+                       "no sub-quadratic path; skipped per DESIGN.md §8")
+    return True, ""
+
+
+def arch_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Clamp per-shape knobs (e.g. learned-position tables) to the shape."""
+    need = shape.seq_len + frontend_token_count(cfg) + 1 \
+        if cfg.frontend == "vision_stub" else shape.seq_len + 1
+    if cfg.pos_embed == "learned" and cfg.max_seq_len < need:
+        cfg = dataclasses.replace(cfg, max_seq_len=need)
+    return cfg
+
+
+def sds(shape, dtype, mesh: Optional[Mesh] = None, spec: Optional[P] = None):
+    sh = NamedSharding(mesh, spec) if mesh is not None and spec is not None \
+        else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for the step function of ``shape.kind``."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = batch_spec(mesh, B)
+    tok_spec = P(bspec, None)
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {
+            "tokens": sds((B, S), jnp.int32, mesh, tok_spec),
+            "labels": sds((B, S), jnp.int32, mesh, tok_spec),
+        }
+        if cfg.frontend == "vision_stub":
+            batch["frontend"] = sds((B, cfg.frontend_tokens, cfg.d_model),
+                                    dtype, mesh, P(bspec, None, None))
+        elif cfg.frontend == "audio_stub":
+            assert cfg.encoder is not None
+            batch["frontend"] = sds((B, cfg.encoder.source_len, cfg.d_model),
+                                    dtype, mesh, P(bspec, None, None))
+        elif cfg.is_encoder_decoder:
+            batch["enc_tokens"] = sds((B, min(S, 512)), jnp.int32, mesh,
+                                      tok_spec)
+        return batch
+
+    # decode: one new token against a seq_len cache
+    model = Model(cfg, expert_pad_multiple=mesh.shape["model"])
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(B, S, dtype=dtype))
+    cache_sh = cache_shardings(cfg, cache_shape, mesh, B)
+    cache = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shape, cache_sh)
+    return {
+        "tokens": sds((B, 1), jnp.int32, mesh, tok_spec),
+        "cache": cache,
+        "pos": sds((), jnp.int32),
+    }

@@ -1,0 +1,81 @@
+"""Step functions lowered by the dry-run / launchers.
+
+* ``train_step``  : fwd + bwd + AdamW update (donated params/opt state)
+* ``prefill_step``: full-sequence forward producing logits + decode cache
+* ``serve_step``  : ONE new token against a seq_len KV/recurrent cache
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import Model
+from repro.optim import AdamWState, adamw_init, adamw_update
+
+
+def make_model(cfg: ModelConfig, model_axis: int = 1) -> Model:
+    return Model(cfg, expert_pad_multiple=model_axis)
+
+
+def make_train_step(model: Model, lr: float = 3e-4, microbatch: int = 1):
+    """fwd+bwd+AdamW. ``microbatch > 1`` enables gradient accumulation:
+    the global batch is split into `microbatch` sequential chunks scanned
+    with a checkpointed body, cutting peak activation memory ~linearly
+    (EXPERIMENTS.md §Perf, granite-34b train_4k iteration)."""
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Any]):
+        if microbatch <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+        else:
+            def split(a):
+                return a.reshape((microbatch, a.shape[0] // microbatch)
+                                 + a.shape[1:])
+
+            chunks = {k: split(v) for k, v in batch.items()}
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, mb)
+                g = jax.tree.map(lambda x, y: x + y, acc[1], g)
+                return (acc[0] + l, g), m
+
+            zero_g = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), metrics = jax.lax.scan(
+                body, (jnp.float32(0), zero_g), chunks)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = jax.tree.map(lambda a: a.mean(), metrics)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    cfg = model.cfg
+
+    def prefill_step(params, batch: Dict[str, Any]):
+        logits, cache = model.prefill(
+            params, batch["tokens"],
+            frontend=batch.get("frontend"),
+            enc_tokens=batch.get("enc_tokens"))
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, batch: Dict[str, Any]):
+        logits, cache = model.decode_step(params, batch["tokens"],
+                                          batch["cache"], batch["pos"])
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, cache
+    return serve_step
+
+
+def init_opt_shapes(params_shape):
+    """eval_shape twin of adamw_init."""
+    return jax.eval_shape(adamw_init, params_shape)

@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo: functional params pytrees, no framework dependency."""
+from repro.models.transformer import Model  # noqa: F401

@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (the one allowed carve-out, DESIGN.md §5).
+
+The real systems run a mel-spectrogram + conv feature extractor (whisper)
+or a SigLIP/CLIP ViT + projector (llava). Here `input_specs()` supplies
+precomputed frame/patch embeddings of the right shape; these helpers
+generate deterministic stand-ins for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def stub_frontend_embeddings(cfg: ModelConfig, batch: int,
+                             seed: int = 0, dtype=jnp.float32) -> jnp.ndarray:
+    """(batch, frontend_tokens, d_model) deterministic pseudo-embeddings."""
+    if cfg.frontend == "none":
+        raise ValueError(f"{cfg.name} has no frontend")
+    n = cfg.frontend_tokens
+    if cfg.frontend == "audio_stub" and cfg.encoder is not None:
+        n = cfg.encoder.source_len
+    key = jax.random.PRNGKey(seed)
+    return (0.02 * jax.random.normal(key, (batch, n, cfg.d_model))).astype(dtype)
+
+
+def frontend_token_count(cfg: ModelConfig) -> int:
+    if cfg.frontend == "audio_stub" and cfg.encoder is not None:
+        return cfg.encoder.source_len
+    return cfg.frontend_tokens

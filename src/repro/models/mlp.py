@@ -1,0 +1,30 @@
+"""Dense feed-forward blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int,
+             activation: str) -> Params:
+    if activation == "swiglu":
+        k1, k2, k3 = split_keys(key, 3)
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff)),
+            "w_up": dense_init(k2, (d_model, d_ff)),
+            "w_down": dense_init(k3, (d_ff, d_model)),
+        }
+    k1, k2 = split_keys(key, 2)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff)),
+        "w_out": dense_init(k2, (d_ff, d_model)),
+    }
+
+
+def mlp_forward(params: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_in"]) @ params["w_out"]

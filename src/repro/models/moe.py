@@ -1,0 +1,229 @@
+"""Mixture-of-Experts layer: top-k router + capacity-buffer dispatch.
+
+The dispatch is sort-based (GShard-style capacity buffers, no dense
+(N, E, C) one-hot einsum): token/expert pairs are sorted by expert,
+assigned a position inside their expert's fixed-capacity buffer, scattered
+into (E, C, d) buffers, processed by a batched expert FFN, and combined
+back with the router weights. Overflowing tokens are dropped (capacity
+factor controls the drop rate), exactly the mechanism the paper's
+deployment policy sizes memory for.
+
+The same dispatch plan feeds three executors:
+* local dense        -- this module (single device / data parallel);
+* expert parallel    -- ``repro.distributed.moe_parallel`` (all_to_all);
+* Pallas kernel      -- ``repro.kernels.expert_ffn`` consumes the buffers.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig, ModelConfig
+from repro.models.common import Params, dense_init, split_keys
+from repro.models.mlp import init_mlp, mlp_forward
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_moe(key: jax.Array, cfg: ModelConfig, *,
+             num_experts: Optional[int] = None) -> Params:
+    m = cfg.moe
+    assert m is not None
+    E = num_experts or m.num_experts
+    d, ff = cfg.d_model, m.d_expert_ff
+    ks = split_keys(key, 5)
+    p: Params = {"router": dense_init(ks[0], (d, E))}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = dense_init(ks[1], (E, d, ff))
+        p["w_up"] = dense_init(ks[2], (E, d, ff))
+        p["w_down"] = dense_init(ks[3], (E, ff, d))
+    else:
+        p["w_in"] = dense_init(ks[1], (E, d, ff))
+        p["w_out"] = dense_init(ks[2], (E, ff, d))
+    if m.num_shared_experts > 0:
+        p["shared"] = init_mlp(ks[4], d, m.num_shared_experts * m.shared_ff,
+                               cfg.activation)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+class RouterOut(NamedTuple):
+    topk_idx: jnp.ndarray      # (N, k) int32
+    topk_weight: jnp.ndarray   # (N, k) f32, normalized
+    probs: jnp.ndarray         # (N, E) f32
+    lb_loss: jnp.ndarray       # scalar
+    z_loss: jnp.ndarray        # scalar
+
+
+def route(router_w: jnp.ndarray, x_flat: jnp.ndarray,
+          m: MoEConfig, valid_experts: Optional[int] = None) -> RouterOut:
+    logits = (x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    E_total = logits.shape[-1]
+    if valid_experts is not None and valid_experts < E_total:
+        # padding experts (sharding alignment) never receive tokens
+        col = jnp.arange(E_total)
+        logits = jnp.where(col < valid_experts, logits, -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, m.top_k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    # GShard/Switch load-balance loss + router z-loss
+    E = probs.shape[-1]
+    ohot = jax.nn.one_hot(topk_idx[:, 0], E)           # primary choice
+    frac_tokens = ohot.mean(axis=0)
+    frac_probs = probs.mean(axis=0)
+    lb = E * jnp.sum(frac_tokens * frac_probs)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return RouterOut(topk_idx.astype(jnp.int32), topk_w, probs, lb, z)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch plan
+# ---------------------------------------------------------------------------
+
+class DispatchPlan(NamedTuple):
+    """Scatter/gather indices mapping (token, k)-slots <-> capacity buffers."""
+
+    buffer_index: jnp.ndarray   # (N*k,) int32 flat index into (E*C); E*C if dropped
+    token_index: jnp.ndarray    # (N*k,) int32 source token of each sorted slot
+    slot_of_pair: jnp.ndarray   # (N, k) int32 flat buffer index per routing pair
+    kept: jnp.ndarray           # (N, k) bool, False if dropped by capacity
+    expert_counts: jnp.ndarray  # (E,) int32 pre-drop routed counts
+    capacity: int
+
+
+def capacity_for(n_tokens: int, m: MoEConfig, num_experts: int,
+                 multiple: int = 8) -> int:
+    c = int(n_tokens * m.top_k * m.capacity_factor / num_experts) + 1
+    return ((c + multiple - 1) // multiple) * multiple
+
+
+def build_dispatch(topk_idx: jnp.ndarray, num_experts: int,
+                   capacity: int) -> DispatchPlan:
+    N, k = topk_idx.shape
+    E, C = num_experts, capacity
+    flat_e = topk_idx.reshape(N * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(N * k) - offsets[sorted_e]
+    kept_sorted = pos_in_e < C
+    buffer_index = jnp.where(kept_sorted, sorted_e * C + pos_in_e, E * C)
+    token_index = order // k
+    # invert the sort so each (n, k) pair knows its buffer slot
+    slot_of_flat = jnp.zeros((N * k,), jnp.int32).at[order].set(
+        buffer_index.astype(jnp.int32))
+    kept_of_flat = jnp.zeros((N * k,), bool).at[order].set(kept_sorted)
+    return DispatchPlan(
+        buffer_index=buffer_index.astype(jnp.int32),
+        token_index=token_index.astype(jnp.int32),
+        slot_of_pair=slot_of_flat.reshape(N, k),
+        kept=kept_of_flat.reshape(N, k),
+        expert_counts=counts.astype(jnp.int32),
+        capacity=C,
+    )
+
+
+def dispatch_tokens(x_flat: jnp.ndarray, plan: DispatchPlan,
+                    num_experts: int) -> jnp.ndarray:
+    """Scatter tokens into (E, C, d) capacity buffers (dropped -> nowhere)."""
+    E, C, d = num_experts, plan.capacity, x_flat.shape[-1]
+    buf = jnp.zeros((E * C, d), x_flat.dtype)
+    buf = buf.at[plan.buffer_index].set(x_flat[plan.token_index],
+                                        mode="drop")
+    return buf.reshape(E, C, d)
+
+
+def combine_tokens(buf_out: jnp.ndarray, plan: DispatchPlan,
+                   topk_weight: jnp.ndarray) -> jnp.ndarray:
+    """Gather expert outputs back to (N, d), weighted by router probs."""
+    E, C, d = buf_out.shape
+    flat = buf_out.reshape(E * C, d)
+    gathered = flat.at[plan.slot_of_pair].get(mode="fill", fill_value=0.0)
+    w = jnp.where(plan.kept, topk_weight, 0.0)
+    return jnp.einsum("nkd,nk->nd", gathered, w.astype(gathered.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN on capacity buffers
+# ---------------------------------------------------------------------------
+
+def expert_ffn(params: Params, buf: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """buf: (E, C, d) -> (E, C, d); batched over experts."""
+    if activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, params["w_in"]))
+    return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Full layer
+# ---------------------------------------------------------------------------
+
+def moe_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                *, capture: bool = False,
+                expert_ffn_fn=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Local (data-parallel) MoE layer. x: (B, S, d)."""
+    m = cfg.moe
+    assert m is not None
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    r = route(params["router"], x_flat, m, valid_experts=m.num_experts)
+    E = params["router"].shape[-1]
+    C = capacity_for(B * S, m, E)
+    plan = build_dispatch(r.topk_idx, E, C)
+    buf = dispatch_tokens(x_flat, plan, E)
+    fn = expert_ffn_fn or expert_ffn
+    buf_out = fn(params, buf, cfg.activation)
+    y = combine_tokens(buf_out, plan, r.topk_weight)
+    if m.num_shared_experts > 0:
+        y = y + mlp_forward(params["shared"], x_flat, cfg.activation)
+    aux: Dict[str, jnp.ndarray] = {
+        "lb_loss": r.lb_loss * m.router_aux_coef,
+        "z_loss": r.z_loss * m.router_z_coef,
+        "expert_counts": plan.expert_counts,
+    }
+    if capture:
+        aux["topk_idx"] = r.topk_idx.reshape(B, S, m.top_k)
+        aux["topk_weight"] = r.topk_weight.reshape(B, S, m.top_k)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_forward_oracle(params: Params, cfg: ModelConfig,
+                       x: jnp.ndarray) -> jnp.ndarray:
+    """Reference: every expert computed for every token, then top-k mixed.
+
+    O(N * E * ff) -- only for tests. No capacity dropping, so it matches
+    ``moe_forward`` exactly only when capacity_factor admits all tokens.
+    """
+    m = cfg.moe
+    assert m is not None
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    r = route(params["router"], x_flat, m)
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("nd,edf->enf", x_flat, params["w_gate"])
+        u = jnp.einsum("nd,edf->enf", x_flat, params["w_up"])
+        h = jax.nn.silu(g) * u
+        all_out = jnp.einsum("enf,efd->end", h, params["w_down"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("nd,edf->enf", x_flat, params["w_in"]))
+        all_out = jnp.einsum("enf,efd->end", h, params["w_out"])
+    # all_out: (E, N, d); select top-k
+    sel = jnp.take_along_axis(
+        jnp.moveaxis(all_out, 0, 1), r.topk_idx[..., None], axis=1)  # (N,k,d)
+    y = jnp.einsum("nkd,nk->nd", sel, r.topk_weight.astype(sel.dtype))
+    if m.num_shared_experts > 0:
+        y = y + mlp_forward(params["shared"], x_flat, cfg.activation)
+    return y.reshape(B, S, d).astype(x.dtype)

@@ -1,0 +1,449 @@
+"""Recurrent sequence mixers: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+All three expose the same triple of entry points:
+
+* ``*_forward``      -- full-sequence (train / prefill), chunked so the
+                        working set is O(chunk^2) not O(S^2); returns the
+                        final recurrent state as the decode cache.
+* ``*_decode_step``  -- one token against the recurrent state.
+* ``init_*_cache``   -- zero state of the right shape.
+
+Mamba2 follows the SSD chunked algorithm (intra-chunk quadratic +
+inter-chunk state recurrence). The mLSTM is the stabilized chunkwise form
+(carried (C, n, m) state, log-space gate accumulation). The sLSTM is
+strictly sequential (lax.scan over time) as in the xLSTM paper.
+
+Deviations from the reference implementations (noted in DESIGN.md): the
+mLSTM block omits the depthwise conv front (q, k, v project directly), and
+Mamba2 uses a single B/C group.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models.common import (Params, apply_norm, dense_init, init_norm,
+                                 split_keys)
+
+
+def _pad_to_multiple(x: jnp.ndarray, mult: int, axis: int):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def _mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    return d_in, heads, s.head_dim, s.state_size
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Projections stored UNFUSED (w_z/w_x/w_B/w_C/w_dt and per-stream conv
+    weights) so tensor-parallel sharding of the d_inner dimension never
+    crosses a semantic boundary (DESIGN.md §7)."""
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    d_in, H, P, N = _mamba_dims(cfg)
+    ks = split_keys(key, 9)
+    dt = jnp.exp(jax.random.uniform(ks[0], (H,),
+                                    minval=jnp.log(1e-3), maxval=jnp.log(0.1)))
+    return {
+        "w_z": dense_init(ks[1], (d, d_in)),
+        "w_x": dense_init(ks[2], (d, d_in)),
+        "w_B": dense_init(ks[3], (d, N)),
+        "w_C": dense_init(ks[4], (d, N)),
+        "w_dt": dense_init(ks[5], (d, H)),
+        "conv_w_x": 0.1 * jax.random.normal(ks[6], (s.conv_width, d_in)),
+        "conv_b_x": jnp.zeros((d_in,)),
+        "conv_w_B": 0.1 * jax.random.normal(ks[7], (s.conv_width, N)),
+        "conv_b_B": jnp.zeros((N,)),
+        "conv_w_C": 0.1 * jax.random.normal(ks[8], (s.conv_width, N)),
+        "conv_b_C": jnp.zeros((N,)),
+        "A_log": jnp.log(jax.random.uniform(ks[0], (H,), minval=1.0,
+                                            maxval=16.0)),
+        "D": jnp.ones((H,)),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),   # inverse softplus
+        "gate_norm": init_norm("rmsnorm", d_in),
+        "out_proj": dense_init(ks[1], (d_in, d)),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. u: (B,S,C); w: (W,C). Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        upad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        upad = jnp.concatenate([state, u], axis=1)
+    y = sum(upad[:, i:i + u.shape[1]] * w[i] for i in range(W)) + b
+    new_state = upad[:, upad.shape[1] - (W - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative); Bm, Cm: (B,S,N).
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    x, S0 = _pad_to_multiple(x, chunk, 1)
+    dt, _ = _pad_to_multiple(dt, chunk, 1)
+    Bm, _ = _pad_to_multiple(Bm, chunk, 1)
+    Cm, _ = _pad_to_multiple(Cm, chunk, 1)
+    nc = x.shape[1] // chunk
+    L = chunk
+    xs = x.reshape(Bsz, nc, L, H, P)
+    dts = dt.reshape(Bsz, nc, L, H)
+    Bs = Bm.reshape(Bsz, nc, L, N)
+    Cs = Cm.reshape(Bsz, nc, L, N)
+    lA = dts * A                                   # (B,nc,L,H) log decay <= 0
+    cum = jnp.cumsum(lA, axis=2)                   # inclusive cumulative decay
+
+    # intra-chunk: y[i] += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    G = jnp.einsum("bcin,bcjn->bcij", Cs, Bs)      # (B,nc,L,L)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    M = M * G[..., None]                           # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", M, dts, xs)
+
+    # per-chunk state contribution: sum_j exp(cum_last - cum_j) dt_j x_j B_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,L,H)
+    chunk_state = jnp.einsum("bclh,bclh,bclhp,bcln->bchpn",
+                             decay_to_end, dts, xs, Bs)
+
+    # inter-chunk recurrence
+    def body(S_prev, inputs):
+        cum_c, C_c, cs_c = inputs                 # (B,L,H), (B,L,N), (B,H,P,N)
+        y_inter = jnp.einsum("bln,bhpn->blhp", C_c, S_prev) * \
+            jnp.exp(cum_c)[..., None]
+        S_next = S_prev * jnp.exp(cum_c[:, -1])[:, :, None, None] + cs_c
+        return S_next, y_inter
+
+    S_init = (init_state if init_state is not None
+              else jnp.zeros((Bsz, H, P, N), x.dtype))
+    cum_t = jnp.moveaxis(cum, 1, 0)
+    C_t = jnp.moveaxis(Cs, 1, 0)
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)
+    S_fin, y_inter = jax.lax.scan(body, S_init, (cum_t, C_t, cs_t))
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    y = y.reshape(Bsz, nc * L, H, P)[:, :S0]
+    return y, S_fin
+
+
+def mamba2_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                   conv_state=None, ssm_state=None):
+    """x: (B,S,d) -> (y, cache). Cache = {conv_x, conv_B, conv_C, state}."""
+    s = cfg.ssm
+    assert s is not None
+    d_in, H, P, N = _mamba_dims(cfg)
+    B_, S, _ = x.shape
+    z = x @ params["w_z"]
+    cs = conv_state or {}
+    xs, cx = _causal_conv(x @ params["w_x"], params["conv_w_x"],
+                          params["conv_b_x"], cs.get("x"))
+    Bm, cb = _causal_conv(x @ params["w_B"], params["conv_w_B"],
+                          params["conv_b_B"], cs.get("B"))
+    Cm, cc = _causal_conv(x @ params["w_C"], params["conv_w_C"],
+                          params["conv_b_C"], cs.get("C"))
+    xs = xs.reshape(B_, S, H, P)
+    dt = jax.nn.softplus(x @ params["w_dt"] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size,
+                           init_state=ssm_state)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(B_, S, d_in)
+    y = apply_norm("rmsnorm", params["gate_norm"], y * jax.nn.silu(z))
+    conv_new = {"x": cx, "B": cb, "C": cc}
+    return y @ params["out_proj"], {"conv": conv_new, "state": state}
+
+
+def mamba2_decode_step(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                       cache: Dict[str, jnp.ndarray]):
+    """x: (B,1,d); cache: conv {x,B,C} (B,W-1,*), state (B,H,P,N)."""
+    s = cfg.ssm
+    assert s is not None
+    d_in, H, P, N = _mamba_dims(cfg)
+    B_ = x.shape[0]
+    z = x @ params["w_z"]
+    cs = cache["conv"]
+    xs, cx = _causal_conv(x @ params["w_x"], params["conv_w_x"],
+                          params["conv_b_x"], cs["x"])
+    Bm, cb = _causal_conv(x @ params["w_B"], params["conv_w_B"],
+                          params["conv_b_B"], cs["B"])
+    Cm, cc = _causal_conv(x @ params["w_C"], params["conv_w_C"],
+                          params["conv_b_C"], cs["C"])
+    conv_new = {"x": cx, "B": cb, "C": cc}
+    xs, Bm, Cm = xs[:, 0], Bm[:, 0], Cm[:, 0]
+    xs = xs.reshape(B_, H, P)
+    dt = jax.nn.softplus((x @ params["w_dt"])[:, 0]
+                         + params["dt_bias"])                    # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                        # (B,H)
+    state = (cache["state"] * dA[:, :, None, None]
+             + dt[:, :, None, None] * xs[..., None] * Bm[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(B_, 1, d_in)
+    y = apply_norm("rmsnorm", params["gate_norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"], {"conv": conv_new, "state": state}
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    assert s is not None
+    d_in, H, P, N = _mamba_dims(cfg)
+    W = s.conv_width - 1
+    return {
+        "conv": {"x": jnp.zeros((batch, W, d_in), dtype),
+                 "B": jnp.zeros((batch, W, N), dtype),
+                 "C": jnp.zeros((batch, W, N), dtype)},
+        "state": jnp.zeros((batch, H, P, N), dtype),
+    }
+
+
+# ===========================================================================
+# mLSTM (stabilized chunkwise)
+# ===========================================================================
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    d_in = int(s.proj_factor * cfg.d_model)
+    H = s.mlstm_heads
+    d_in -= d_in % H
+    return d_in, H, d_in // H
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, H, dh = _mlstm_dims(cfg)
+    ks = split_keys(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_in)),
+        "wq": dense_init(ks[1], (d_in, d_in)),
+        "wk": dense_init(ks[2], (d_in, d_in)),
+        "wv": dense_init(ks[3], (d_in, d_in)),
+        "wi": dense_init(ks[4], (d_in, H)),
+        "bi": jnp.zeros((H,)),
+        "wf": dense_init(ks[5], (d_in, H)),
+        "bf": 3.0 * jnp.ones((H,)),     # bias toward remembering
+        "w_down": dense_init(ks[6], (d_in, d)),
+    }
+
+
+def _mlstm_qkv_gates(params: Params, cfg: ModelConfig, x: jnp.ndarray):
+    d_in, H, dh = _mlstm_dims(cfg)
+    B_, S, _ = x.shape
+    xa, xg = jnp.split(x @ params["w_up"], 2, axis=-1)
+    q = (xa @ params["wq"]).reshape(B_, S, H, dh)
+    k = (xa @ params["wk"]).reshape(B_, S, H, dh) * (dh ** -0.5)
+    v = (xa @ params["wv"]).reshape(B_, S, H, dh)
+    ig = (xa @ params["wi"] + params["bi"]).astype(jnp.float32)   # (B,S,H)
+    fg = jax.nn.log_sigmoid(
+        (xa @ params["wf"] + params["bf"]).astype(jnp.float32))
+    return xa, xg, q, k, v, ig, fg
+
+
+def mlstm_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  cache: Optional[Dict[str, jnp.ndarray]] = None):
+    """Chunkwise-parallel stabilized mLSTM. x: (B,S,d)."""
+    s = cfg.ssm
+    assert s is not None
+    d_in, H, dh = _mlstm_dims(cfg)
+    B_, S, _ = x.shape
+    xa, xg, q, k, v, ig, fg = _mlstm_qkv_gates(params, cfg, x)
+
+    L = min(s.chunk_size, S)
+    q, S0 = _pad_to_multiple(q, L, 1)
+    k, _ = _pad_to_multiple(k, L, 1)
+    v, _ = _pad_to_multiple(v, L, 1)
+    ig, _ = _pad_to_multiple(ig, L, 1)
+    fg, _ = _pad_to_multiple(fg, L, 1)
+    nc = q.shape[1] // L
+    qs = q.reshape(B_, nc, L, H, dh)
+    ks_ = k.reshape(B_, nc, L, H, dh)
+    vs = v.reshape(B_, nc, L, H, dh)
+    igs = ig.reshape(B_, nc, L, H)
+    fgs = fg.reshape(B_, nc, L, H)
+
+    def body(carry, inp):
+        C_s, n_s, m_s = carry                       # (B,H,dh,dh),(B,H,dh),(B,H)
+        qc, kc, vc, ic, fc = inp                    # (B,L,H,*)
+        b = jnp.cumsum(fc, axis=1)                  # (B,L,H) cumulative log-f
+        g = ic - b                                  # adjusted log-i
+        g_run = jax.lax.cummax(g, axis=1)           # running max_j<=i g[j]
+        m_new = b + jnp.maximum(g_run, m_s[:, None])          # (B,L,H)
+        # intra-chunk weights W[i,j] = exp(b_i + g_j - m_i), j <= i
+        logits = (b[:, :, None] + g[:, None, :, :]
+                  - m_new[:, :, None])                        # (B,i,j,H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        W = jnp.where(tri[None, :, :, None], jnp.exp(logits), 0.0)
+        qdotk = jnp.einsum("bihd,bjhd->bijh", qs_f(qc), qs_f(kc))
+        scores = qdotk * W
+        inter_w = jnp.exp(b + m_s[:, None] - m_new)           # (B,L,H)
+        y_num = (jnp.einsum("bijh,bjhd->bihd", scores, qs_f(vc))
+                 + inter_w[..., None]
+                 * jnp.einsum("bihd,bhde->bihe", qs_f(qc), C_s))
+        den = (scores.sum(axis=2)
+               + inter_w * jnp.einsum("bihd,bhd->bih", qs_f(qc), n_s))
+        h = y_num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # state to end of chunk
+        m_next = b[:, -1] + jnp.maximum(g_run[:, -1], m_s)
+        carry_w = jnp.exp(b[:, -1] + m_s - m_next)            # (B,H)
+        upd_w = jnp.exp(b[:, -1:] + g - m_next[:, None])      # (B,L,H)
+        C_next = (carry_w[..., None, None] * C_s
+                  + jnp.einsum("blh,blhd,blhe->bhde", upd_w, qs_f(kc),
+                               qs_f(vc)))
+        n_next = (carry_w[..., None] * n_s
+                  + jnp.einsum("blh,blhd->bhd", upd_w, qs_f(kc)))
+        return (C_next, n_next, m_next), h
+
+    def qs_f(t):
+        return t.astype(jnp.float32)
+
+    if cache is None:
+        C0 = jnp.zeros((B_, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B_, H, dh), jnp.float32)
+        m0 = jnp.full((B_, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    xs_scan = tuple(jnp.moveaxis(t, 1, 0) for t in (qs, ks_, vs, igs, fgs))
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), xs_scan)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, nc * L, d_in)[:, :S0]
+    y = (h.astype(x.dtype) * jax.nn.silu(xg)) @ params["w_down"]
+    return y, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_decode_step(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                      cache: Dict[str, jnp.ndarray]):
+    d_in, H, dh = _mlstm_dims(cfg)
+    B_ = x.shape[0]
+    xa, xg, q, k, v, ig, fg = _mlstm_qkv_gates(params, cfg, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]          # (B,H,dh)
+    ig, fg = ig[:, 0], fg[:, 0]                  # (B,H)
+    C_s, n_s, m_s = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(fg + m_s, ig)
+    f_w = jnp.exp(fg + m_s - m_new)
+    i_w = jnp.exp(ig - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C_new = f_w[..., None, None] * C_s + i_w[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n_new = f_w[..., None] * n_s + i_w[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B_, 1, d_in).astype(x.dtype)
+    y = (h * jax.nn.silu(xg)) @ params["w_down"]
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, H, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# ===========================================================================
+# sLSTM (strictly sequential, exponential gating)
+# ===========================================================================
+
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    s = cfg.ssm
+    assert s is not None
+    H = s.slstm_heads
+    d = cfg.d_model
+    return H, d // H
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H, dh = _slstm_dims(cfg)
+    ks = split_keys(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d)),        # z, i, f, o pre-acts
+        "r": 0.1 * jax.random.normal(ks[1], (H, dh, 4 * dh)),
+        "b": jnp.zeros((4 * d,)).at[2 * d:3 * d].set(3.0),  # forget bias
+        "w_out": dense_init(ks[2], (d, d)),
+    }
+
+
+def _slstm_step(params: Params, H: int, dh: int, state, pre):
+    """state: (c, n, h, m) each (B,H,dh) / m (B,H); pre: (B, 4*H*dh)."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r"])          # (B,H,4dh)
+    pre = pre.reshape(pre.shape[0], H, 4 * dh) + rec
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    # per-head scalar gates (mean over the head dim as gate pre-activation)
+    ig = it.mean(-1)
+    fg = jax.nn.log_sigmoid(ft.mean(-1))
+    m_new = jnp.maximum(fg + m, ig)
+    i_w = jnp.exp(ig - m_new)[..., None]
+    f_w = jnp.exp(fg + m - m_new)[..., None]
+    c_new = f_w * c + i_w * jnp.tanh(zt)
+    n_new = f_w * n + i_w
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  cache: Optional[Dict[str, jnp.ndarray]] = None):
+    H, dh = _slstm_dims(cfg)
+    B_, S, d = x.shape
+    pre = (x @ params["w_in"] + params["b"]).astype(jnp.float32)
+    if cache is None:
+        state = (jnp.zeros((B_, H, dh), jnp.float32),
+                 jnp.zeros((B_, H, dh), jnp.float32),
+                 jnp.zeros((B_, H, dh), jnp.float32),
+                 jnp.full((B_, H), -1e30, jnp.float32))
+    else:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+
+    def body(st, p):
+        st2 = _slstm_step(params, H, dh, st, p)
+        return st2, st2[2]
+
+    state_f, hs = jax.lax.scan(body, state, jnp.moveaxis(pre, 1, 0))
+    h_seq = jnp.moveaxis(hs, 0, 1).reshape(B_, S, d).astype(x.dtype)
+    y = h_seq @ params["w_out"]
+    c, n, h, m = state_f
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_decode_step(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                      cache: Dict[str, jnp.ndarray]):
+    H, dh = _slstm_dims(cfg)
+    B_, _, d = x.shape
+    pre = (x[:, 0] @ params["w_in"] + params["b"]).astype(jnp.float32)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(params, H, dh, state, pre)
+    y = h.reshape(B_, 1, d).astype(x.dtype) @ params["w_out"]
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, dh = _slstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}

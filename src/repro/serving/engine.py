@@ -1,0 +1,97 @@
+"""Batched serving engine: request queue -> prefill -> batched decode.
+
+A deliberately simple (but real) continuous-batching loop over the Model
+API: fixed decode batch, right-padded prefill, KV caches prepared to the
+engine's max length. Greedy sampling. This is the end-to-end driver behind
+``examples/serve_moe_serverless.py``; the serverless deployment planner
+(repro.core) decides expert placement/memory, while this engine supplies
+the actual token-level execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import Model
+from repro.models.frontends import stub_frontend_embeddings
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_len: int = 256,
+                 batch_size: int = 4):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.queue: Deque[Request] = deque()
+        self._decode = jax.jit(model.decode_step)
+        self._uid = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        self._uid += 1
+        req = Request(self._uid, np.asarray(prompt, np.int32),
+                      max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------ run
+    def _prefill_batch(self, reqs: List[Request]):
+        S = max(len(r.prompt) for r in reqs)
+        B = len(reqs)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt    # left-pad
+        kw: Dict[str, Any] = {}
+        n_front = 0
+        if self.cfg.frontend == "vision_stub":
+            kw["frontend"] = stub_frontend_embeddings(self.cfg, B)
+            n_front = self.cfg.frontend_tokens
+        elif self.cfg.frontend == "audio_stub":
+            kw["frontend"] = stub_frontend_embeddings(self.cfg, B)
+        elif self.cfg.is_encoder_decoder:
+            kw["enc_tokens"] = jnp.asarray(toks)
+        logits, cache = self.model.prefill(self.params, jnp.asarray(toks),
+                                           **kw)
+        cache = self.model.prepare_decode_cache(cache, self.max_len)
+        return logits, cache, S + n_front
+
+    def run(self, *, max_steps: int = 64) -> List[Request]:
+        """Serve everything in the queue; returns completed requests."""
+        finished: List[Request] = []
+        while self.queue:
+            batch = [self.queue.popleft()
+                     for _ in range(min(self.batch_size, len(self.queue)))]
+            logits, cache, pos0 = self._prefill_batch(batch)
+            next_tok = jnp.argmax(logits[:, -1], -1)
+            for step in range(max_steps):
+                for i, r in enumerate(batch):
+                    if not r.done:
+                        r.output.append(int(next_tok[i]))
+                        if len(r.output) >= r.max_new_tokens:
+                            r.done = True
+                if all(r.done for r in batch):
+                    break
+                logits, cache = self._decode(
+                    self.params, next_tok[:, None], cache,
+                    jnp.int32(pos0 + step))
+                next_tok = jnp.argmax(logits[:, -1], -1)
+            finished.extend(batch)
+        return finished

@@ -1,0 +1,39 @@
+"""Shared test helpers. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py forces 512."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch, reduced_config
+from repro.models import Model
+from repro.models.frontends import stub_frontend_embeddings
+
+
+def tiny_model(name, *, capacity_factor=None, **overrides):
+    cfg = reduced_config(get_arch(name), **overrides)
+    if capacity_factor is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=capacity_factor))
+    return cfg, Model(cfg)
+
+
+def make_inputs(cfg, batch=2, seq=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    batch_d = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision_stub":
+        batch_d["frontend"] = stub_frontend_embeddings(cfg, batch)
+    elif cfg.frontend == "audio_stub":
+        batch_d["frontend"] = stub_frontend_embeddings(cfg, batch)
+    elif cfg.is_encoder_decoder:
+        batch_d["enc_tokens"] = toks
+    return batch_d
+
+
+def forward_kwargs(batch_d):
+    return {k: v for k, v in batch_d.items()
+            if k in ("frontend", "enc_tokens")}

@@ -1,0 +1,283 @@
+"""Unit + property tests for the paper's algorithms (Eqs. 1-12, Algs. 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import comm
+from repro.core.bo import BOOptimizer, EvalOutcome, GPSurrogate
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.deployment import (DeploymentPolicy, lambdaml_policy, ods,
+                                   solve_fixed_method)
+from repro.core.predictor import ExpertPredictor
+from repro.core.simulator import ServerlessSimulator
+from repro.core.table import KVTable, pack_key, unpack_key
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+
+# ---------------------------------------------------------------------------
+# key packing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(layer=st.integers(0, 63), f1=st.integers(0, 2 ** 18 - 1),
+       f2=st.integers(0, 2 ** 14 - 1), f3=st.integers(0, 2 ** 18 - 1),
+       e=st.integers(0, 127))
+def test_pack_unpack_roundtrip(layer, f1, f2, f3, e):
+    key = pack_key(layer, f1, f2, f3, e)
+    l2, a, b, c, d = unpack_key(key)
+    assert (int(l2), int(a), int(b), int(c), int(d)) == (layer, f1, f2, f3, e)
+
+
+# ---------------------------------------------------------------------------
+# comm time models (Eqs. 3-11)
+# ---------------------------------------------------------------------------
+
+def test_cpu_slowdown_monotone():
+    mems = SPEC.memory_options_mb
+    slows = [SPEC.cpu_slowdown(m) for m in mems]
+    assert all(a >= b for a, b in zip(slows, slows[1:]))
+    assert slows[-1] == 1.0
+
+
+def test_direct_transfer_payload_infeasible():
+    r = np.array([10_000.0, 1.0])     # 10k tokens * 3KB >> 6MB payload
+    g = np.ones(2)
+    mem = np.full(2, 3072.0)
+    t = comm.layer_times(3, r, g, mem, 1, PROF, SPEC)
+    assert not t.feasible[0] and t.feasible[1]
+
+
+def test_pipelining_helps_at_scale():
+    """For large batches with transfer-comparable compute, pipelined
+    indirect (a=1, good beta) beats non-pipelined indirect (a=2): the
+    upload leg hides under download+compute (paper Fig. 11: pipelining
+    wins as token count grows)."""
+    import dataclasses
+    prof = dataclasses.replace(PROF, u_ref_s=2e-5)
+    r = np.full(4, 4096.0)
+    g = np.ones(4)
+    mem = np.full(4, 3072.0)
+    t1 = comm.layer_times(1, r, g, mem, 1024, prof, SPEC)
+    t2 = comm.layer_times(2, r, g, mem, 1, prof, SPEC)
+    assert t1.t_rep.max() < t2.t_rep.max()
+
+
+def test_pipeline_degree_tradeoff():
+    """Small beta pays per-minibatch storage latency; huge beta loses
+    overlap granularity -- an interior beta should be no worse than both
+    extremes' worst case."""
+    import dataclasses
+    prof = dataclasses.replace(PROF, u_ref_s=2e-5)
+    r = np.full(1, 4096.0)
+    g, mem = np.ones(1), np.full(1, 3072.0)
+    times = {b: comm.layer_times(1, r, g, mem, b, prof, SPEC).t_rep[0]
+             for b in (1, 64, 4096)}
+    assert times[64] <= max(times[1], times[4096])
+
+
+def test_direct_fastest_for_small_batches():
+    r = np.full(4, 32.0)
+    g = np.ones(4)
+    mem = np.full(4, 3072.0)
+    reps = {a: comm.layer_times(a, r, g, mem, 8, PROF, SPEC).t_rep.max()
+            for a in (1, 2, 3)}
+    assert reps[3] == min(reps.values())
+
+
+@settings(max_examples=20, deadline=None)
+@given(tokens=st.integers(1, 4000), g=st.integers(1, 8),
+       mem_i=st.integers(1, 13))
+def test_replica_time_positive_and_monotone_in_tokens(tokens, g, mem_i):
+    mem = float(SPEC.memory_options_mb[mem_i])
+    for a in (1, 2, 3):
+        r1 = np.array([tokens / g], float)
+        r2 = np.array([(tokens + 100) / g], float)
+        t1 = comm.layer_times(a, r1, np.array([float(g)]), np.array([mem]),
+                              8, PROF, SPEC)
+        t2 = comm.layer_times(a, r2, np.array([float(g)]), np.array([mem]),
+                              8, PROF, SPEC)
+        assert 0 < t1.t_rep[0] <= t2.t_rep[0]
+
+
+# ---------------------------------------------------------------------------
+# deployment solver + ODS (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def _demand(L=4, E=8, seed=0, scale=400):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def test_solver_respects_memory_constraint():
+    d = _demand()
+    for a in (1, 2, 3):
+        sol = solve_fixed_method(a, d, PROF, SPEC)
+        r = d / np.maximum(sol.replicas, 1)
+        need = comm.memory_required_mb(r, PROF)
+        ok = need <= sol.mem_mb + 1e-9
+        assert ok[d > 0].all(), f"method {a} violates (12c)"
+
+
+def test_solver_per_expert_optimality():
+    """Brute-force check: no (mem, g) beats the solver's pick for cost."""
+    d = _demand(L=1, E=4)
+    a = 2
+    sol = solve_fixed_method(a, d, PROF, SPEC)
+    for i in range(4):
+        if d[0, i] <= 0:
+            continue
+        best = np.inf
+        for g in range(1, SPEC.max_replicas + 1):
+            for m in SPEC.memory_options_mb:
+                r = d[0, i] / g
+                if comm.memory_required_mb(np.array([r]), PROF)[0] > m:
+                    continue
+                t = comm.layer_times(a, np.array([r]), np.array([float(g)]),
+                                     np.array([float(m)]), 1, PROF, SPEC)
+                best = min(best, t.t_total[0] * (m / 1024)
+                           * SPEC.price_per_gb_s)
+        got = (comm.layer_times(
+            a, np.array([d[0, i] / sol.replicas[0, i]]),
+            np.array([float(sol.replicas[0, i])]),
+            np.array([sol.mem_mb[0, i]]), 1, PROF, SPEC).t_total[0]
+            * (sol.mem_mb[0, i] / 1024) * SPEC.price_per_gb_s)
+        assert got <= best * 1.0001
+
+
+def test_ods_picks_cheapest_when_slo_loose():
+    d = _demand()
+    sols = {a: solve_fixed_method(a, d, PROF, SPEC) for a in (1, 2, 3)}
+    pol = ods(sols, d, PROF, SPEC, t_limit_s=1e9)
+    for e in range(d.shape[0]):
+        costs = [sols[a].layer_cost[e] for a in (1, 2, 3)]
+        assert pol.layer_cost[e] <= min(costs) + 1e-12
+    assert pol.meets_slo
+
+
+def test_ods_tightens_under_slo():
+    d = _demand(scale=3000)
+    sols = {a: solve_fixed_method(a, d, PROF, SPEC) for a in (1, 2, 3)}
+    loose = ods(sols, d, PROF, SPEC, t_limit_s=1e9)
+    tight = ods(sols, d, PROF, SPEC, t_limit_s=loose.total_latency * 0.9)
+    # tighter SLO never decreases cost
+    assert tight.total_cost >= loose.total_cost - 1e-12
+
+
+def test_ods_beats_lambdaml():
+    """The paper's headline: optimized deployment is cheaper than max-memory
+    LambdaML over-provisioning."""
+    d = _demand(scale=2000)
+    sols = {a: solve_fixed_method(a, d, PROF, SPEC) for a in (1, 2, 3)}
+    ours = ods(sols, d, PROF, SPEC, t_limit_s=1e9)
+    base = lambdaml_policy(d, PROF, SPEC)
+    assert ours.total_cost < base.total_cost
+
+
+# ---------------------------------------------------------------------------
+# predictor (Eqs. 1-2)
+# ---------------------------------------------------------------------------
+
+def test_predictor_recovers_deterministic_mapping():
+    t = KVTable(num_layers=2, num_experts=4, vocab_size=64)
+    rng = np.random.default_rng(0)
+    mapping = rng.integers(0, 4, size=(2, 64))
+    toks = rng.integers(0, 64, size=5000)
+    t.observe_tokens(toks)
+    for layer in range(2):
+        for tok in toks[:2000]:
+            t.set_entry(layer, int(tok), int(tok) % 7, int(tok),
+                        int(mapping[layer, tok]),
+                        t.get_entry(layer, int(tok), int(tok) % 7, int(tok),
+                                    int(mapping[layer, tok])) + 1)
+    p = ExpertPredictor(t, top_k=1).fit()
+    for layer in range(2):
+        pred = p.predict(layer, toks[:200], 1)[:, 0]
+        assert (pred == mapping[layer, toks[:200]]).mean() == 1.0
+
+
+def test_posterior_uses_attention_frequency_weighting():
+    """Two experts tie on counts; the one observed in high-frequency
+    attention contexts must win under mode='full'."""
+    t = KVTable(num_layers=1, num_experts=2, vocab_size=16)
+    t.observe_tokens(np.array([3] * 90 + [7] * 10))
+    t.set_entry(0, 5, 0, 3, 0, 10)   # expert 0 seen with frequent f3=3
+    t.set_entry(0, 5, 0, 7, 1, 10)   # expert 1 seen with rare f3=7
+    full = ExpertPredictor(t, mode="full").fit()
+    lina = ExpertPredictor(t, mode="lina").fit()
+    assert full.predict(0, np.array([5]))[0, 0] == 0
+    post = lina.posterior(0, 5)
+    assert abs(post[0] - post[1]) < 1e-9     # lina can't break the tie
+
+
+# ---------------------------------------------------------------------------
+# simulator feedback
+# ---------------------------------------------------------------------------
+
+def test_simulator_flags_memory_overrun_and_bills_more():
+    d = _demand(L=2, E=4, scale=500)
+    sols = {a: solve_fixed_method(a, d, PROF, SPEC) for a in (1, 2, 3)}
+    pol = ods(sols, d, PROF, SPEC, t_limit_s=1e9)
+    sim = ServerlessSimulator(PROF, SPEC)
+    ok = sim.run(pol, d, int(d.sum()))
+    assert not ok.mem_overrun.any()
+    blown = sim.run(pol, d * 50, int(d.sum() * 50))
+    assert blown.mem_overrun.any()
+    assert blown.billed_cost > ok.billed_cost
+
+
+# ---------------------------------------------------------------------------
+# BO (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def _toy_eval_fn(target_key):
+    """Cost is minimized when the table sets target_key to a high value."""
+    def fn(table: KVTable) -> EvalOutcome:
+        v = table.counts.get(target_key, 0.0)
+        cost = 1.0 / (1.0 + v)
+        return EvalOutcome(cost=cost, rho_case=3,
+                           problem_token_ids=np.zeros(0, np.int64),
+                           demand_pred=np.zeros((1, 2)),
+                           demand_real=np.zeros((1, 2)))
+    return fn
+
+
+def test_gp_surrogate_interpolates():
+    X = np.array([[0.0], [1.0], [2.0]])
+    y = np.array([1.0, 0.0, 1.0])
+    gp = GPSurrogate(noise=1e-6).fit(X, y)
+    pred = gp.predict(X)
+    np.testing.assert_allclose(pred, y, atol=1e-2)
+
+
+@pytest.mark.parametrize("acq", ["multi_eps", "random", "single_eps", "tpe"])
+def test_bo_improves_cost(acq):
+    t = KVTable(num_layers=2, num_experts=4, vocab_size=32)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 32, 500)
+    t.observe_tokens(toks)
+    for tok in toks:
+        t.set_entry(0, int(tok), 0, int(tok), int(tok) % 4,
+                    t.get_entry(0, int(tok), 0, int(tok), int(tok) % 4) + 1)
+    key = int(pack_key(0, 3, 0, 3, 1))
+    opt = BOOptimizer(t, _toy_eval_fn(key), Q=16, max_iters=12, seed=1,
+                      acquisition=acq)
+    res = opt.run()
+    assert res.best_cost <= res.costs[0] + 1e-12
+    assert res.iterations >= 2
+
+
+def test_bo_epsilon_decays():
+    t = KVTable(num_layers=1, num_experts=2, vocab_size=8)
+    t.set_entry(0, 1, 0, 1, 0, 5.0)
+    opt = BOOptimizer(t, _toy_eval_fn(123), Q=4, max_iters=3, seed=0)
+    eps1 = opt.eps0 / (1 + opt.rho * 1)
+    eps3 = opt.eps0 / (1 + opt.rho * 3)
+    assert (eps3 < eps1).all()

@@ -1,0 +1,55 @@
+"""Gold test: sequential one-token decode == full causal forward.
+
+Covers KV-cache attention (full + sliding window), chunked SSD (mamba2),
+chunkwise mLSTM, sequential sLSTM, MoE dispatch, VLM prefix, enc-dec cross
+attention — all through the public prefill/decode API.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import forward_kwargs, make_inputs, tiny_model
+
+CAUSAL = ["gpt2-moe", "codeqwen1.5-7b", "gemma3-12b", "xlstm-350m",
+          "zamba2-7b", "qwen2-moe-a2.7b", "granite-moe-3b-a800m",
+          "llava-next-mistral-7b", "granite-34b", "qwen3-4b",
+          "whisper-small", "bert2bert-moe"]
+
+
+@pytest.mark.parametrize("name", CAUSAL)
+def test_decode_matches_forward(name):
+    cfg, model = tiny_model(name, capacity_factor=8.0)
+    params = model.init_params(jax.random.PRNGKey(1))
+    S = 12
+    batch = make_inputs(cfg, batch=2, seq=S)
+    kw = forward_kwargs(batch)
+    n_front = cfg.frontend_tokens if cfg.frontend == "vision_stub" else 0
+
+    logits_full, _, _ = model.forward(params, batch["tokens"], **kw)
+    _, cache = model.prefill(params, batch["tokens"][:, :1], **kw)
+    cache = model.prepare_decode_cache(cache, 64)
+    tol = 5e-4 if name == "xlstm-350m" else 5e-5
+    for t in range(1, S):
+        lg, cache = model.decode_step(params, batch["tokens"][:, t:t + 1],
+                                      cache, jnp.int32(t + n_front))
+        err = float(jnp.abs(lg[:, 0] - logits_full[:, n_front + t]).max())
+        assert err < tol, f"{name} step {t}: err={err}"
+
+
+def test_sliding_window_restricts_context():
+    """Stacked window layers have receptive field L*W: logits at position t
+    must not depend on tokens further back than num_layers * window."""
+    cfg, model = tiny_model("llava-next-mistral-7b")
+    assert cfg.sliding_window > 0
+    params = model.init_params(jax.random.PRNGKey(0))
+    W = cfg.sliding_window
+    S = cfg.num_layers * W + 16
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    front = make_inputs(cfg, batch=1, seq=S)["frontend"]
+    lg1, _, _ = model.forward(params, toks, frontend=front)
+    # perturb a token far outside the window of the last position
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    lg2, _, _ = model.forward(params, toks2, frontend=front)
+    last = -1
+    assert float(jnp.abs(lg1[0, last] - lg2[0, last]).max()) < 1e-5

@@ -1,0 +1,209 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle.
+
+Sweeps shapes and dtypes per the brief; hypothesis drives random-shape
+property tests on top of the fixed grid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.expert_ffn.ops import expert_ffn_pallas
+from repro.kernels.expert_ffn.ref import expert_ffn_ref
+from repro.kernels.router_topk.ops import router_topk_pallas
+from repro.kernels.router_topk.ref import router_topk_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# expert_ffn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F", [(4, 128, 64, 128), (2, 256, 128, 256),
+                                     (8, 64, 32, 96), (1, 128, 256, 512)])
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+def test_expert_ffn_matches_ref(E, C, D, F, dtype, activation):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    buf = (0.5 * jax.random.normal(ks[0], (E, C, D))).astype(dtype)
+    wg = (0.2 * jax.random.normal(ks[1], (E, D, F))).astype(dtype)
+    wu = (0.2 * jax.random.normal(ks[2], (E, D, F))).astype(dtype)
+    wd = (0.2 * jax.random.normal(ks[3], (E, F, D))).astype(dtype)
+    wu_arg = wu if activation == "swiglu" else None
+    got = expert_ffn_pallas(buf, wg, wu_arg, wd, activation=activation)
+    want = expert_ffn_ref(buf, wg, wu_arg, wd, activation=activation)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_expert_ffn_zero_slots_stay_zero():
+    """Empty capacity slots (zeros) must produce exactly zero output."""
+    E, C, D, F = 2, 64, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    buf = jnp.zeros((E, C, D))
+    wg = jax.random.normal(ks[0], (E, D, F))
+    wu = jax.random.normal(ks[1], (E, D, F))
+    wd = jax.random.normal(ks[2], (E, F, D))
+    out = expert_ffn_pallas(buf, wg, wu, wd)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(E=st.integers(1, 6), C=st.sampled_from([32, 72, 130]),
+       D=st.sampled_from([16, 48]), F=st.sampled_from([24, 64]))
+def test_expert_ffn_ragged_shapes(E, C, D, F):
+    """Non-multiple C/F exercise the padding path."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    buf = 0.5 * jax.random.normal(ks[0], (E, C, D))
+    wg = 0.2 * jax.random.normal(ks[1], (E, D, F))
+    wu = 0.2 * jax.random.normal(ks[2], (E, D, F))
+    wd = 0.2 * jax.random.normal(ks[3], (E, F, D))
+    got = expert_ffn_pallas(buf, wg, wu, wd, block_c=64, block_f=32)
+    want = expert_ffn_ref(buf, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_expert_ffn_matches_model_layer():
+    """The kernel is a drop-in for the model's expert_ffn."""
+    from repro.kernels.expert_ffn.ops import moe_expert_ffn_adapter
+    from repro.models.moe import expert_ffn
+    E, C, D, F = 4, 64, 32, 48
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    params = {"w_gate": 0.2 * jax.random.normal(ks[0], (E, D, F)),
+              "w_up": 0.2 * jax.random.normal(ks[1], (E, D, F)),
+              "w_down": 0.2 * jax.random.normal(ks[2], (E, F, D))}
+    buf = 0.5 * jax.random.normal(ks[3], (E, C, D))
+    got = moe_expert_ffn_adapter(params, buf, "swiglu")
+    want = expert_ffn(params, buf, "swiglu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# router_topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,D,E,k", [(256, 64, 8, 2), (128, 32, 60, 4),
+                                     (512, 128, 16, 1), (100, 48, 40, 8)])
+def test_router_topk_matches_ref(N, D, E, k, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (N, D)).astype(dtype)
+    w = jax.random.normal(ks[1], (D, E)).astype(dtype)
+    vals, idx = router_topk_pallas(x, w, k=k)
+    rvals, ridx = router_topk_ref(x, w, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_router_topk_respects_valid_experts():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+    _, idx = router_topk_pallas(x, w, k=4, valid_experts=60)
+    assert int(idx.max()) < 60
+
+
+@settings(max_examples=10, deadline=None)
+@given(N=st.integers(1, 300), E=st.integers(2, 64), seed=st.integers(0, 99))
+def test_router_topk_weights_normalized(N, E, seed):
+    k = min(2, E)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (N, 32))
+    w = jax.random.normal(ks[1], (32, E))
+    vals, idx = router_topk_pallas(x, w, k=k)
+    np.testing.assert_allclose(np.asarray(vals.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(idx) < E).all()
+    # top-1 prob >= top-2 prob
+    if k == 2:
+        assert (np.asarray(vals[:, 0]) >= np.asarray(vals[:, 1]) - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,N,G,D,T", [(2, 2, 4, 64, 1024), (1, 8, 1, 128, 512),
+                                       (4, 1, 2, 32, 2048), (2, 4, 4, 64, 640)])
+def test_decode_attention_matches_ref(B, N, G, D, T, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, N, G, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, N, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, N, D)).astype(dtype)
+    valid = T - 17
+    got = decode_attention_pallas(q, k, v, valid)
+    want = decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_per_batch_valid_lengths():
+    B, N, G, D, T = 3, 2, 2, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, N, G, D))
+    k = jax.random.normal(ks[1], (B, T, N, D))
+    v = jax.random.normal(ks[2], (B, T, N, D))
+    valid = jnp.array([1, 100, 256], jnp.int32)
+    got = decode_attention_pallas(q, k, v, valid)
+    want = decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ignores_invalid_slots():
+    """Garbage beyond valid_len must not affect the output."""
+    B, N, G, D, T = 1, 1, 2, 32, 128
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, N, G, D))
+    k = jax.random.normal(ks[1], (B, T, N, D))
+    v = jax.random.normal(ks[2], (B, T, N, D))
+    valid = 64
+    out1 = decode_attention_pallas(q, k, v, valid)
+    k2 = k.at[:, valid:].set(1e4)
+    v2 = v.at[:, valid:].set(-1e4)
+    out2 = decode_attention_pallas(q, k2, v2, valid)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(T=st.sampled_from([96, 500, 1024]), valid=st.integers(1, 96),
+       seed=st.integers(0, 50))
+def test_decode_attention_property(T, valid, seed):
+    B, N, G, D = 1, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, N, G, D))
+    k = jax.random.normal(ks[1], (B, T, N, D))
+    v = jax.random.normal(ks[2], (B, T, N, D))
+    got = decode_attention_pallas(q, k, v, valid, block_t=128)
+    want = decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_matches_model_attention():
+    """Kernel agrees with the model's decode path (same masking rules)."""
+    from repro.models.attention import _flash_attend
+    B, N, G, D, T = 2, 2, 2, 32, 512
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, N, G, 1, D))      # model: (B,N,G,S,D)
+    k = jax.random.normal(ks[1], (B, N, T, D))         # model: (B,N,T,D)
+    v = jax.random.normal(ks[2], (B, N, T, D))
+    valid = 300
+    want, _ = _flash_attend(q, k, v, causal=False, window=0,
+                            q_offset=jnp.asarray(0), kv_valid_len=valid)
+    got = decode_attention_pallas(
+        q[:, :, :, 0], jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2), valid)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want[:, :, :, 0]),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,110 @@
+"""Direct oracles for the recurrent mixers.
+
+The chunked SSD / chunkwise-mLSTM forward passes must equal a naive
+per-step recurrence (the mathematical definition), independent of chunk
+size. This is the strongest correctness statement for the scan math —
+the decode-consistency test only checks the composed model.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import get_arch, reduced_config
+from repro.models.ssm import (init_mamba2_cache, init_mlstm,
+                              init_mlstm_cache, mlstm_decode_step,
+                              mlstm_forward, ssd_chunked)
+
+
+def _ssd_sequential(x, dt, A, Bm, Cm):
+    """Definitionally-correct per-step SSD recurrence."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    state = np.zeros((B_, H, P, N))
+    x, dt, Bm, Cm = (np.asarray(a, np.float64) for a in (x, dt, Bm, Cm))
+    A = np.asarray(A, np.float64)
+    ys = []
+    for t in range(S):
+        dA = np.exp(dt[:, t] * A)                         # (B,H)
+        state = (state * dA[:, :, None, None]
+                 + dt[:, t][:, :, None, None]
+                 * x[:, t][..., None] * Bm[:, t][:, None, None, :])
+        ys.append(np.einsum("bhpn,bn->bhp", state, Cm[:, t]))
+    return np.stack(ys, 1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+def test_ssd_chunked_matches_sequential(chunk):
+    rng = np.random.default_rng(0)
+    B_, S, H, P, N = 2, 24, 3, 4, 5
+    x = jnp.asarray(rng.standard_normal((B_, S, H, P)), jnp.float32)
+    dt = jnp.asarray(0.1 * rng.random((B_, S, H)) + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(H) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B_, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B_, S, N)), jnp.float32)
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y_ref, state_ref = _ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(state), state_ref,
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(3, 40), chunk=st.sampled_from([3, 5, 8, 32]),
+       seed=st.integers(0, 100))
+def test_ssd_chunk_size_invariance(S, chunk, seed):
+    """Output must be independent of the chunking."""
+    rng = np.random.default_rng(seed)
+    B_, H, P, N = 1, 2, 3, 4
+    x = jnp.asarray(rng.standard_normal((B_, S, H, P)), jnp.float32)
+    dt = jnp.asarray(0.1 * rng.random((B_, S, H)) + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(H) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B_, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B_, S, N)), jnp.float32)
+    y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y2, s2 = ssd_chunked(x, dt, A, Bm, Cm, S)        # one chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=3e-4, atol=3e-5)
+
+
+def test_mlstm_chunkwise_matches_stepwise():
+    """Chunked mLSTM forward == running the decode cell step by step."""
+    cfg = reduced_config(get_arch("xlstm-350m"))
+    params = init_mlstm(jax.random.PRNGKey(0), cfg)
+    B_, S = 2, 13
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (B_, S, cfg.d_model))
+    y_chunk, _ = mlstm_forward(params, cfg, x)
+    cache = init_mlstm_cache(cfg, B_)
+    ys = []
+    for t in range(S):
+        y_t, cache = mlstm_decode_step(params, cfg, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_ssd_state_carry_composes():
+    """Running two halves with carried state == one full pass."""
+    rng = np.random.default_rng(3)
+    B_, S, H, P, N = 1, 16, 2, 3, 4
+    x = jnp.asarray(rng.standard_normal((B_, S, H, P)), jnp.float32)
+    dt = jnp.asarray(0.1 * rng.random((B_, S, H)) + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(H) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B_, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B_, S, N)), jnp.float32)
+    y_full, s_full = ssd_chunked(x, dt, A, Bm, Cm, 8)
+    h = S // 2
+    y1, s1 = ssd_chunked(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], 8)
+    y2, s2 = ssd_chunked(x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:], 8,
+                         init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-4, atol=2e-5)
