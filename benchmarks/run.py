@@ -19,7 +19,7 @@ import traceback
 def main() -> None:
     from benchmarks import (fig10_prediction, fig11_comm, fig12_ods,
                             fig13_bo, fig14_overall, kernels_bench,
-                            overhead)
+                            overhead, serving_bench)
     suites = [
         ("fig11_comm", fig11_comm.run),
         ("fig12_ods", fig12_ods.run),
@@ -28,6 +28,7 @@ def main() -> None:
         ("fig10_prediction", fig10_prediction.run),
         ("fig13_bo", fig13_bo.run),
         ("fig14_overall", fig14_overall.run),
+        ("serving", serving_bench.run),
     ]
     print("name,us_per_call,derived")
     failures = []

@@ -1,0 +1,150 @@
+"""Serving throughput + TTFT: continuous batching vs. the old drain loop.
+
+The seed engine drained the queue in FIXED batches: pick ``batch_size``
+requests, prefill them together (left-padded to the longest prompt), decode
+until ALL of them finish, only then touch the queue again. A short request
+therefore holds its lane idle while the longest one in its batch drags on,
+and requests behind the batch wait the full batch duration for a first
+token. The rebuilt ``repro.serving`` engine admits queued requests into
+slots the moment they free up.
+
+This bench replays the SAME ragged workload (mixed prompt lengths, mixed
+generation lengths) through both schedulers and reports tokens/s and mean
+time-to-first-token. Emits CSV rows per the harness contract:
+
+    serving.<engine>.tokens_per_s,us_total,tok_per_s
+    serving.<engine>.ttft_ms,us_total,mean_ttft_ms
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_bench
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import get_arch, reduced_config
+from repro.models import Model
+from repro.serving import ServingEngine
+
+
+# --------------------------------------------------------------------------
+# The seed engine's fixed-batch drain loop, kept verbatim as the baseline.
+# --------------------------------------------------------------------------
+
+class DrainLoopBaseline:
+    """Fixed-batch drain scheduling (the pre-rebuild ServingEngine.run)."""
+
+    def __init__(self, model: Model, params, *, max_len: int,
+                 batch_size: int):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t))
+
+    def serve(self, prompts: List[np.ndarray], max_new: List[int]):
+        """Returns (total_new_tokens, ttft_s per request)."""
+        t_start = time.perf_counter()
+        ttft: List[float] = []
+        total = 0
+        queue = list(zip(prompts, max_new))
+        while queue:
+            batch = queue[:self.batch_size]
+            queue = queue[self.batch_size:]
+            S = max(len(p) for p, _ in batch)
+            toks = np.zeros((len(batch), S), np.int32)
+            for i, (p, _) in enumerate(batch):
+                toks[i, S - len(p):] = p              # left-pad
+            logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            cache = self.model.prepare_decode_cache(cache, self.max_len)
+            next_tok = np.asarray(jnp.argmax(logits[:, -1], -1))
+            now = time.perf_counter() - t_start
+            ttft.extend([now] * len(batch))
+            emitted = [1] * len(batch)
+            total += len(batch)
+            steps = max(m for _, m in batch) - 1
+            for step in range(steps):
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(next_tok[:, None]), cache,
+                    jnp.int32(S + step))
+                next_tok = np.asarray(jnp.argmax(logits[:, -1], -1))
+                for i, (_, m) in enumerate(batch):
+                    if emitted[i] < m:
+                        emitted[i] += 1
+                        total += 1
+        return total, ttft
+
+
+def make_workload(cfg, n_requests: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 24))).astype(np.int32)
+               for _ in range(n_requests)]
+    max_new = [int(rng.integers(2, 24)) for _ in range(n_requests)]
+    return prompts, max_new
+
+
+def run(arch: str = "gpt2-moe", n_requests: int = 12, slots: int = 4,
+        max_len: int = 64) -> None:
+    cfg = reduced_config(get_arch(arch))
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompts, max_new = make_workload(cfg, n_requests)
+
+    # Warm each scheduler ON ITS MEASURED INSTANCE: jit caches live per
+    # engine object, so steady-state serving (the number that matters for a
+    # long-lived server) is measured after one full warm pass through the
+    # same workload shapes.
+    drain = DrainLoopBaseline(model, params, max_len=max_len,
+                              batch_size=slots)
+    drain.serve(prompts, max_new)
+    eng = ServingEngine(model, params, max_len=max_len,
+                        batch_size=slots, collect_telemetry=False)
+    for p, m in zip(prompts, max_new):
+        eng.submit(p, max_new_tokens=m)
+    eng.run(max_steps=10_000)
+
+    # --- old: fixed-batch drain loop -------------------------------------
+    t0 = time.perf_counter()
+    n_old, ttft_old = drain.serve(prompts, max_new)
+    dt_old = time.perf_counter() - t0
+    emit("serving.drain.tokens_per_s", dt_old * 1e6, f"{n_old / dt_old:.2f}")
+    emit("serving.drain.ttft_ms", dt_old * 1e6,
+         f"{1e3 * float(np.mean(ttft_old)):.1f}")
+
+    # --- new: continuous batching ----------------------------------------
+    t0 = time.perf_counter()
+    reqs = [eng.submit(p, max_new_tokens=m)
+            for p, m in zip(prompts, max_new)]
+    done = eng.run(max_steps=10_000)
+    dt_new = time.perf_counter() - t0
+    n_new = sum(len(r.output) for r in done)
+    ttft_new = [r.ttft_s for r in reqs if r.ttft_s is not None]
+    emit("serving.continuous.tokens_per_s", dt_new * 1e6,
+         f"{n_new / dt_new:.2f}")
+    emit("serving.continuous.ttft_ms", dt_new * 1e6,
+         f"{1e3 * float(np.mean(ttft_new)):.1f}")
+    emit("serving.speedup", 0.0,
+         f"{(n_new / dt_new) / (n_old / dt_old):.2f}x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-moe")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+    run(args.arch, args.requests, args.slots, args.max_len)
+
+
+if __name__ == "__main__":
+    main()

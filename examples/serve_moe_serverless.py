@@ -1,11 +1,12 @@
-"""End-to-end driver: BO-optimized serverless deployment + batched serving.
+"""End-to-end driver: BO-optimized serverless deployment + live serving.
 
 The paper's kind is INFERENCE SERVING, so this is the required end-to-end
 example: (1) the BO framework (Alg. 2) learns the key-value table and the
-deployment policy; (2) the serving engine executes real batched requests
-through the same JAX MoE model whose routing the deployment was planned
-for; (3) the serverless simulator bills each served batch under the
-deployed policy.
+deployment policy OFFLINE; (2) the continuous-batching engine serves real
+requests through the same JAX MoE model, collecting live expert-popularity
+telemetry from the traffic it actually routes; (3) the runtime re-plans
+deployment from that telemetry (the online feedback loop) and the
+serverless simulator bills the served batch under both policies.
 
 Run:  PYTHONPATH=src python examples/serve_moe_serverless.py [--requests 6]
 """
@@ -29,32 +30,49 @@ def main() -> None:
                        eval_batches=1, seq_len=64, batch_size=4)
     rt = ServerlessMoERuntime(rc)
 
-    # --- plan the deployment with the BO framework -----------------------
+    # --- plan the deployment with the BO framework (offline) -------------
     res = rt.run_bo(Q=40, max_iters=args.bo_iters, seed=0)
     print(f"BO: {res.iterations} iterations, best billed cost "
           f"${res.best_cost:.6f} (converged={res.converged})")
     pred = ExpertPredictor(res.best_table, top_k=rt.top_k).fit()
 
-    # --- serve real requests through the model ---------------------------
+    # --- serve real requests through the continuous-batching engine ------
     eng = ServingEngine(rt.model, rt.params, max_len=128, batch_size=4)
     rng = np.random.default_rng(0)
-    reqs = [eng.submit(rng.integers(0, rt.cfg.vocab_size, size=12),
-                       max_new_tokens=8) for _ in range(args.requests)]
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, rt.cfg.vocab_size,
+                                size=int(rng.integers(8, 17))),
+                   max_new_tokens=8)
     done = eng.run()
-    print(f"served {len(done)} requests; sample output tokens: "
-          f"{done[0].output}")
+    ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+    print(f"served {len(done)} requests "
+          f"(reasons: {[r.finish_reason for r in done]}); "
+          f"mean TTFT {1e3 * float(np.mean(ttfts)):.1f}ms; "
+          f"sample output tokens: {done[0].output}")
 
-    # --- bill the served traffic under the deployed policy ---------------
-    served = np.stack([np.concatenate([r.prompt, r.output]).astype(np.int32)
-                       for r in done])
-    demand = pred.predict_demand(served)
-    policy = rt.plan(demand)
-    sim = rt.simulate(policy, [served])[0]
-    print(f"billed cost of served batch: ${sim.billed_cost:.6f} "
-          f"({sim.throughput_tps:.1f} tok/s, "
-          f"SLO latency {sim.latency_s:.1f}s)")
-    print(f"methods per MoE layer: {policy.method}; "
-          f"replicas (layer 0): {policy.replicas[0]}")
+    # --- close the loop: re-plan deployment from live telemetry ----------
+    tel = eng.telemetry
+    assert tel is not None
+    print(f"telemetry: {tel.prefill_tokens} prefill + {tel.decode_tokens} "
+          f"decoded tokens across {rt.num_layers} MoE layers")
+    live_policy = rt.plan_from_telemetry(tel)
+    print(f"re-planned from live traffic: methods {live_policy.method}; "
+          f"replicas (layer 0): {live_policy.replicas[0]}")
+
+    # --- bill the served traffic under offline-vs-live policies ----------
+    # ragged sequences are predicted/simulated individually — padding them
+    # into one rectangle would bill pad positions as real traffic
+    served = [np.concatenate([r.prompt, r.output]).astype(np.int32)[None]
+              for r in done]
+    demand_off = np.sum([pred.predict_demand(s) for s in served], axis=0)
+    offline_policy = rt.plan(demand_off)
+    for name, policy in [("offline BO plan", offline_policy),
+                         ("live-telemetry plan", live_policy)]:
+        sims = rt.simulate(policy, served)
+        print(f"{name}: billed ${sum(s.billed_cost for s in sims):.6f} "
+              f"({float(np.mean([s.throughput_tps for s in sims])):.1f} "
+              f"tok/s, SLO latency "
+              f"{sum(s.latency_s for s in sims):.1f}s)")
 
 
 if __name__ == "__main__":

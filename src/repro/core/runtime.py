@@ -247,6 +247,34 @@ class ServerlessMoERuntime:
         return ods(sols, demand_pred, self.profile, self.spec,
                    t_limit_s=self.rc.slo_s)
 
+    # -------------------------------------------------- live serving feedback
+    def ingest_telemetry(self, telemetry) -> KVTable:
+        """Fold live serving observations (``ServingEngine.telemetry``) into
+        the profiling table so the predictor learns from real traffic."""
+        self.table.ingest_telemetry(telemetry)
+        return self.table
+
+    def plan_from_telemetry(self, telemetry, *,
+                            mode: str = "measured") -> DeploymentPolicy:
+        """Re-plan deployment from live serving traffic (closes the paper's
+        profile -> predict -> plan loop online).
+
+        ``mode="measured"`` plans directly on the telemetry's observed
+        (L, E) routed-token counts; ``mode="predicted"`` first ingests the
+        observations into the KV table and plans on the refreshed
+        predictor's demand estimate over the served token stream.
+        """
+        if mode == "measured":
+            self.ingest_telemetry(telemetry)
+            return self.plan(telemetry.demand_matrix())
+        if mode != "predicted":
+            raise ValueError(f"unknown mode {mode!r}")
+        self.ingest_telemetry(telemetry)
+        pred = ExpertPredictor(self.table, top_k=self.top_k).fit()
+        demand = pred.predict_demand(telemetry.served_token_stream(),
+                                     mode=self.demand_mode)
+        return self.plan(demand)
+
     def feedback_replication(self, policy: DeploymentPolicy,
                              real: np.ndarray,
                              alpha: float = 2.0

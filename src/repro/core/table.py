@@ -99,6 +99,25 @@ class KVTable:
         vals = np.fromiter(self.counts.values(), float, len(self.counts))
         return keys, vals
 
+    # -------------------------------------------------------- live telemetry
+    def ingest_telemetry(self, telemetry) -> int:
+        """Fold live serving observations into the table.
+
+        ``telemetry`` is duck-typed (:class:`repro.serving.telemetry
+        .ExpertTelemetry`): anything with ``flush_to_table(table)`` that
+        updates ``token_freq`` and calls ``add_records``. Returns the
+        number of records ingested."""
+        return telemetry.flush_to_table(self)
+
+    def demand_matrix(self) -> np.ndarray:
+        """(num_layers, num_experts) routed-token counts summed over keys."""
+        d = np.zeros((self.num_layers, self.num_experts))
+        keys, vals = self.entries()
+        if len(keys):
+            layer, _, _, _, expert = unpack_key(keys)
+            np.add.at(d, (layer, expert), vals)
+        return d
+
     def copy(self) -> "KVTable":
         t = KVTable(self.num_layers, self.num_experts, self.vocab_size,
                     counts=dict(self.counts),

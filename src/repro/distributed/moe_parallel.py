@@ -37,6 +37,18 @@ from repro.models.moe import (build_dispatch, capacity_for, combine_tokens,
                               dispatch_tokens, expert_ffn, route)
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat: ``jax.shard_map`` (with ``check_vma``) only exists on
+    newer JAX; 0.4.x ships it at ``jax.experimental.shard_map`` with the
+    replication check spelled ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def _chunk_count(capacity: int, d_model: int, beta: int,
                  max_chunk_bytes: Optional[int], model_size: int,
                  e_local: int, itemsize: int = 2) -> int:
@@ -150,13 +162,12 @@ def expert_parallel_moe(
     wu = params.get("w_up")
     wd = params.get("w_down", params.get("w_out"))
     shared_p = params.get("shared", {})
-    fn = jax.shard_map(
-        local_moe, mesh=mesh,
+    fn = _shard_map(
+        local_moe, mesh,
         in_specs=(P(), P(model_axis, None, None),
                   P(model_axis, None, None) if wu is not None else P(),
                   P(model_axis, None, None), P(),
                   P(bspec, None, None)),
-        out_specs=(P(bspec, None, None), P()),
-        check_vma=False)
+        out_specs=(P(bspec, None, None), P()))
     return fn(params["router"], wg,
               wu if wu is not None else jnp.zeros(()), wd, shared_p, x)

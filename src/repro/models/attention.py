@@ -81,7 +81,8 @@ def _flash_attend(q, k, v, *, causal: bool, window: int, q_offset,
     """Blocked attention. q: (B,N,G,S,D); k,v: (B,N,T,D).
 
     ``q_offset``: absolute position of q[..., 0, :] (scalar, may be traced).
-    ``kv_valid_len``: number of valid cache slots (scalar) for decode.
+    ``kv_valid_len``: number of valid cache slots for decode — scalar, or
+    (B,) for per-slot validity in the continuous-batching engine.
     Rectangular schedule: causal/window masking is applied, not skipped
     (2x FLOP overcount for causal prefill -- recorded in the roofline notes).
     """
@@ -115,7 +116,10 @@ def _flash_attend(q, k, v, *, causal: bool, window: int, q_offset,
             kpos = kj * kv_chunk + jnp.arange(kv_chunk)
             s = jnp.einsum("bngsd,bntd->bngst", qblk.astype(jnp.float32),
                            kblk.astype(jnp.float32)) * scale
-            msk = kpos[None, :] < valid_t
+            if jnp.ndim(valid_t) == 1:     # per-batch-row validity
+                msk = (kpos[None, :] < valid_t[:, None])[:, None, None, None]
+            else:
+                msk = kpos[None, :] < valid_t
             if causal:
                 msk &= kpos[None, :] <= qpos[:, None]
             if window > 0:
@@ -235,26 +239,36 @@ def attention_decode_step(
     x: jnp.ndarray,                 # (B, 1, d)
     cache: Dict[str, jnp.ndarray],  # k/v: (B, T, n_kv, hd)
     *,
-    pos,                            # scalar absolute position of the new token
+    pos,                            # absolute position: scalar or (B,) vector
     causal: bool = True,
     window: int = 0,
     rope_theta: float = 0.0,
     num_heads: Optional[int] = None,
     num_kv_heads: Optional[int] = None,
     cross: bool = False,
+    valid_len=None,                 # cross only: scalar or (B,) valid K/V len
+    capture: bool = False,
     dense_threshold: int = 4096,
-) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """One-token decode against a KV cache.
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], Optional[jnp.ndarray]]:
+    """One-token decode against a KV cache. Returns (y, new_cache, argmax).
 
-    ``dense_threshold``: cache lengths up to this use the dense einsum
-    path. Raising it past the cache length switches long-context decode to
-    the dense formulation, whose softmax GSPMD can keep partitioned over a
-    sequence-sharded cache (small all-reduces instead of an all-gather of
-    the cache) — see EXPERIMENTS.md §Perf (gemma3 long_500k iteration).
+    ``pos`` may be a scalar (whole batch at one position — the training /
+    consistency-test path) or a (B,) vector of per-row positions (the
+    continuous-batching serving path, where every slot decodes at its own
+    offset). ``dense_threshold``: cache lengths up to this use the dense
+    einsum path. Raising it past the cache length switches long-context
+    decode to the dense formulation, whose softmax GSPMD can keep
+    partitioned over a sequence-sharded cache (small all-reduces instead of
+    an all-gather of the cache) — see EXPERIMENTS.md §Perf (gemma3
+    long_500k iteration).
 
     Windowed layers use a rolling cache of ``window`` slots (write at
     ``pos % window``); full layers write at ``pos``. Cross-attention reads a
-    static cache (encoder K/V) and writes nothing.
+    static cache (encoder K/V, ``valid_len`` masks encoder padding) and
+    writes nothing.
+
+    ``capture`` (dense path only) returns the per-row argmax key position
+    summed over heads — the paper's attention-ID feature — else None.
     """
     nh = num_heads or cfg.num_heads
     nkv = num_kv_heads or cfg.num_kv_heads
@@ -262,17 +276,20 @@ def attention_decode_step(
     B = x.shape[0]
     T = cache["k"].shape[1]
     g = nh // nkv
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    rope_pos = pos[:, None] if per_slot else pos[None]
 
     q = (x @ params["wq"]).reshape(B, 1, nh, hd)
     if "q_norm" in params:
         q = apply_norm("rmsnorm", params["q_norm"], q)
     if rope_theta > 0:
         inv = rope_frequencies(hd, rope_theta)
-        q = apply_rope(q, jnp.asarray(pos)[None], inv)
+        q = apply_rope(q, rope_pos, inv)
 
     if cross:
         k, v = cache["k"], cache["v"]
-        valid = T
+        valid = T if valid_len is None else valid_len
         new_cache = cache
     else:
         knew = (x @ params["wk"]).reshape(B, 1, nkv, hd)
@@ -280,27 +297,40 @@ def attention_decode_step(
         if "k_norm" in params:
             knew = apply_norm("rmsnorm", params["k_norm"], knew)
         if rope_theta > 0:
-            knew = apply_rope(knew, jnp.asarray(pos)[None], inv)
+            knew = apply_rope(knew, rope_pos, inv)
         slot = pos % T if window > 0 else pos
-        k = jax.lax.dynamic_update_slice(cache["k"], knew, (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], vnew, (0, slot, 0, 0))
+        if per_slot:
+            rows = jnp.arange(B)
+            k = cache["k"].at[rows, slot].set(knew[:, 0], mode="drop")
+            v = cache["v"].at[rows, slot].set(vnew[:, 0], mode="drop")
+        else:
+            k = jax.lax.dynamic_update_slice(cache["k"], knew,
+                                             (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], vnew,
+                                             (0, slot, 0, 0))
         valid = jnp.minimum(pos + 1, T) if window > 0 else pos + 1
         new_cache = {"k": k, "v": v}
 
     qg = jnp.moveaxis(q.reshape(B, 1, nkv, g, hd), 1, 3)
     kt = jnp.moveaxis(k, 1, 2)
     vt = jnp.moveaxis(v, 1, 2)
+    attn_argmax = None
     if T <= dense_threshold:
         tpos = jnp.arange(T)
-        mask = jnp.where(tpos[None, :] < valid, 0.0, NEG_INF)
-        out, _ = _dense_attend(qg, kt, vt, mask)
+        if jnp.ndim(valid) == 1:
+            mask = jnp.where(tpos[None, :] < jnp.asarray(valid)[:, None],
+                             0.0, NEG_INF)          # (B, T)
+            mask = mask[:, None, None, None, :]     # vs scores (B,N,G,1,T)
+        else:
+            mask = jnp.where(tpos[None, :] < valid, 0.0, NEG_INF)
+        out, attn_argmax = _dense_attend(qg, kt, vt, mask, capture=capture)
     else:
         # flash over the cache; positions already baked into rope'd keys, so
-        # masking is purely slot-validity.
+        # masking is purely slot-validity. (No capture on this path.)
         out, _ = _flash_attend(qg, kt, vt, causal=False, window=0,
                                q_offset=jnp.asarray(0), kv_valid_len=valid)
     y = jnp.moveaxis(out, 3, 1).reshape(B, 1, nh * hd).astype(x.dtype)
-    return y @ params["wo"], new_cache
+    return y @ params["wo"], new_cache, attn_argmax
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,

@@ -186,22 +186,35 @@ def block_decode_step(
     cache: Dict[str, Any],
     *,
     pos,
+    capture: bool = False,
+    cross_valid=None,
     moe_ffn_fn=None,
     moe_layer_fn=None,
     dense_threshold: int = 4096,
-) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+) -> Tuple[jnp.ndarray, Dict[str, Any], Dict[str, Any]]:
+    """Returns (x, new_cache, captured). ``pos`` may be scalar or (B,).
+
+    Under ``capture``, ``captured`` mirrors :func:`block_forward`'s capture
+    dict for the single decoded token: ``attn_argmax`` (B, 1) and the MoE
+    ``topk_idx``/``topk_weight`` (B, 1, k) — the serving engine's expert
+    telemetry reads these. ``cross_valid`` masks encoder padding in
+    cross-attention (scalar or per-row).
+    """
     new_cache: Dict[str, Any] = {}
+    cap: Dict[str, Any] = {}
     h = apply_norm(cfg.norm, params["norm1"], x)
 
     if spec.mixer in ATTN_MIXERS:
         attn_p = shared["attn"] if spec.mixer == "shared_attn" else params["attn"]
         window = cfg.sliding_window if spec.mixer == "swa" else 0
         rope = cfg.rope_theta if cfg.pos_embed == "rope" else 0.0
-        y, kv = attention_decode_step(
+        y, kv, argmax = attention_decode_step(
             attn_p, cfg, h, cache["attn"], pos=pos, causal=cfg.causal,
-            window=window, rope_theta=rope,
+            window=window, rope_theta=rope, capture=capture,
             dense_threshold=dense_threshold)
         new_cache["attn"] = kv
+        if capture and argmax is not None:
+            cap["attn_argmax"] = argmax
     elif spec.mixer == "mamba2":
         y, st = ssm_mod.mamba2_decode_step(params["mamba2"], cfg, h,
                                            cache["ssm"])
@@ -220,8 +233,9 @@ def block_decode_step(
 
     if "cross" in cache:
         h = apply_norm(cfg.norm, params["norm_cross"], x)
-        y, _ = attention_decode_step(params["cross"], cfg, h, cache["cross"],
-                                     pos=pos, cross=True)
+        y, _, _ = attention_decode_step(params["cross"], cfg, h,
+                                        cache["cross"], pos=pos, cross=True,
+                                        valid_len=cross_valid)
         x = x + y
         new_cache["cross"] = cache["cross"]
 
@@ -232,9 +246,12 @@ def block_decode_step(
     elif spec.ffn == "moe":
         h = apply_norm(cfg.norm, params["norm2"], x)
         if moe_layer_fn is not None:
-            y, _ = moe_layer_fn(params["moe"], cfg, h)
+            y, aux = moe_layer_fn(params["moe"], cfg, h)
         else:
-            y, _ = moe_forward(params["moe"], cfg, h,
-                               expert_ffn_fn=moe_ffn_fn)
+            y, aux = moe_forward(params["moe"], cfg, h, capture=capture,
+                                 expert_ffn_fn=moe_ffn_fn)
         x = x + y
-    return x, new_cache
+        if capture and "topk_idx" in aux:
+            cap["topk_idx"] = aux["topk_idx"]
+            cap["topk_weight"] = aux["topk_weight"]
+    return x, new_cache, cap

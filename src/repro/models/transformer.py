@@ -260,39 +260,60 @@ class Model:
         return out
 
     def prefill(self, params: Params, tokens: jnp.ndarray, *,
-                frontend=None, enc_tokens=None):
-        """Full-sequence pass that returns (logits, cache) for decoding."""
+                frontend=None, enc_tokens=None, capture: bool = False):
+        """Full-sequence pass that returns (logits, cache) for decoding.
+
+        With ``capture=True`` returns (logits, cache, aux) where ``aux``
+        carries the per-block routing/attention captures (the serving
+        engine's telemetry source)."""
         logits, aux, cache = self.forward(
             params, tokens, frontend=frontend, enc_tokens=enc_tokens,
-            return_cache=True)
+            return_cache=True, capture=capture)
+        if capture:
+            return logits, cache, aux
         return logits, cache
 
     def decode_step(self, params: Params, tokens: jnp.ndarray,
-                    cache: Dict[str, Any], pos
-                    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-        """One-token step. tokens: (B, 1); pos: scalar absolute position."""
+                    cache: Dict[str, Any], pos, *,
+                    capture: bool = False, cross_valid=None):
+        """One-token step. tokens: (B, 1); ``pos``: absolute position —
+        scalar (whole batch) or a (B,) vector of per-slot positions for
+        ragged continuous batching. Returns (logits, new_cache), or
+        (logits, new_cache, captures) under ``capture`` where ``captures``
+        maps ``pos{p}`` -> stacked (num_blocks, ...) routing/attention
+        captures. ``cross_valid`` masks encoder padding per row (enc-dec
+        slots prefilled from ragged sources)."""
         cfg = self.cfg
+        pos = jnp.asarray(pos)
         x = jnp.take(params["embed"], tokens, axis=0)
         if cfg.pos_embed == "learned":
-            x = x + jax.lax.dynamic_slice_in_dim(params["pos_table"],
-                                                 pos, 1, axis=0)
+            if pos.ndim == 1:      # per-slot positions: (B,) -> (B, 1, d)
+                x = x + jnp.take(params["pos_table"], pos, axis=0)[:, None]
+            else:
+                x = x + jax.lax.dynamic_slice_in_dim(params["pos_table"],
+                                                     pos, 1, axis=0)
         shared = params["shared"]
 
         def body(h, xs):
             blk_params, blk_cache = xs
-            new_caches = {}
+            new_caches, caps = {}, {}
             for p, spec in enumerate(cfg.pattern):
-                h, nc = B.block_decode_step(
+                h, nc, cap = B.block_decode_step(
                     blk_params[f"pos{p}"], shared, cfg, spec, h,
-                    blk_cache[f"pos{p}"], pos=pos,
+                    blk_cache[f"pos{p}"], pos=pos, capture=capture,
+                    cross_valid=cross_valid,
                     moe_ffn_fn=self.moe_ffn_fn,
                     moe_layer_fn=self.moe_layer_fn,
                     dense_threshold=self.decode_dense_threshold)
                 new_caches[f"pos{p}"] = nc
-            return h, new_caches
+                caps[f"pos{p}"] = cap
+            return h, (new_caches, caps)
 
-        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x, (new_cache, caps) = jax.lax.scan(body, x,
+                                            (params["blocks"], cache))
         x = apply_norm(cfg.norm, params["final_norm"], x)
         logits = x @ (params["embed"].T if cfg.tie_embeddings
                       else params["lm_head"])
+        if capture:
+            return logits, new_cache, caps
         return logits, new_cache

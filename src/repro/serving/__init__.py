@@ -1,1 +1,5 @@
-from repro.serving.engine import ServingEngine, Request  # noqa: F401
+from repro.serving.engine import ServingEngine                  # noqa: F401
+from repro.serving.kv_slots import SlotKVCache                  # noqa: F401
+from repro.serving.scheduler import (Request, RequestState,     # noqa: F401
+                                     SlotScheduler)
+from repro.serving.telemetry import ExpertTelemetry             # noqa: F401

@@ -1,97 +1,285 @@
-"""Batched serving engine: request queue -> prefill -> batched decode.
+"""Continuous-batching serving engine with live expert telemetry.
 
-A deliberately simple (but real) continuous-batching loop over the Model
-API: fixed decode batch, right-padded prefill, KV caches prepared to the
-engine's max length. Greedy sampling. This is the end-to-end driver behind
-``examples/serve_moe_serverless.py``; the serverless deployment planner
-(repro.core) decides expert placement/memory, while this engine supplies
-the actual token-level execution.
+The engine owns a fixed number of decode *slots* backed by one
+slot-batched KV cache (:class:`SlotKVCache`). Each request is prefilled
+alone at its exact prompt length (batch 1 — ragged prompts never see pad
+tokens or pad attention), scattered into a free slot, and then decoded in
+lock-step with every other live slot at its OWN position (the model's
+vector-``pos`` decode path). Queued requests are admitted *mid-stream*
+whenever a slot frees up — short requests finishing early immediately
+yield capacity, unlike the old fixed-batch drain loop (kept for
+comparison in ``benchmarks/serving_bench.py``).
+
+Completion is EOS-aware (engine-level default and per-request override);
+requests that exhaust ``max_new_tokens`` finish with reason ``"length"``
+and requests cut off by the step budget or KV capacity are explicitly
+marked ``"truncated"``.
+
+When the model has MoE layers, an :class:`ExpertTelemetry` collector
+captures per-layer routed-token counts during both prefill and decode
+(the ``capture=True`` model path) — the live feedback signal
+``ServerlessMoERuntime.plan_from_telemetry`` re-plans deployment from.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
 from repro.models import Model
 from repro.models.frontends import stub_frontend_embeddings
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                 # (S,) int32
-    max_new_tokens: int = 16
-    output: List[int] = field(default_factory=list)
-    done: bool = False
+from repro.serving.kv_slots import SlotKVCache
+from repro.serving.scheduler import Request, RequestState, SlotScheduler
+from repro.serving.telemetry import ExpertTelemetry
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_len: int = 256,
-                 batch_size: int = 4):
+                 batch_size: int = 4, eos_id: Optional[int] = None,
+                 collect_telemetry: bool = True, prompt_bucket: int = 8):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.max_len = max_len
-        self.batch_size = batch_size
-        self.queue: Deque[Request] = deque()
-        self._decode = jax.jit(model.decode_step)
-        self._uid = 0
+        self.batch_size = batch_size          # == number of decode slots
+        self.num_slots = batch_size
+        self.eos_id = eos_id
+        self.scheduler = SlotScheduler(self.num_slots)
+        self.kv = SlotKVCache(model, self.num_slots, max_len)
+        moe = self.cfg.moe
+        self.telemetry: Optional[ExpertTelemetry] = (
+            ExpertTelemetry(self.cfg.num_layers, moe.num_experts,
+                            self.cfg.vocab_size, len(self.cfg.pattern))
+            if collect_telemetry and moe is not None else None)
+        self._capture = self.telemetry is not None
+        self._n_front = (self.cfg.frontend_tokens
+                         if self.cfg.frontend == "vision_stub" else 0)
+        self._enc_dec = self.cfg.is_encoder_decoder
+        # Prompt-length bucketing bounds prefill recompiles (one per bucket,
+        # not one per distinct ragged length). Right-padding is invisible
+        # ONLY for purely-causal full-attention DENSE stacks: causal prefill
+        # never attends forward into pads, and decode's validity mask
+        # excludes pad cache slots until new tokens overwrite them.
+        # Recurrent state (SSM), rolling windows (swa), bidirectional
+        # attention, and encoder-decoder cross caches all absorb pad
+        # tokens — and MoE layers route pads through the capacity-limited
+        # dispatch, where they compete with (and can evict) real tokens —
+        # so all of those prefill at exact length.
+        safe = (self.cfg.causal and not self._enc_dec
+                and self.cfg.moe is None
+                and all(s.mixer == "attn" for s in self.cfg.pattern))
+        self.prompt_bucket = max(1, prompt_bucket) if safe else 1
+        # per-slot decode state (host-side mirrors of the device cache)
+        self.pos = np.zeros(self.num_slots, np.int32)       # next write pos
+        self.cur_tok = np.zeros(self.num_slots, np.int32)   # next input tok
+        self.enc_valid = np.zeros(self.num_slots, np.int32)
+        self.seqs: List[np.ndarray] = [np.zeros(0, np.int64)
+                                       for _ in range(self.num_slots)]
+        self.step_count = 0
+        self._finished: List[Request] = []
+        self._jit_prefill = jax.jit(self._prefill_impl)
+        self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,))
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
-        self._uid += 1
-        req = Request(self._uid, np.asarray(prompt, np.int32),
-                      max_new_tokens)
-        self.queue.append(req)
-        return req
-
-    # ------------------------------------------------------------------ run
-    def _prefill_batch(self, reqs: List[Request]):
-        S = max(len(r.prompt) for r in reqs)
-        B = len(reqs)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = r.prompt    # left-pad
-        kw: Dict[str, Any] = {}
-        n_front = 0
-        if self.cfg.frontend == "vision_stub":
-            kw["frontend"] = stub_frontend_embeddings(self.cfg, B)
-            n_front = self.cfg.frontend_tokens
-        elif self.cfg.frontend == "audio_stub":
-            kw["frontend"] = stub_frontend_embeddings(self.cfg, B)
-        elif self.cfg.is_encoder_decoder:
-            kw["enc_tokens"] = jnp.asarray(toks)
-        logits, cache = self.model.prefill(self.params, jnp.asarray(toks),
-                                           **kw)
+    # ----------------------------------------------------------- jit bodies
+    def _prefill_impl(self, params, toks, frontend, enc_tokens, last_idx):
+        if self._capture:
+            logits, cache, aux = self.model.prefill(
+                params, toks, frontend=frontend, enc_tokens=enc_tokens,
+                capture=True)
+            caps = aux["captures"]
+        else:
+            logits, cache = self.model.prefill(
+                params, toks, frontend=frontend, enc_tokens=enc_tokens)
+            caps = {}
         cache = self.model.prepare_decode_cache(cache, self.max_len)
-        return logits, cache, S + n_front
+        # last REAL token's logits (bucketed prompts are right-padded),
+        # restricted to the valid vocab (the head spans padded_vocab).
+        return logits[:, last_idx, :self.cfg.vocab_size], cache, caps
 
-    def run(self, *, max_steps: int = 64) -> List[Request]:
-        """Serve everything in the queue; returns completed requests."""
-        finished: List[Request] = []
-        while self.queue:
-            batch = [self.queue.popleft()
-                     for _ in range(min(self.batch_size, len(self.queue)))]
-            logits, cache, pos0 = self._prefill_batch(batch)
-            next_tok = jnp.argmax(logits[:, -1], -1)
-            for step in range(max_steps):
-                for i, r in enumerate(batch):
-                    if not r.done:
-                        r.output.append(int(next_tok[i]))
-                        if len(r.output) >= r.max_new_tokens:
-                            r.done = True
-                if all(r.done for r in batch):
-                    break
-                logits, cache = self._decode(
-                    self.params, next_tok[:, None], cache,
-                    jnp.int32(pos0 + step))
-                next_tok = jnp.argmax(logits[:, -1], -1)
-            finished.extend(batch)
-        return finished
+    def _decode_impl(self, params, toks, cache, pos, cross_valid):
+        if self._capture:
+            logits, cache, caps = self.model.decode_step(
+                params, toks, cache, pos, capture=True,
+                cross_valid=cross_valid)
+        else:
+            logits, cache = self.model.decode_step(
+                params, toks, cache, pos, cross_valid=cross_valid)
+            caps = {}
+        # never emit padding-vocab ids: they corrupt telemetry keying and
+        # downstream consumers of Request.output
+        return logits[:, -1, :self.cfg.vocab_size], cache, caps
+
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet admitted to a slot."""
+        return len(self.scheduler.queue)
+
+    # --------------------------------------------------------------- submit
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        prompt = np.asarray(prompt, np.int32).ravel()
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) + self._n_front >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens (+{self._n_front} frontend)"
+                f" does not fit max_len={self.max_len}")
+        if self._enc_dec and self.cfg.encoder is not None:
+            if len(prompt) > self.cfg.encoder.source_len:
+                raise ValueError("prompt exceeds encoder source_len")
+        return self.scheduler.submit(prompt, max_new_tokens, eos_id=eos_id)
+
+    # ------------------------------------------------------------ admission
+    def _prefill_kwargs(self, prompt: np.ndarray) -> Dict[str, Any]:
+        kw: Dict[str, Any] = {"frontend": None, "enc_tokens": None}
+        if self.cfg.frontend in ("vision_stub", "audio_stub"):
+            kw["frontend"] = stub_frontend_embeddings(self.cfg, 1)
+        elif self._enc_dec:
+            kw["enc_tokens"] = jnp.asarray(prompt[None])
+        return kw
+
+    def _sliced_prefill_captures(self, caps, true_len: int) -> Dict:
+        """Trim captures to the real token span so feature extraction sees
+        token-aligned arrays: drop prepended frontend positions (vision
+        models) and right-pad positions (bucketed prompts)."""
+        nf = self._n_front
+        out = {}
+        for key, cap in caps.items():
+            c = dict(cap)
+            if "topk_idx" in c:
+                c["topk_idx"] = c["topk_idx"][:, :, nf:nf + true_len]
+                c["topk_weight"] = c["topk_weight"][:, :, nf:nf + true_len]
+            if "attn_argmax" in c:
+                # causal ⇒ argmax key pos <= query pos, so real queries only
+                # point at real (frontend-offset) positions.
+                c["attn_argmax"] = np.maximum(
+                    c["attn_argmax"][:, :, nf:nf + true_len] - nf, 0)
+            out[key] = c
+        return out
+
+    def _finish(self, req: Request, reason: str) -> None:
+        self.scheduler.finish(req, reason)
+        self._finished.append(req)
+
+    def _admit(self) -> bool:
+        """Prefill queued requests into free slots. Returns True if any."""
+        admitted = False
+        while self.scheduler.queue:
+            free = self.scheduler.free_slots()
+            if not free:
+                break
+            slot = free[0]
+            req = self.scheduler.admit_next(slot, self.step_count)
+            assert req is not None
+            kw = self._prefill_kwargs(req.prompt)
+            true_len = len(req.prompt)
+            bucket = self.prompt_bucket
+            padded = -(-true_len // bucket) * bucket
+            # prefilled cache (padded + frontend) must fit the slot buffer
+            padded = min(padded, self.max_len - self._n_front)
+            toks = np.zeros(padded, np.int32)
+            toks[:true_len] = req.prompt
+            last_logits, cache, caps = self._jit_prefill(
+                self.params, jnp.asarray(toks[None]),
+                kw["frontend"], kw["enc_tokens"],
+                jnp.int32(self._n_front + true_len - 1))
+            self.kv.insert(cache, slot)
+            s_tot = true_len + self._n_front
+            self.pos[slot] = s_tot
+            if self._enc_dec:
+                if self.cfg.frontend == "audio_stub":
+                    self.enc_valid[slot] = self.cfg.frontend_tokens
+                else:
+                    self.enc_valid[slot] = len(req.prompt)
+            if self.telemetry is not None:
+                caps_h = jax.tree.map(np.asarray, caps)
+                self.telemetry.record_prefill(
+                    req.prompt[None],
+                    self._sliced_prefill_captures(caps_h, true_len))
+            first = int(np.asarray(last_logits)[0].argmax())
+            req.first_token_time = time.perf_counter()
+            if req.max_new_tokens < 1:
+                self.seqs[slot] = req.prompt.astype(np.int64)
+                self._finish(req, "length")
+            else:
+                req.output.append(first)
+                self.seqs[slot] = np.append(req.prompt.astype(np.int64),
+                                            first)
+                self.cur_tok[slot] = first
+                eos = req.eos_id if req.eos_id is not None else self.eos_id
+                if eos is not None and first == eos:
+                    self._finish(req, "eos")
+                elif len(req.output) >= req.max_new_tokens:
+                    self._finish(req, "length")
+            admitted = True
+        return admitted
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> bool:
+        """Admit queued requests, then advance every live slot one token.
+
+        Returns False when there was nothing to do."""
+        self._admit()
+        active = [i for i, r in enumerate(self.scheduler.slots)
+                  if r is not None]
+        if not active:
+            return False
+        in_tok = self.cur_tok.copy()
+        in_pos = self.pos.copy()
+        cross_valid = (jnp.asarray(self.enc_valid) if self._enc_dec
+                       else None)
+        logits, cache, caps = self._jit_decode(
+            self.params, jnp.asarray(in_tok[:, None]), self.kv.cache,
+            jnp.asarray(in_pos), cross_valid)
+        self.kv.update(cache)
+        if self.telemetry is not None:
+            caps_h = jax.tree.map(np.asarray, caps)
+            self.telemetry.record_decode(
+                in_tok, in_pos - self._n_front, self.seqs, caps_h, active,
+                n_front=self._n_front)
+        nxt = np.asarray(logits).argmax(-1)
+        for i in active:
+            req = self.scheduler.slots[i]
+            assert req is not None
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.seqs[i] = np.append(self.seqs[i], tok)
+            self.pos[i] += 1
+            self.cur_tok[i] = tok
+            eos = req.eos_id if req.eos_id is not None else self.eos_id
+            if eos is not None and tok == eos:
+                self._finish(req, "eos")
+            elif len(req.output) >= req.max_new_tokens:
+                self._finish(req, "length")
+            elif self.pos[i] >= self.max_len:
+                self._finish(req, "truncated")   # KV capacity exhausted
+        self.step_count += 1
+        return True
+
+    # ------------------------------------------------------------------- run
+    def run(self, *, max_steps: int = 256, on_step=None) -> List[Request]:
+        """Serve until queue and slots drain (or ``max_steps`` decode steps).
+
+        ``on_step(engine, step_index)`` runs after every decode step —
+        submitting new requests from it exercises mid-stream admission.
+        When the step budget runs out, requests still HOLDING SLOTS are
+        finished with ``finish_reason="truncated"``; requests never
+        admitted stay queued (``scheduler.queue``) and are served by the
+        next ``run()`` call. Returns requests finished during this call,
+        in completion order."""
+        mark = len(self._finished)
+        self._admit()      # prefill-only / instant-EOS requests complete here
+        steps = 0
+        while self.scheduler.has_work and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+            if on_step is not None:
+                on_step(self, steps)
+        if self.scheduler.has_work:
+            for req in list(self.scheduler.active()):
+                self._finish(req, "truncated")
+        return self._finished[mark:]

@@ -1,0 +1,109 @@
+"""Slot scheduler for the continuous-batching engine.
+
+Pure bookkeeping, no JAX: a FIFO queue of submitted requests plus a fixed
+set of decode slots. The engine admits queued requests into free slots
+*mid-stream* (between decode steps), so short requests finishing early
+immediately free capacity for waiting ones — the property the old
+fixed-batch drain loop lacked.
+"""
+from __future__ import annotations
+
+import enum
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One generation request and its full lifecycle record."""
+
+    uid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = field(default_factory=list)
+    state: RequestState = RequestState.QUEUED
+    finish_reason: Optional[str] = None   # "eos" | "length" | "truncated"
+    slot: Optional[int] = None
+    admitted_step: Optional[int] = None   # engine step at slot admission
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+    @property
+    def truncated(self) -> bool:
+        return self.finish_reason == "truncated"
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time-to-first-token (prefill emits the first token)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+
+class SlotScheduler:
+    """FIFO admission into a fixed number of decode slots."""
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("need at least one decode slot")
+        self.num_slots = num_slots
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self._uid = 0
+
+    # ------------------------------------------------------------- submit
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        self._uid += 1
+        req = Request(self._uid, np.asarray(prompt, np.int32).ravel(),
+                      max_new_tokens, eos_id=eos_id,
+                      submit_time=time.perf_counter())
+        self.queue.append(req)
+        return req
+
+    # ---------------------------------------------------------- admission
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit_next(self, slot: int, step: int) -> Optional[Request]:
+        """Pop the oldest queued request into ``slot``; None if queue empty."""
+        if not self.queue:
+            return None
+        assert self.slots[slot] is None, f"slot {slot} is occupied"
+        req = self.queue.popleft()
+        req.state = RequestState.RUNNING
+        req.slot = slot
+        req.admitted_step = step
+        self.slots[slot] = req
+        return req
+
+    # ---------------------------------------------------------- lifecycle
+    def finish(self, req: Request, reason: str) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        req.finish_time = time.perf_counter()
+        if req.slot is not None:
+            self.slots[req.slot] = None
+
+    def active(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)

@@ -22,8 +22,8 @@ from repro.distributed.moe_parallel import expert_parallel_moe
 cfg = reduced_config(get_arch("qwen2-moe-a2.7b"))
 cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
     cfg.moe, capacity_factor=8.0))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _mesh_kwargs
+mesh = jax.make_mesh((2, 4), ("data", "model"), **_mesh_kwargs(2))
 model = Model(cfg, expert_pad_multiple=4)
 params = model.init_params(jax.random.PRNGKey(0))
 moe_p = jax.tree.map(lambda a: a[0], params["blocks"]["pos0"])["moe"]

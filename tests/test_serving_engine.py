@@ -1,0 +1,250 @@
+"""Continuous-batching engine: ragged prompts, mid-stream admission,
+EOS/truncation handling, and expert telemetry vs. capture ground truth."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.table import KVTable
+from repro.serving import ServingEngine
+
+from conftest import tiny_model
+
+
+@pytest.fixture(scope="module")
+def gpt2_moe():
+    cfg, model = tiny_model("gpt2-moe")
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in lengths]
+
+
+# ----------------------------------------------------------- ragged prompts
+def test_ragged_prompts_match_solo_decoding(gpt2_moe):
+    """Slot-batched decode of ragged prompts must equal each request decoded
+    alone — per-slot positions/masks leak nothing across slots or pads."""
+    cfg, model, params = gpt2_moe
+    prompts = _prompts(cfg, [3, 7, 5])
+    eng = ServingEngine(model, params, max_len=32, batch_size=3,
+                        collect_telemetry=False)
+    reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    eng.run()
+    for p, r in zip(prompts, reqs):
+        solo = ServingEngine(model, params, max_len=32, batch_size=1,
+                             collect_telemetry=False)
+        sr = solo.submit(p, max_new_tokens=6)
+        solo.run()
+        assert r.output == sr.output, (r.output, sr.output)
+        assert r.finish_reason == "length"
+
+
+def test_moe_models_prefill_exact_length(gpt2_moe):
+    """Bucketed right-padding is unsafe for MoE stacks: pad tokens compete
+    in the capacity-limited expert dispatch and can evict real tokens, so
+    the engine must force exact-length prefill."""
+    cfg, model, params = gpt2_moe
+    eng = ServingEngine(model, params, max_len=32, batch_size=1,
+                        collect_telemetry=False, prompt_bucket=8)
+    assert eng.prompt_bucket == 1
+
+
+def test_bucketed_prefill_matches_exact_for_dense():
+    """For a causal full-attention dense stack, bucket padding must be
+    output-invariant (pads are invisible to causal attention + masked out
+    of the decode cache)."""
+    cfg, model = tiny_model("codeqwen1.5-7b")
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, [3, 9, 14], seed=3)
+    outs = []
+    for bucket in (1, 8):
+        eng = ServingEngine(model, params, max_len=32, batch_size=3,
+                            collect_telemetry=False, prompt_bucket=bucket)
+        assert eng.prompt_bucket == bucket
+        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        outs.append([r.output for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_generated_tokens_stay_in_valid_vocab(gpt2_moe):
+    """The head spans padded_vocab; sampling must be restricted to the
+    valid vocab so outputs (and telemetry keys) stay in range."""
+    cfg, model, params = gpt2_moe
+    eng = ServingEngine(model, params, max_len=32, batch_size=2)
+    for p in _prompts(cfg, [4, 6], seed=4):
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run()
+    for r in done:
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+
+
+# ------------------------------------------------------ mid-stream admission
+def test_mid_stream_admission(gpt2_moe):
+    """A request submitted AFTER run() starts lands in a freed slot and
+    completes within the same run() call."""
+    cfg, model, params = gpt2_moe
+    pa, pb, pc = _prompts(cfg, [4, 4, 6])
+    eng = ServingEngine(model, params, max_len=32, batch_size=2,
+                        collect_telemetry=False)
+    a = eng.submit(pa, max_new_tokens=3)    # finishes early, frees its slot
+    b = eng.submit(pb, max_new_tokens=12)
+    late = {}
+
+    def on_step(engine, step):
+        if step == 1:
+            late["req"] = engine.submit(pc, max_new_tokens=4)
+
+    done = eng.run(on_step=on_step)
+    c = late["req"]
+    assert a.done and b.done and c.done
+    assert c in done
+    assert c.finish_reason == "length" and len(c.output) == 4
+    # admitted mid-stream: after the run started, before the long request
+    # finished (i.e. while decoding was in flight), into slot freed by `a`.
+    assert c.admitted_step is not None and c.admitted_step >= 1
+    assert c.slot == a.slot
+    assert b.finish_time > c.first_token_time
+
+
+# -------------------------------------------------------------- EOS handling
+def test_eos_termination(gpt2_moe):
+    cfg, model, params = gpt2_moe
+    (prompt,) = _prompts(cfg, [5])
+    ref = ServingEngine(model, params, max_len=32, batch_size=1,
+                        collect_telemetry=False)
+    r0 = ref.submit(prompt, max_new_tokens=6)
+    ref.run()
+    assert len(r0.output) == 6
+    eos = r0.output[1]        # make the 2nd generated token the stop token
+
+    eng = ServingEngine(model, params, max_len=32, batch_size=1,
+                        collect_telemetry=False)
+    r = eng.submit(prompt, max_new_tokens=6, eos_id=int(eos))
+    eng.run()
+    assert r.finish_reason == "eos"
+    assert r.output[-1] == eos
+    assert len(r.output) <= 2
+
+
+def test_engine_level_eos_default(gpt2_moe):
+    cfg, model, params = gpt2_moe
+    (prompt,) = _prompts(cfg, [5])
+    ref = ServingEngine(model, params, max_len=32, batch_size=1,
+                        collect_telemetry=False)
+    r0 = ref.submit(prompt, max_new_tokens=6)
+    ref.run()
+    eng = ServingEngine(model, params, max_len=32, batch_size=1,
+                        eos_id=int(r0.output[0]), collect_telemetry=False)
+    r = eng.submit(prompt, max_new_tokens=6)
+    eng.run()
+    assert r.finish_reason == "eos" and len(r.output) == 1
+
+
+# --------------------------------------------------------------- truncation
+def test_truncation_is_explicit(gpt2_moe):
+    """Step-budget and KV-capacity exhaustion are marked, not silent."""
+    cfg, model, params = gpt2_moe
+    (prompt,) = _prompts(cfg, [4])
+    eng = ServingEngine(model, params, max_len=32, batch_size=1,
+                        collect_telemetry=False)
+    r = eng.submit(prompt, max_new_tokens=20)
+    done = eng.run(max_steps=3)
+    assert r in done and r.done
+    assert r.finish_reason == "truncated"
+    assert len(r.output) < 20
+
+    eng2 = ServingEngine(model, params, max_len=8, batch_size=1,
+                         collect_telemetry=False)
+    r2 = eng2.submit(prompt, max_new_tokens=50)
+    eng2.run()
+    assert r2.finish_reason == "truncated"
+    assert len(r2.output) < 50
+
+
+def test_budget_exhaustion_keeps_unadmitted_requests_queued(gpt2_moe):
+    """Only slot-resident requests are truncated by the step budget;
+    never-admitted ones stay queued and are served by the next run()."""
+    cfg, model, params = gpt2_moe
+    p1, p2 = _prompts(cfg, [4, 5])
+    eng = ServingEngine(model, params, max_len=32, batch_size=1,
+                        collect_telemetry=False)
+    a = eng.submit(p1, max_new_tokens=20)
+    b = eng.submit(p2, max_new_tokens=3)
+    done = eng.run(max_steps=2)
+    assert done == [a] and a.finish_reason == "truncated"
+    assert eng.pending == 1 and not b.done
+    done2 = eng.run()
+    assert done2 == [b] and b.finish_reason == "length"
+    assert len(b.output) == 3 and eng.pending == 0
+
+
+# ---------------------------------------------------------------- telemetry
+def test_telemetry_matches_capture_ground_truth():
+    """Engine telemetry on a served token stream == real_demand's
+    capture=True ground truth, and it survives KVTable ingestion."""
+    from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+
+    rc = RuntimeConfig(arch="gpt2-moe", d_model_reduced=64,
+                       vocab_reduced=512, seq_len=12, batch_size=4,
+                       profile_batches=1, learn_batches=1, eval_batches=1)
+    rt = ServerlessMoERuntime(rc)
+    batch = next(rt.corpus.batches(1))["tokens"]          # (4, 12)
+    real = np.sum([rt.real_demand(row[None]) for row in batch], axis=0)
+
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    for row in batch:
+        eng.submit(row, max_new_tokens=0)   # prefill-only: same token stream
+    done = eng.run()
+    assert len(done) == len(batch)
+    tel = eng.telemetry
+    assert tel is not None
+    np.testing.assert_array_equal(tel.demand_matrix(), real)
+
+    # ingestion: per-key counts in the KVTable reproduce the demand matrix
+    table = KVTable(rt.num_layers, rt.num_experts, rt.cfg.vocab_size)
+    n = table.ingest_telemetry(tel)
+    assert n > 0
+    np.testing.assert_array_equal(table.demand_matrix(), real)
+    # flush drains the record buffer but keeps cumulative demand
+    assert table.ingest_telemetry(tel) == 0
+    np.testing.assert_array_equal(tel.demand_matrix(), real)
+
+
+def test_decode_telemetry_counts(gpt2_moe):
+    """Every decoded token contributes top_k routings per MoE layer."""
+    cfg, model, params = gpt2_moe
+    prompts = _prompts(cfg, [4, 6])
+    eng = ServingEngine(model, params, max_len=32, batch_size=2)
+    reqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    eng.run()
+    tel = eng.telemetry
+    k = cfg.moe.top_k
+    n_prompt = sum(len(p) for p in prompts)
+    # first token of each request comes from prefill; the rest are decoded
+    n_decode = sum(len(r.output) - 1 for r in reqs)
+    assert tel.prefill_tokens == n_prompt
+    assert tel.decode_tokens == n_decode
+    assert tel.demand.sum() == (n_prompt + n_decode) * cfg.num_layers * k
+
+
+def test_plan_from_telemetry():
+    """The runtime re-plans deployment from live serving traffic."""
+    from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+
+    rc = RuntimeConfig(arch="gpt2-moe", d_model_reduced=64,
+                       vocab_reduced=512, seq_len=12, batch_size=4,
+                       profile_batches=1, learn_batches=1, eval_batches=1)
+    rt = ServerlessMoERuntime(rc)
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    for row in next(rt.corpus.batches(1))["tokens"]:
+        eng.submit(row, max_new_tokens=4)
+    eng.run()
+    policy = rt.plan_from_telemetry(eng.telemetry)
+    assert policy.replicas.shape == (rt.num_layers, rt.num_experts)
+    assert (policy.replicas >= 1).all()
+    # the ingested table now carries the served traffic
+    assert rt.table.demand_matrix().sum() >= eng.telemetry.demand.sum()
