@@ -28,11 +28,21 @@ def timed(name: str, derived_fn=lambda: "") -> Iterator[None]:
 
 
 def small_runtime(arch: str = "gpt2-moe", *, spec=None, **over):
+    """A reduced-scale ``ServerlessMoERuntime`` (planner selectable via
+    ``planner="ods"|"fixed-N"|...``, see ``repro.plan.planner``)."""
     from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
     kw = dict(arch=arch, profile_batches=4, learn_batches=1, eval_batches=2,
               seq_len=64, batch_size=4)
     kw.update(over)
     return ServerlessMoERuntime(RuntimeConfig(**kw), spec=spec)
+
+
+def plan_with(planner_name: str, demand, prof, spec, *,
+              t_limit_s: float = float("inf"), seed: int = 0, **planner_kw):
+    """Registry-based planning shorthand for benchmarks: name -> plan."""
+    from repro.plan.planner import get_planner
+    return get_planner(planner_name, **planner_kw).plan(
+        demand, prof, spec, t_limit_s=t_limit_s, seed=seed)
 
 
 def paper_regime_spec():

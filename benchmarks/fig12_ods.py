@@ -11,10 +11,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, plan_with
 from repro.core import comm
 from repro.core.costmodel import ModelProfile, PlatformSpec
-from repro.core.deployment import ods, random_policy, solve_fixed_method
 
 SPEC = PlatformSpec()
 PROF = ModelProfile(
@@ -34,12 +33,17 @@ def _demand(seed=0):
 
 
 def run() -> None:
+    from repro.core.deployment import ods
+    from repro.plan.planner import get_planner
+
     d = _demand()
+    planner = get_planner("ods")
     for tput_target in (5, 10, 20, 40):
         t_limit = N_TOKENS / tput_target
         t0 = time.perf_counter()
-        sols = {a: solve_fixed_method(a, d, PROF, SPEC)
-                for a in comm.METHODS}
+        # the per-method exact solutions are shared between the ODS mix
+        # and the single-method baselines (one solve per method)
+        sols = planner.solutions(d, PROF, SPEC)
         pol = ods(sols, d, PROF, SPEC, t_limit_s=t_limit)
         us = (time.perf_counter() - t0) * 1e6
         emit(f"fig12_ods_tput{tput_target}", us,
@@ -49,7 +53,7 @@ def run() -> None:
                              1e12).sum(), a) for a, s in sols.items())
         emit(f"fig12_miqcp_single_tput{tput_target}", us,
              f"cost=${best[0]:.4f};method={best[1]}")
-        rnd = random_policy(d, PROF, SPEC, seed=1)
+        rnd = plan_with("random", d, PROF, SPEC, seed=1)
         emit(f"fig12_random_tput{tput_target}", 0.0,
              f"cost=${rnd.total_cost:.4f}")
 

@@ -1,20 +1,35 @@
-"""Quickstart: the paper's pipeline end-to-end in ~40 lines.
+"""Quickstart: the paper's pipeline end-to-end through the plan API.
 
 Builds a (reduced) GPT2-MoE, profiles token-to-expert routing on the
-synthetic corpus, fits the Bayesian expert predictor (Eq. 1-2), solves
-optimal deployment (3 per-method solvers + ODS, Alg. 1), and simulates the
-billed cost on AWS-Lambda-like serverless functions vs the LambdaML and
-CPU-cluster baselines.
+synthetic corpus, fits the Bayesian expert predictor (Eq. 1-2), plans the
+deployment with the registered ODS planner (3 per-method solvers + Alg. 1)
+into a serializable ``DeploymentPlan``, round-trips the plan through JSON,
+and executes it on the ``SimulatorBackend`` — then compares against the
+LambdaML and CPU-cluster baselines.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--smoke]
+(``--smoke`` shrinks the model/corpus for CI.)
 """
+import argparse
+
 import numpy as np
 
 from repro.core.predictor import ExpertPredictor
 from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+from repro.plan import DeploymentPlan, Workload
 
-rc = RuntimeConfig(arch="gpt2-moe", profile_batches=4, learn_batches=1,
-                   eval_batches=2, seq_len=64, batch_size=4)
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="reduced smoke mode (CI): tiny dims, fewer batches")
+args = ap.parse_args()
+
+if args.smoke:
+    rc = RuntimeConfig(arch="gpt2-moe", profile_batches=2, learn_batches=1,
+                       eval_batches=1, seq_len=32, batch_size=2,
+                       d_model_reduced=64, vocab_reduced=512)
+else:
+    rc = RuntimeConfig(arch="gpt2-moe", profile_batches=4, learn_batches=1,
+                       eval_batches=2, seq_len=64, batch_size=4)
 rt = ServerlessMoERuntime(rc)
 print(f"model: {rt.cfg.name}  ({rt.num_layers} MoE layers x "
       f"{rt.num_experts} experts, top-{rt.top_k})")
@@ -32,13 +47,19 @@ real = rt.real_demand(batch)
 print(f"prediction difference per expert: "
       f"{pred.prediction_difference(demand, real):.2f} tokens")
 
-# 3. optimal deployment (Alg. 1) + serverless simulation
-policy = rt.plan(demand)
-print(f"comm methods per layer: {policy.method}  beta={policy.beta}")
-sim = rt.simulate(policy, [batch])[0]
-print(f"ours:      ${sim.billed_cost:.6f}  {sim.throughput_tps:.1f} tok/s")
+# 3. plan (registered ODS planner, Alg. 1) -> serializable DeploymentPlan
+plan = rt.plan(demand)
+print(f"planner={plan.planner!r} v{plan.version}: methods {plan.method} "
+      f"beta={plan.beta} chunks={plan.chunk_schedule}")
 
-# 4. baselines
+# 4. the plan is the artifact: JSON round-trip, then execute on a backend
+reloaded = DeploymentPlan.from_json(plan.to_json())
+backend = rt.simulator_backend()
+report = backend.execute(reloaded, Workload(batches=[batch]))
+print(f"ours:      ${report.billed_cost:.6f}  "
+      f"{report.throughput_tps:.1f} tok/s  (backend={report.backend})")
+
+# 5. baselines
 out = rt.evaluate_all()
 for k in ("lambdaml", "cpu_cluster"):
     v = out[k]

@@ -1,12 +1,17 @@
 """End-to-end driver: BO-optimized serverless deployment + live serving.
 
 The paper's kind is INFERENCE SERVING, so this is the required end-to-end
-example: (1) the BO framework (Alg. 2) learns the key-value table and the
-deployment policy OFFLINE; (2) the continuous-batching engine serves real
-requests through the same JAX MoE model, collecting live expert-popularity
-telemetry from the traffic it actually routes; (3) the runtime re-plans
-deployment from that telemetry (the online feedback loop) and the
-serverless simulator bills the served batch under both policies.
+example, now phrased entirely in the plan API:
+
+1. ``BOPlanner`` (Alg. 2 behind the ``Planner`` protocol) learns the
+   key-value table offline and emits a serializable ``DeploymentPlan``;
+2. the SAME plan object is executed on both pluggable backends —
+   ``SimulatorBackend`` (predicted-demand billing) and ``ServingBackend``
+   (the continuous-batching engine serves real requests in the plan's
+   chunked scatter-gather rounds, and the measured routing is billed
+   under the plan's comm methods);
+3. the runtime re-plans from the live telemetry and prints the structured
+   plan diff the re-plan emitted.
 
 Run:  PYTHONPATH=src python examples/serve_moe_serverless.py [--requests 6]
 """
@@ -14,8 +19,8 @@ import argparse
 
 import numpy as np
 
-from repro.core.predictor import ExpertPredictor
 from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+from repro.plan import DeploymentPlan, Workload
 from repro.serving import ServingEngine
 
 
@@ -30,49 +35,54 @@ def main() -> None:
                        eval_batches=1, seq_len=64, batch_size=4)
     rt = ServerlessMoERuntime(rc)
 
-    # --- plan the deployment with the BO framework (offline) -------------
-    res = rt.run_bo(Q=40, max_iters=args.bo_iters, seed=0)
-    print(f"BO: {res.iterations} iterations, best billed cost "
-          f"${res.best_cost:.6f} (converged={res.converged})")
-    pred = ExpertPredictor(res.best_table, top_k=rt.top_k).fit()
+    # --- plan the deployment with the BO planner (offline) ---------------
+    plan = rt.plan_bo(Q=40, max_iters=args.bo_iters, seed=0)
+    bo = plan.metadata["bo"]
+    print(f"BO: {bo['iterations']} iterations, best billed cost "
+          f"${bo['best_cost']:.6f} (converged={bo['converged']})")
+    print(f"plan: planner={plan.planner!r} methods {plan.method} "
+          f"chunks {plan.chunk_schedule}")
+    plan = DeploymentPlan.from_json(plan.to_json())   # the wire artifact
 
-    # --- serve real requests through the continuous-batching engine ------
-    eng = ServingEngine(rt.model, rt.params, max_len=128, batch_size=4)
+    # --- build the live workload -----------------------------------------
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        eng.submit(rng.integers(0, rt.cfg.vocab_size,
-                                size=int(rng.integers(8, 17))),
-                   max_new_tokens=8)
-    done = eng.run()
-    ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
-    print(f"served {len(done)} requests "
-          f"(reasons: {[r.finish_reason for r in done]}); "
-          f"mean TTFT {1e3 * float(np.mean(ttfts)):.1f}ms; "
-          f"sample output tokens: {done[0].output}")
+    prompts = [rng.integers(0, rt.cfg.vocab_size,
+                            size=int(rng.integers(8, 17)))
+               for _ in range(args.requests)]
+    workload = Workload(batches=prompts, max_new_tokens=8)
 
-    # --- close the loop: re-plan deployment from live telemetry ----------
+    # --- execute the SAME plan on both backends --------------------------
+    eng = ServingEngine(rt.model, rt.params, max_len=128, batch_size=4)
+    serving = rt.serving_backend(eng)
+    live = serving.execute(plan, workload)
+    print(f"serving backend: billed ${live.billed_cost:.6f} for "
+          f"{live.num_tokens} served tokens in "
+          f"{len(live.extras['dispatch_rounds'])} dispatch rounds "
+          f"(chunk={live.extras['chunk_tokens']}); "
+          f"mean TTFT {1e3 * live.extras['mean_ttft_s']:.1f}ms; "
+          f"reasons {live.extras['finish_reasons']}")
+
+    sim = rt.simulator_backend()
+    offline = sim.execute(plan, Workload(
+        batches=[np.concatenate([p, np.asarray(r.output)]).astype(np.int32)
+                 [None] for p, r in zip(prompts, serving.last_requests)]))
+    print(f"simulator backend (same plan object): billed "
+          f"${offline.billed_cost:.6f} "
+          f"({offline.throughput_tps:.1f} tok/s)")
+
+    # --- close the loop: re-plan from live telemetry + emit the diff -----
     tel = eng.telemetry
     assert tel is not None
     print(f"telemetry: {tel.prefill_tokens} prefill + {tel.decode_tokens} "
           f"decoded tokens across {rt.num_layers} MoE layers")
-    live_policy = rt.plan_from_telemetry(tel)
-    print(f"re-planned from live traffic: methods {live_policy.method}; "
-          f"replicas (layer 0): {live_policy.replicas[0]}")
-
-    # --- bill the served traffic under offline-vs-live policies ----------
-    # ragged sequences are predicted/simulated individually — padding them
-    # into one rectangle would bill pad positions as real traffic
-    served = [np.concatenate([r.prompt, r.output]).astype(np.int32)[None]
-              for r in done]
-    demand_off = np.sum([pred.predict_demand(s) for s in served], axis=0)
-    offline_policy = rt.plan(demand_off)
-    for name, policy in [("offline BO plan", offline_policy),
-                         ("live-telemetry plan", live_policy)]:
-        sims = rt.simulate(policy, served)
-        print(f"{name}: billed ${sum(s.billed_cost for s in sims):.6f} "
-              f"({float(np.mean([s.throughput_tps for s in sims])):.1f} "
-              f"tok/s, SLO latency "
-              f"{sum(s.latency_s for s in sims):.1f}s)")
+    live_plan = rt.plan_from_telemetry(tel)
+    diff = live_plan.metadata["replan_diff"]
+    print(f"re-planned from live traffic: methods {live_plan.method}; "
+          f"replicas (layer 0): {live_plan.replicas[0]}")
+    print(f"plan diff: {diff['replicas_changed']} replica cells changed "
+          f"(+{diff['replicas_added']}/-{diff['replicas_removed']}), "
+          f"{len(diff['method_changes'])} method changes, "
+          f"cost delta ${diff['cost_delta']:+.6f}")
 
 
 if __name__ == "__main__":

@@ -4,12 +4,68 @@ Pipeline: profile routing -> Bayesian expert-selection prediction (Eq. 1-2)
 -> comm-design time models (Eq. 3-11) -> per-method deployment solver + ODS
 (Alg. 1) -> BO with multi-dimensional epsilon-greedy search (Alg. 2), with
 the serverless simulator standing in for AWS Lambda.
+
+Planning and execution speak the ``repro.plan`` API: planners produce a
+serializable ``DeploymentPlan``, execution backends return a common
+``ExecutionReport`` — both re-exported here (lazily, since the plan
+modules import this package's solvers). ``ServerlessMoERuntime``
+(``repro.core.runtime``) composes the stages around a real JAX model but
+is NOT imported here to keep this package importable without JAX warmup.
 """
-from repro.core.costmodel import (CPUClusterSpec, ModelProfile,  # noqa: F401
-                                  PlatformSpec)
-from repro.core.table import KVTable  # noqa: F401
-from repro.core.predictor import ExpertPredictor  # noqa: F401
-from repro.core.deployment import (DeploymentPolicy, ods,  # noqa: F401
+from typing import TYPE_CHECKING
+
+from repro.core.bo import BOOptimizer, BOResult, EvalOutcome
+from repro.core.costmodel import CPUClusterSpec, ModelProfile, PlatformSpec
+from repro.core.deployment import (DeploymentPolicy, MethodSolution,
+                                   lambdaml_policy, ods, random_policy,
                                    solve_fixed_method)
-from repro.core.simulator import ServerlessSimulator  # noqa: F401
-from repro.core.bo import BOOptimizer  # noqa: F401
+from repro.core.predictor import ExpertPredictor
+from repro.core.simulator import (ServerlessSimulator, SimResult,
+                                  cpu_cluster_result)
+from repro.core.table import KVTable
+# DeploymentPlan et al. come from the dependency-light schema module; the
+# planner registry and backends are re-exported lazily below (they import
+# repro.core themselves, so an eager import here would be circular).
+from repro.plan.schema import (DeploymentPlan, ExecutionReport, Workload,
+                               plan_diff)
+
+__all__ = [
+    # cost/platform models
+    "CPUClusterSpec", "ModelProfile", "PlatformSpec",
+    # profiling + prediction
+    "KVTable", "ExpertPredictor",
+    # deployment solvers (Alg. 1)
+    "MethodSolution", "DeploymentPolicy", "ods", "solve_fixed_method",
+    "lambdaml_policy", "random_policy",
+    # simulation + BO (Alg. 2)
+    "ServerlessSimulator", "SimResult", "cpu_cluster_result",
+    "BOOptimizer", "BOResult", "EvalOutcome",
+    # plan API
+    "DeploymentPlan", "ExecutionReport", "Workload", "plan_diff",
+    "Planner", "get_planner", "register_planner", "available_planners",
+    "ExecutionBackend", "SimulatorBackend",
+]
+
+# resolved through repro.plan's own lazy loader so the name->module map
+# lives in exactly one place (repro/plan/__init__.py)
+_PLAN_EXPORTS = frozenset({
+    "Planner", "get_planner", "register_planner", "available_planners",
+    "ExecutionBackend", "SimulatorBackend",
+})
+
+if TYPE_CHECKING:   # pragma: no cover — static-analysis-only eager imports
+    from repro.plan.backends import (ExecutionBackend,  # noqa: F401
+                                     SimulatorBackend)
+    from repro.plan.planner import (Planner, available_planners,  # noqa: F401
+                                    get_planner, register_planner)
+
+
+def __getattr__(name: str):
+    if name in _PLAN_EXPORTS:
+        import importlib
+        return getattr(importlib.import_module("repro.plan"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

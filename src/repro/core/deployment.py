@@ -23,8 +23,13 @@ import numpy as np
 
 from repro.core import comm
 from repro.core.costmodel import MB, ModelProfile, PlatformSpec
+from repro.plan.schema import DeploymentPlan
 
 INF = float("inf")
+
+# The deployment artifact is the serializable DeploymentPlan from
+# repro.plan.schema; DeploymentPolicy remains as the historical alias.
+DeploymentPolicy = DeploymentPlan
 
 
 @dataclass
@@ -38,28 +43,6 @@ class MethodSolution:
     layer_cost: np.ndarray    # (L,) c_{a,e}
     layer_latency: np.ndarray  # (L,) t^lat_{a,e}
     feasible: np.ndarray      # (L,) bool
-
-
-@dataclass
-class DeploymentPolicy:
-    """The deployed configuration of every MoE layer."""
-
-    method: np.ndarray        # (L,) int in {1,2,3}
-    beta: int
-    mem_mb: np.ndarray        # (L, E)
-    replicas: np.ndarray      # (L, E)
-    demand: np.ndarray        # (L, E) predicted token counts d_{e,i}
-    layer_cost: np.ndarray    # (L,) planner's cost estimate
-    layer_latency: np.ndarray  # (L,)
-    meets_slo: bool = True
-
-    @property
-    def total_cost(self) -> float:
-        return float(self.layer_cost.sum())
-
-    @property
-    def total_latency(self) -> float:
-        return float(self.layer_latency.sum())
 
 
 def _per_expert_rep_time(method: int, r: np.ndarray, t_cal: np.ndarray,
@@ -211,10 +194,10 @@ def _mk_policy(a_hat, solutions, demand, cost, lat, *, meets_slo):
         t[e] = lat[a_hat[e], e]
         if a_hat[e] + 1 == 1:
             beta = sol.beta
-    return DeploymentPolicy(
+    return DeploymentPlan(
         method=a_hat + 1, beta=beta, mem_mb=mem, replicas=rep,
         demand=np.asarray(demand, float), layer_cost=c, layer_latency=t,
-        meets_slo=meets_slo)
+        meets_slo=meets_slo, planner="ods")
 
 
 # ---------------------------------------------------------------------------
@@ -234,9 +217,10 @@ def lambdaml_policy(demand: np.ndarray, prof: ModelProfile,
                                  1, prof, spec)
         cost[e] = comm.layer_billed_cost(times, mem[e], spec)
         lat[e] = times.t_latency
-    return DeploymentPolicy(method=np.full(L, 2), beta=1, mem_mb=mem,
-                            replicas=rep, demand=np.asarray(demand, float),
-                            layer_cost=cost, layer_latency=lat)
+    return DeploymentPlan(method=np.full(L, 2), beta=1, mem_mb=mem,
+                          replicas=rep, demand=np.asarray(demand, float),
+                          layer_cost=cost, layer_latency=lat,
+                          planner="lambdaml")
 
 
 def random_policy(demand: np.ndarray, prof: ModelProfile,
@@ -259,6 +243,7 @@ def random_policy(demand: np.ndarray, prof: ModelProfile,
                                      mem[e], 1, prof, spec)
         cost[e] = comm.layer_billed_cost(times, mem[e], spec)
         lat[e] = times.t_latency
-    return DeploymentPolicy(method=methods, beta=8, mem_mb=mem, replicas=rep,
-                            demand=np.asarray(demand, float),
-                            layer_cost=cost, layer_latency=lat)
+    return DeploymentPlan(method=methods, beta=8, mem_mb=mem, replicas=rep,
+                          demand=np.asarray(demand, float),
+                          layer_cost=cost, layer_latency=lat,
+                          planner="random")

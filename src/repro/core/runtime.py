@@ -1,11 +1,16 @@
-"""End-to-end serverless-MoE runtime (DESIGN.md §3).
+"""End-to-end serverless-MoE runtime facade (DESIGN.md §3).
 
-Ties a real JAX MoE model to the paper's pipeline:
+A thin composition of the plan API's stages around a real JAX MoE model:
 
     corpus -> model.forward(capture=True) -> routing ground truth + token
     features -> KVTable profiling -> ExpertPredictor (Eq. 1-2) ->
-    solve_fixed_method x3 + ODS (Alg. 1) -> feedback replication ->
-    ServerlessSimulator (billed cost / latency / violations) -> BO (Alg. 2)
+    Planner.plan (registry: ODS / fixed-method / baselines, Alg. 1) ->
+    DeploymentPlan -> ExecutionBackend.execute (simulator or live
+    serving) -> ExecutionReport feedback -> BO (Alg. 2)
+
+The runtime owns model/corpus/table state and wires the protocols
+together; planning strategies live in ``repro.plan.planner`` and
+execution targets in ``repro.plan.backends``.
 
 Models run at reduced dimensions on CPU (this box has one core); the
 ModelProfile scales compute/param/activation quantities back to the FULL
@@ -27,15 +32,16 @@ from repro.core import comm
 from repro.core.bo import BOOptimizer, BOResult, EvalOutcome
 from repro.core.costmodel import (CPUClusterSpec, ModelProfile,
                                   PlatformSpec)
-from repro.core.deployment import (DeploymentPolicy, lambdaml_policy, ods,
-                                   random_policy, solve_fixed_method)
 from repro.core.features import extract_features
 from repro.core.predictor import ExpertPredictor
-from repro.core.simulator import (ServerlessSimulator, SimResult,
-                                  cpu_cluster_result)
+from repro.core.simulator import cpu_cluster_result
 from repro.core.table import KVTable
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import Model
+from repro.plan.backends import ServingBackend, SimulatorBackend
+from repro.plan.planner import BOPlanner, Planner, get_planner
+from repro.plan.schema import (DeploymentPlan, ExecutionReport, Workload,
+                               plan_diff)
 
 
 @dataclass
@@ -53,6 +59,7 @@ class RuntimeConfig:
     seed: int = 0
     jitter: float = 0.0
     demand_mode: str = "expected"       # "map" (Eq. 2) | "expected" (ours)
+    planner: str = "ods"                # registry name (repro.plan.planner)
     variant_experts: int = 0            # override expert count (Fig. 10)
     variant_top_k: int = 0              # override routing top-k (Fig. 10)
 
@@ -175,6 +182,8 @@ class ServerlessMoERuntime:
                 lambda p, t: self.model.forward(p, t, capture=True)[1])
         self.table = KVTable(self.num_layers, self.num_experts,
                              cfg.vocab_size)
+        self.planner: Planner = get_planner(rc.planner)
+        self.last_plan: Optional[DeploymentPlan] = None
         self._profiled = False
         self._demand_cache: Dict[int, np.ndarray] = {}
 
@@ -241,11 +250,36 @@ class ServerlessMoERuntime:
                 self.corpus.batches(self.rc.eval_batches, start=start)]
 
     # ----------------------------------------------------------- deployment
-    def plan(self, demand_pred: np.ndarray) -> DeploymentPolicy:
-        sols = {a: solve_fixed_method(a, demand_pred, self.profile,
-                                      self.spec) for a in comm.METHODS}
-        return ods(sols, demand_pred, self.profile, self.spec,
-                   t_limit_s=self.rc.slo_s)
+    def _plan(self, demand_pred: np.ndarray) -> DeploymentPlan:
+        """Planner invocation WITHOUT recording: internal sweeps (BO
+        trials, baseline evaluations) must not clobber ``last_plan``,
+        which tracks the plan actually handed out for deployment."""
+        return self.planner.plan(demand_pred, self.profile, self.spec,
+                                 t_limit_s=self.rc.slo_s, seed=self.rc.seed)
+
+    def plan(self, demand_pred: np.ndarray) -> DeploymentPlan:
+        """Run the configured planner; remembers the plan for diffing."""
+        p = self._plan(demand_pred)
+        self.last_plan = p
+        return p
+
+    # ------------------------------------------------------------- backends
+    def simulator_backend(self, *, seed: Optional[int] = None,
+                          jitter: Optional[float] = None) -> SimulatorBackend:
+        """Simulator execution backend bound to this runtime's ground-truth
+        routing (``real_demand``)."""
+        return SimulatorBackend(
+            self.profile, self.spec,
+            jitter=self.rc.jitter if jitter is None else jitter,
+            seed=self.rc.seed if seed is None else seed,
+            demand_fn=self.real_demand)
+
+    def serving_backend(self, engine, **kw) -> ServingBackend:
+        """Live-serving execution backend around a ``ServingEngine`` that
+        runs this runtime's model."""
+        kw.setdefault("jitter", self.rc.jitter)
+        kw.setdefault("seed", self.rc.seed)
+        return ServingBackend(engine, self.profile, self.spec, **kw)
 
     # -------------------------------------------------- live serving feedback
     def ingest_telemetry(self, telemetry) -> KVTable:
@@ -255,30 +289,37 @@ class ServerlessMoERuntime:
         return self.table
 
     def plan_from_telemetry(self, telemetry, *,
-                            mode: str = "measured") -> DeploymentPolicy:
+                            mode: str = "measured") -> DeploymentPlan:
         """Re-plan deployment from live serving traffic (closes the paper's
         profile -> predict -> plan loop online).
 
         ``mode="measured"`` plans directly on the telemetry's observed
         (L, E) routed-token counts; ``mode="predicted"`` first ingests the
         observations into the KV table and plans on the refreshed
-        predictor's demand estimate over the served token stream.
+        predictor's demand estimate over the served token stream. The
+        returned plan carries a structured diff against the previous plan
+        (``plan.metadata["replan_diff"]``) when one exists.
         """
+        prev = self.last_plan
         if mode == "measured":
             self.ingest_telemetry(telemetry)
-            return self.plan(telemetry.demand_matrix())
-        if mode != "predicted":
+            plan = self.plan(telemetry.demand_matrix())
+        elif mode == "predicted":
+            self.ingest_telemetry(telemetry)
+            pred = ExpertPredictor(self.table, top_k=self.top_k).fit()
+            demand = pred.predict_demand(telemetry.served_token_stream(),
+                                         mode=self.demand_mode)
+            plan = self.plan(demand)
+        else:
             raise ValueError(f"unknown mode {mode!r}")
-        self.ingest_telemetry(telemetry)
-        pred = ExpertPredictor(self.table, top_k=self.top_k).fit()
-        demand = pred.predict_demand(telemetry.served_token_stream(),
-                                     mode=self.demand_mode)
-        return self.plan(demand)
+        if prev is not None:
+            plan.metadata["replan_diff"] = plan_diff(prev, plan)
+        return plan
 
-    def feedback_replication(self, policy: DeploymentPolicy,
+    def feedback_replication(self, policy: DeploymentPlan,
                              real: np.ndarray,
                              alpha: float = 2.0
-                             ) -> Tuple[DeploymentPolicy, int, np.ndarray]:
+                             ) -> Tuple[DeploymentPlan, int, np.ndarray]:
         """Alg. 2 lines 10-21: adjust replicas from real-vs-predicted error.
 
         Returns (policy', rho_case, problem_token_mask_layerwise)."""
@@ -312,18 +353,17 @@ class ServerlessMoERuntime:
         return new_policy, rho_case, problem
 
     # ------------------------------------------------------------ evaluation
-    def simulate(self, policy: DeploymentPolicy, batches: List[np.ndarray]
-                 ) -> List[SimResult]:
+    def simulate(self, plan: DeploymentPlan, batches: List[np.ndarray]
+                 ) -> List[ExecutionReport]:
         # fresh platform noise per invocation (like real AWS) when jitter>0
         self._sim_calls = getattr(self, "_sim_calls", 0) + 1
-        sim = ServerlessSimulator(
-            self.profile, self.spec, jitter=self.rc.jitter,
+        backend = self.simulator_backend(
             seed=self.rc.seed + 1000 * self._sim_calls)
-        return [sim.run(policy, self.real_demand(b), b.size)
-                for b in batches]
+        return backend.execute_batches(plan, Workload(batches=list(batches)))
 
     def make_eval_fn(self) -> Callable[[KVTable], EvalOutcome]:
-        """The BO black box (one Alg. 2 trial body)."""
+        """The BO black box (one Alg. 2 trial body): predict -> plan via
+        the Planner protocol -> execute via the simulator backend."""
         batches = self.learn_batches()
 
         def eval_fn(table: KVTable) -> EvalOutcome:
@@ -331,7 +371,7 @@ class ServerlessMoERuntime:
             all_tokens = np.concatenate([b.ravel() for b in batches])
             demand_pred = pred.predict_demand(all_tokens,
                                               mode=self.demand_mode)
-            policy = self.plan(demand_pred)
+            policy = self._plan(demand_pred)
             costs = []
             rho_case = 3
             problems: List[np.ndarray] = []
@@ -367,6 +407,26 @@ class ServerlessMoERuntime:
         opt = BOOptimizer(self.table, self.make_eval_fn(), **bo_kwargs)
         return opt.run()
 
+    def bo_planner(self, **bo_kwargs) -> BOPlanner:
+        """Alg. 2 as a registry-compatible ``Planner``: BO-refine the
+        profiled table (each trial planned and executed through the
+        protocols), then plan from the refined predictor over the learn
+        stream."""
+        self.profile_table()
+        tokens = np.concatenate([b.ravel() for b in self.learn_batches()])
+        return BOPlanner(self.table, self.make_eval_fn(),
+                         top_k=self.top_k, demand_mode=self.demand_mode,
+                         tokens=tokens, **bo_kwargs)
+
+    def plan_bo(self, **bo_kwargs) -> DeploymentPlan:
+        """One-call BO deployment: returns the post-BO DeploymentPlan."""
+        planner = self.bo_planner(**bo_kwargs)
+        plan = planner.plan(np.zeros((self.num_layers, self.num_experts)),
+                            self.profile, self.spec,
+                            t_limit_s=self.rc.slo_s, seed=self.rc.seed)
+        self.last_plan = plan
+        return plan
+
     # ----------------------------------------------- paper Fig. 14 baselines
     def evaluate_all(self, *, bo_table: Optional[KVTable] = None
                      ) -> Dict[str, Dict[str, float]]:
@@ -376,7 +436,7 @@ class ServerlessMoERuntime:
         real_total = np.sum([self.real_demand(b) for b in batches], axis=0)
         cluster = CPUClusterSpec()
 
-        def summarize(sims: List[SimResult]) -> Dict[str, float]:
+        def summarize(sims: List[ExecutionReport]) -> Dict[str, float]:
             return {
                 "billed_cost": float(np.sum([s.billed_cost for s in sims])),
                 "throughput_tps": float(np.mean([s.throughput_tps
@@ -387,7 +447,7 @@ class ServerlessMoERuntime:
         out: Dict[str, Dict[str, float]] = {}
 
         def run_policy(name: str, demand: np.ndarray, policy=None):
-            policy = policy or self.plan(demand)
+            policy = policy or self._plan(demand)
             sims = []
             for b in batches:
                 p_j, _, _ = self.feedback_replication(policy,
@@ -412,13 +472,13 @@ class ServerlessMoERuntime:
         run_policy("serverless_lina",
                    lina.predict_demand(all_tokens, mode=self.demand_mode))
         # (4) LambdaML: max memory, no prediction, no replicas
-        out["lambdaml"] = summarize(
-            self.simulate(lambdaml_policy(real_total, self.profile,
-                                          self.spec), batches))
+        out["lambdaml"] = summarize(self.simulate(
+            get_planner("lambdaml").plan(real_total, self.profile,
+                                         self.spec), batches))
         # random deployment (Fig. 12)
-        out["random_policy"] = summarize(
-            self.simulate(random_policy(real_total, self.profile, self.spec,
-                                        seed=self.rc.seed), batches))
+        out["random_policy"] = summarize(self.simulate(
+            get_planner("random").plan(real_total, self.profile, self.spec,
+                                       seed=self.rc.seed), batches))
         # (5)/(6) CPU cluster
         n_tok = int(sum(b.size for b in batches))
         cpu = cpu_cluster_result(self.profile, cluster, real_total, n_tok)

@@ -1,7 +1,7 @@
 """Serverless execution simulator — the ground truth standing in for AWS
 Lambda (DESIGN.md §3).
 
-Given a deployment policy (planned from PREDICTED expert demand) and the
+Given a deployment plan (planned from PREDICTED expert demand) and the
 REAL routing counts observed when the JAX MoE model processes a batch, the
 simulator accounts:
 
@@ -12,31 +12,23 @@ simulator accounts:
 * payload violations under direct transfer (Alg. 2 case (ii));
 * per-layer MoE-E2E latency and end-to-end throughput.
 
+Results come back as the plan API's common ``ExecutionReport``
+(``SimResult`` remains as the historical alias). Pipelined (method-1)
+layers honor the plan's per-layer ``chunk_schedule`` when present,
+falling back to the global ``beta``.
+
 Determinism: jitter is seeded; with ``jitter=0`` results are exact.
 """
 from __future__ import annotations
-
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import comm
 from repro.core.costmodel import MB, CPUClusterSpec, ModelProfile, PlatformSpec
-from repro.core.deployment import DeploymentPolicy
+from repro.plan.schema import DeploymentPlan, ExecutionReport
 
-
-@dataclass
-class SimResult:
-    billed_cost: float                 # total $ for all MoE layers
-    latency_s: float                   # end-to-end inference time
-    throughput_tps: float              # tokens / second
-    layer_cost: np.ndarray             # (L,)
-    layer_latency: np.ndarray          # (L,)
-    mem_overrun: np.ndarray            # (L, E) bool
-    payload_violation: np.ndarray      # (L, E) bool
-    real_demand: np.ndarray            # (L, E)
-    min_mem_required_mb: np.ndarray    # (L, E) M^real
+# Historical name: the simulator's result IS the common execution report.
+SimResult = ExecutionReport
 
 
 class ServerlessSimulator:
@@ -47,11 +39,12 @@ class ServerlessSimulator:
         self.jitter = jitter
         self.rng = np.random.default_rng(seed)
 
-    def run(self, policy: DeploymentPolicy, real_demand: np.ndarray,
-            num_tokens: int) -> SimResult:
+    def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
+            num_tokens: int) -> ExecutionReport:
         prof, spec = self.prof, self.spec
         real_demand = np.asarray(real_demand, float)
         L, E = real_demand.shape
+        chunks = getattr(plan, "chunk_schedule", None)
         layer_cost = np.zeros(L)
         layer_lat = np.zeros(L)
         overrun = np.zeros((L, E), bool)
@@ -59,9 +52,10 @@ class ServerlessSimulator:
         min_mem = np.zeros((L, E))
 
         for e in range(L):
-            a = int(policy.method[e])
-            g = policy.replicas[e].astype(float)
-            mem = policy.mem_mb[e]
+            a = int(plan.method[e])
+            beta = int(chunks[e]) if chunks is not None else plan.beta
+            g = plan.replicas[e].astype(float)
+            mem = plan.mem_mb[e]
             r_real = real_demand[e] / np.maximum(g, 1)
             min_mem[e] = comm.memory_required_mb(r_real, prof)
             overrun[e] = (min_mem[e] > mem) & (real_demand[e] > 0)
@@ -73,7 +67,7 @@ class ServerlessSimulator:
                 # the platform rejects oversized payloads; execution falls
                 # back to storage relay, paying both attempts' head time
                 eff_a = 2
-            times = comm.layer_times(eff_a, r_real, g, mem, policy.beta,
+            times = comm.layer_times(eff_a, r_real, g, mem, beta,
                                      prof, spec)
             t_total = times.t_total.copy()
             t_lat = times.t_latency
@@ -101,7 +95,7 @@ class ServerlessSimulator:
 
         total_lat = (prof.t_head_s + prof.t_tail_s
                      + layer_lat.sum() + L * prof.t_nonmoe_s)
-        return SimResult(
+        return ExecutionReport(
             billed_cost=float(layer_cost.sum()),
             latency_s=float(total_lat),
             throughput_tps=num_tokens / max(total_lat, 1e-9),
@@ -111,12 +105,14 @@ class ServerlessSimulator:
             payload_violation=payload_bad,
             real_demand=real_demand,
             min_mem_required_mb=min_mem,
+            backend="simulator",
+            num_tokens=int(num_tokens),
         )
 
 
 def cpu_cluster_result(prof: ModelProfile, cluster: CPUClusterSpec,
                        real_demand: np.ndarray, num_tokens: int, *,
-                       better_transformer: bool = False) -> SimResult:
+                       better_transformer: bool = False) -> ExecutionReport:
     """Paper baselines (5)/(6): the whole MoE model on a CPU cluster.
 
     All experts of a layer execute concurrently across cores; the cluster
@@ -133,7 +129,7 @@ def cpu_cluster_result(prof: ModelProfile, cluster: CPUClusterSpec,
     cost = cluster.billed_cost(total)
     lc = cluster.billed_cost(per_layer.sum()) * per_layer / \
         max(per_layer.sum(), 1e-9)
-    return SimResult(
+    return ExecutionReport(
         billed_cost=cost, latency_s=total,
         throughput_tps=num_tokens / max(total, 1e-9),
         layer_cost=lc, layer_latency=per_layer,
@@ -141,4 +137,6 @@ def cpu_cluster_result(prof: ModelProfile, cluster: CPUClusterSpec,
         payload_violation=np.zeros((L, E), bool),
         real_demand=real_demand,
         min_mem_required_mb=np.zeros((L, E)),
+        backend="cpu_cluster",
+        num_tokens=int(num_tokens),
     )

@@ -82,6 +82,9 @@ class KVTable:
     # ------------------------------------------------------------- adjustment
     def set_entry(self, layer: int, f1: int, f2: int, f3: int,
                   expert: int, value: float) -> None:
+        if not np.isfinite(value):
+            raise ValueError(f"non-finite table value {value!r} for key "
+                             f"({layer}, {f1}, {f2}, {f3}, {expert})")
         key = int(pack_key(layer, f1, f2, f3, expert))
         if value <= 0:
             self.counts.pop(key, None)
@@ -106,14 +109,25 @@ class KVTable:
         ``telemetry`` is duck-typed (:class:`repro.serving.telemetry
         .ExpertTelemetry`): anything with ``flush_to_table(table)`` that
         updates ``token_freq`` and calls ``add_records``. Returns the
-        number of records ingested."""
-        return telemetry.flush_to_table(self)
+        number of records ingested; an engine that served zero tokens
+        flushes nothing and returns 0 (a valid no-op, not an error)."""
+        if telemetry is None:
+            raise ValueError(
+                "telemetry is None — the serving engine has no expert "
+                "telemetry (dense model or collect_telemetry=False)")
+        return int(telemetry.flush_to_table(self))
 
     def demand_matrix(self) -> np.ndarray:
-        """(num_layers, num_experts) routed-token counts summed over keys."""
+        """(num_layers, num_experts) routed-token counts summed over keys.
+
+        Non-finite counts (corrupted ingest, bad BO adjustments) are
+        dropped rather than propagated into the deployment planner, and
+        an empty table yields an all-zero matrix."""
         d = np.zeros((self.num_layers, self.num_experts))
         keys, vals = self.entries()
         if len(keys):
+            finite = np.isfinite(vals)
+            keys, vals = keys[finite], vals[finite]
             layer, _, _, _, expert = unpack_key(keys)
             np.add.at(d, (layer, expert), vals)
         return d

@@ -25,6 +25,32 @@ from repro.models import Model
 from repro.models.frontends import frontend_token_count
 
 
+def ep_config_for_plan(plan, platform=None) -> Dict[str, Any]:
+    """Map a ``DeploymentPlan``'s comm design onto the expert-parallel
+    ``shard_map`` realization (``repro.distributed.moe_parallel``) and the
+    dry-run variant that lowers it:
+
+    * method 1 (pipelined indirect, degree beta) -> the plan's largest
+      pipeline chunk becomes the lax.scan chunk count ``beta``;
+    * method 3 (direct transfer) -> monolithic all_to_all (``beta=1``)
+      with the platform payload cap as ``max_chunk_bytes``;
+    * method 2 (non-pipelined indirect) -> ``beta=1``, no cap.
+
+    This is the seam through which a planner-produced plan configures a
+    multi-host JAX-mesh execution backend.
+    """
+    method = plan.method
+    beta = 1
+    if (method == 1).any():
+        beta = int(plan.chunk_schedule[method == 1].max())
+    max_chunk_bytes = None
+    if platform is not None and (method == 3).any():
+        max_chunk_bytes = int(platform.payload_bytes)
+    variant = f"ep_beta{beta}" if beta > 1 else "ep"
+    return {"beta": beta, "max_chunk_bytes": max_chunk_bytes,
+            "variant": variant}
+
+
 def applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.supports_long_context:
         return False, ("pure full-attention arch (or 30s-audio decoder): "

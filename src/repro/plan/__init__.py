@@ -1,0 +1,62 @@
+"""Unified planning/execution API: serializable plans, pluggable backends.
+
+``DeploymentPlan`` (the versioned JSON artifact) flows from any
+registered ``Planner`` into any ``ExecutionBackend``; both ends return
+typed objects (``DeploymentPlan`` / ``ExecutionReport``) so planners,
+backends, and the BO loop compose without knowing each other's
+internals.
+
+Attribute access is lazy (PEP 562) so ``repro.core`` and
+``repro.serving`` can each import the pieces they need without cycles.
+"""
+from typing import TYPE_CHECKING
+
+__all__ = [
+    "DeploymentPlan", "ExecutionReport", "Workload", "plan_diff",
+    "PLAN_VERSION",
+    "Planner", "ODSPlanner", "FixedMethodPlanner", "LambdaMLPlanner",
+    "RandomPlanner", "BOPlanner",
+    "register_planner", "get_planner", "available_planners",
+    "ExecutionBackend", "SimulatorBackend", "ServingBackend",
+]
+
+_LOCATIONS = {
+    "DeploymentPlan": "repro.plan.schema",
+    "ExecutionReport": "repro.plan.schema",
+    "Workload": "repro.plan.schema",
+    "plan_diff": "repro.plan.schema",
+    "PLAN_VERSION": "repro.plan.schema",
+    "Planner": "repro.plan.planner",
+    "ODSPlanner": "repro.plan.planner",
+    "FixedMethodPlanner": "repro.plan.planner",
+    "LambdaMLPlanner": "repro.plan.planner",
+    "RandomPlanner": "repro.plan.planner",
+    "BOPlanner": "repro.plan.planner",
+    "register_planner": "repro.plan.planner",
+    "get_planner": "repro.plan.planner",
+    "available_planners": "repro.plan.planner",
+    "ExecutionBackend": "repro.plan.backends",
+    "SimulatorBackend": "repro.plan.backends",
+    "ServingBackend": "repro.plan.backends",
+}
+
+if TYPE_CHECKING:   # pragma: no cover — static-analysis-only eager imports
+    from repro.plan.backends import (ExecutionBackend,  # noqa: F401
+                                     ServingBackend, SimulatorBackend)
+    from repro.plan.planner import (BOPlanner, FixedMethodPlanner,  # noqa: F401
+                                    LambdaMLPlanner, ODSPlanner, Planner,
+                                    RandomPlanner, available_planners,
+                                    get_planner, register_planner)
+    from repro.plan.schema import (PLAN_VERSION, DeploymentPlan,  # noqa: F401
+                                   ExecutionReport, Workload, plan_diff)
+
+
+def __getattr__(name: str):
+    if name in _LOCATIONS:
+        import importlib
+        return getattr(importlib.import_module(_LOCATIONS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

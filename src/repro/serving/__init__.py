@@ -1,5 +1,20 @@
-from repro.serving.engine import ServingEngine                  # noqa: F401
-from repro.serving.kv_slots import SlotKVCache                  # noqa: F401
-from repro.serving.scheduler import (Request, RequestState,     # noqa: F401
-                                     SlotScheduler)
-from repro.serving.telemetry import ExpertTelemetry             # noqa: F401
+"""Continuous-batching serving with live expert telemetry.
+
+``ServingEngine`` decodes ragged requests in lock-step slots;
+``ExpertTelemetry`` records the routing every served token actually
+took; ``ServingBackend`` (the plan API's live execution backend)
+drives the engine under a ``DeploymentPlan``'s chunked scatter-gather
+schedule and bills the measured traffic.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_slots import SlotKVCache
+from repro.serving.scheduler import Request, RequestState, SlotScheduler
+from repro.serving.telemetry import ExpertTelemetry
+# the live-traffic execution backend of the plan API
+from repro.plan.backends import ServingBackend
+
+__all__ = [
+    "ServingEngine", "SlotKVCache",
+    "Request", "RequestState", "SlotScheduler",
+    "ExpertTelemetry", "ServingBackend",
+]

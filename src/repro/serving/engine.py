@@ -260,7 +260,8 @@ class ServingEngine:
         return True
 
     # ------------------------------------------------------------------- run
-    def run(self, *, max_steps: int = 256, on_step=None) -> List[Request]:
+    def run(self, *, max_steps: int = 256, on_step=None,
+            round_tokens: int = 0, on_round=None) -> List[Request]:
         """Serve until queue and slots drain (or ``max_steps`` decode steps).
 
         ``on_step(engine, step_index)`` runs after every decode step —
@@ -269,16 +270,44 @@ class ServingEngine:
         finished with ``finish_reason="truncated"``; requests never
         admitted stay queued (``scheduler.queue``) and are served by the
         next ``run()`` call. Returns requests finished during this call,
-        in completion order."""
+        in completion order.
+
+        ``round_tokens > 0`` segments serving into scatter-gather
+        dispatch rounds (requires telemetry): once at least that many
+        tokens have been served since the round opened, the round closes
+        and ``on_round(engine, {"steps", "tokens"})`` fires — the
+        execution granularity a ``DeploymentPlan``'s pipeline chunk
+        schedule prescribes (``repro.plan.backends.ServingBackend``)."""
+        if round_tokens and self.telemetry is None:
+            raise ValueError("round_tokens requires expert telemetry")
         mark = len(self._finished)
+        round_start = (self.telemetry.total_tokens
+                       if self.telemetry is not None else 0)
+        round_steps = 0
+
+        def _close_round():
+            nonlocal round_start, round_steps
+            info = {"steps": round_steps,
+                    "tokens": int(self.telemetry.total_tokens - round_start)}
+            if on_round is not None:
+                on_round(self, info)
+            round_start = self.telemetry.total_tokens
+            round_steps = 0
+
         self._admit()      # prefill-only / instant-EOS requests complete here
         steps = 0
         while self.scheduler.has_work and steps < max_steps:
             if not self.step():
                 break
             steps += 1
+            round_steps += 1
             if on_step is not None:
                 on_step(self, steps)
+            if round_tokens and \
+                    self.telemetry.total_tokens - round_start >= round_tokens:
+                _close_round()
+        if round_tokens and self.telemetry.total_tokens > round_start:
+            _close_round()     # final partial round
         if self.scheduler.has_work:
             for req in list(self.scheduler.active()):
                 self._finish(req, "truncated")

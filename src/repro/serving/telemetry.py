@@ -115,12 +115,21 @@ class ExpertTelemetry:
 
     # ------------------------------------------------------------- planning
     def demand_matrix(self) -> np.ndarray:
-        """Cumulative (L, E) routed-token counts observed while serving."""
-        return self.demand.copy()
+        """Cumulative (L, E) routed-token counts observed while serving.
+
+        Always finite and all-zero before any traffic, so planners can
+        consume it unconditionally."""
+        return np.nan_to_num(self.demand, copy=True, posinf=0.0,
+                             neginf=0.0)
 
     @property
     def total_tokens(self) -> int:
         return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def is_empty(self) -> bool:
+        """True while zero tokens (prefill or decode) have been served."""
+        return self.total_tokens == 0
 
     def served_token_stream(self) -> np.ndarray:
         """Served tokens with multiplicity (order-free) for the predictor."""
@@ -140,9 +149,18 @@ class ExpertTelemetry:
 
         Updates the table's token-frequency prior and per-key counts, then
         clears the pending record buffer (the cumulative demand matrix is
-        kept). Returns the number of LayerRecords ingested.
+        kept). Returns the number of LayerRecords ingested; with nothing
+        pending (zero served tokens since the last flush) this is a
+        no-op returning 0.
         """
+        if table.vocab_size != self.vocab_size:
+            raise ValueError(
+                f"telemetry vocab ({self.vocab_size}) does not match the "
+                f"table's ({table.vocab_size}); they must profile the "
+                "same tokenizer")
         n = len(self._records)
+        if n == 0 and not self._token_freq.any():
+            return 0
         table.token_freq = table.token_freq + self._token_freq
         table.add_records(self._records)
         self._records.clear()

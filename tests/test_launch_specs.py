@@ -104,3 +104,31 @@ def test_dense_threshold_switches_decode_path():
     lg2, _ = model.decode_step(params, tok, cache, jnp.int32(8))
     np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
                                rtol=1e-4, atol=1e-5)
+
+
+def test_ep_config_for_plan_maps_comm_design_to_shard_map_knobs():
+    """A DeploymentPlan configures the expert-parallel realization: the
+    pipeline chunk drives lax.scan beta, direct transfer brings the
+    payload cap along."""
+    from repro.core.costmodel import PlatformSpec
+    from repro.launch.specs import ep_config_for_plan
+    from repro.plan import DeploymentPlan
+
+    def mk(methods, beta):
+        L, E = len(methods), 2
+        return DeploymentPlan(
+            method=np.array(methods), beta=beta,
+            mem_mb=np.full((L, E), 1024.0), replicas=np.ones((L, E), int),
+            demand=np.zeros((L, E)), layer_cost=np.zeros(L),
+            layer_latency=np.zeros(L))
+
+    spec = PlatformSpec()
+    pipelined = ep_config_for_plan(mk([1, 2, 1], beta=8), spec)
+    assert pipelined == {"beta": 8, "max_chunk_bytes": None,
+                         "variant": "ep_beta8"}
+    direct = ep_config_for_plan(mk([3, 3], beta=1), spec)
+    assert direct["beta"] == 1
+    assert direct["max_chunk_bytes"] == int(spec.payload_bytes)
+    assert direct["variant"] == "ep"
+    storage = ep_config_for_plan(mk([2, 2], beta=1))
+    assert storage == {"beta": 1, "max_chunk_bytes": None, "variant": "ep"}

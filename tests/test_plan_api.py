@@ -1,0 +1,329 @@
+"""The plan API: serializable DeploymentPlan, planner registry parity,
+pluggable execution backends, and empty-telemetry hardening."""
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.deployment import (DeploymentPolicy, ods,
+                                   solve_fixed_method)
+from repro.core.table import KVTable
+from repro.plan import (DeploymentPlan, Workload, available_planners,
+                        get_planner, plan_diff)
+from repro.plan.backends import SimulatorBackend
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+
+def _demand(L=4, E=8, seed=0, scale=400):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _uniform_demand(L=4, E=8, scale=200.0):
+    return np.full((L, E), scale)
+
+
+# ---------------------------------------------------------------------------
+# DeploymentPlan serialization
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip_is_exact():
+    plan = get_planner("ods").plan(_demand(), PROF, SPEC, t_limit_s=1e9)
+    plan.metadata["note"] = {"seed": 0}
+    clone = DeploymentPlan.from_json(plan.to_json())
+    assert clone.version == plan.version
+    assert clone.planner == plan.planner == "ods"
+    assert clone.beta == plan.beta
+    assert clone.meets_slo == plan.meets_slo
+    assert clone.metadata == plan.metadata
+    for f in ("method", "mem_mb", "replicas", "demand", "layer_cost",
+              "layer_latency", "chunk_schedule"):
+        a, b = getattr(plan, f), getattr(clone, f)
+        assert a.dtype == b.dtype, f
+        np.testing.assert_array_equal(a, b, err_msg=f)
+
+
+def test_plan_rejects_newer_schema_version():
+    plan = get_planner("lambdaml").plan(_demand(), PROF, SPEC)
+    d = plan.to_dict()
+    d["version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        DeploymentPlan.from_dict(d)
+
+
+def test_deployment_policy_is_the_plan_class():
+    """The historical name must stay usable (tests, notebooks, pickles)."""
+    assert DeploymentPolicy is DeploymentPlan
+
+
+def test_chunk_schedule_derivation():
+    d = _demand()
+    sols = {a: solve_fixed_method(a, d, PROF, SPEC) for a in comm.METHODS}
+    plan = ods(sols, d, PROF, SPEC, t_limit_s=1e9)
+    expect = np.where(plan.method == 1, max(plan.beta, 1), 1)
+    np.testing.assert_array_equal(plan.chunk_schedule, expect)
+    assert plan.chunk_for_layer(0) == int(expect[0])
+
+
+# ---------------------------------------------------------------------------
+# Planner registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_core_planners_and_rejects_unknown():
+    names = available_planners()
+    for required in ("ods", "fixed-1", "fixed-2", "fixed-3", "lambdaml",
+                     "random", "bo"):
+        assert required in names
+    with pytest.raises(KeyError, match="unknown planner"):
+        get_planner("does-not-exist")
+
+
+def test_registered_ods_matches_direct_solver_calls_on_uniform_demand():
+    """Parity: the registry path must be the same math as calling
+    solve_fixed_method + ods by hand."""
+    d = _uniform_demand()
+    via_registry = get_planner("ods").plan(d, PROF, SPEC, t_limit_s=1e9)
+    sols = {a: solve_fixed_method(a, d, PROF, SPEC) for a in comm.METHODS}
+    direct = ods(sols, d, PROF, SPEC, t_limit_s=1e9)
+    for f in ("method", "mem_mb", "replicas", "layer_cost",
+              "layer_latency", "chunk_schedule"):
+        np.testing.assert_array_equal(getattr(via_registry, f),
+                                      getattr(direct, f), err_msg=f)
+    assert via_registry.beta == direct.beta
+    assert via_registry.total_cost == direct.total_cost
+
+
+@pytest.mark.parametrize("method", comm.METHODS)
+def test_registered_fixed_method_matches_direct_solver(method):
+    d = _uniform_demand()
+    plan = get_planner(f"fixed-{method}").plan(d, PROF, SPEC, t_limit_s=1e9)
+    sol = solve_fixed_method(method, d, PROF, SPEC)
+    assert (plan.method == method).all()
+    assert plan.beta == sol.beta
+    np.testing.assert_array_equal(plan.mem_mb, sol.mem_mb)
+    np.testing.assert_array_equal(plan.replicas, sol.replicas)
+    np.testing.assert_array_equal(plan.layer_cost, sol.layer_cost)
+
+
+# ---------------------------------------------------------------------------
+# SimulatorBackend determinism
+# ---------------------------------------------------------------------------
+
+def test_simulator_backend_bit_identical_after_json_roundtrip():
+    """Acceptance: plan -> JSON -> plan must execute bit-identically at
+    jitter=0."""
+    d = _demand(scale=900)
+    plan = get_planner("ods").plan(d, PROF, SPEC, t_limit_s=1e9)
+    wl = Workload(batches=[np.arange(64).reshape(4, 16)], real_demand=d)
+    backend = SimulatorBackend(PROF, SPEC, jitter=0.0, seed=3)
+    rep1 = backend.execute(plan, wl)
+    rep2 = backend.execute(DeploymentPlan.from_json(plan.to_json()), wl)
+    assert rep1.to_dict() == rep2.to_dict()
+    assert rep1.backend == "simulator"
+    assert rep1.num_tokens == 64
+
+
+def test_simulator_backend_requires_a_demand_source():
+    plan = get_planner("lambdaml").plan(_demand(), PROF, SPEC)
+    backend = SimulatorBackend(PROF, SPEC)
+    with pytest.raises(ValueError, match="real_demand"):
+        backend.execute(plan, Workload(batches=[np.zeros((2, 4), int)]))
+
+
+# ---------------------------------------------------------------------------
+# plan diff
+# ---------------------------------------------------------------------------
+
+def test_plan_diff_reports_structured_changes():
+    d1 = _demand(seed=0)
+    d2 = _demand(seed=1, scale=4000)
+    p1 = get_planner("ods").plan(d1, PROF, SPEC, t_limit_s=1e9)
+    p2 = get_planner("lambdaml").plan(d2, PROF, SPEC)
+    diff = plan_diff(p1, p2)
+    assert diff["planner"] == {"old": "ods", "new": "lambdaml"}
+    assert diff["replicas_changed"] == int(np.sum(p1.replicas
+                                                  != p2.replicas))
+    assert diff["cost_delta"] == pytest.approx(p2.total_cost
+                                               - p1.total_cost)
+    same = plan_diff(p1, p1)
+    assert same["replicas_changed"] == 0 and not same["method_changes"]
+
+
+# ---------------------------------------------------------------------------
+# empty-telemetry hardening (regression)
+# ---------------------------------------------------------------------------
+
+class _FakeEmptyTelemetry:
+    """Telemetry double with zero served tokens (no jax needed)."""
+
+    def __init__(self, vocab_size):
+        self.vocab_size = vocab_size
+
+    def flush_to_table(self, table):
+        return 0
+
+
+def test_table_rejects_none_telemetry_with_clear_error():
+    t = KVTable(num_layers=2, num_experts=4, vocab_size=64)
+    with pytest.raises(ValueError, match="telemetry is None"):
+        t.ingest_telemetry(None)
+
+
+def test_empty_telemetry_ingest_is_a_noop():
+    from repro.serving.telemetry import ExpertTelemetry
+    t = KVTable(num_layers=2, num_experts=4, vocab_size=64)
+    tel = ExpertTelemetry(2, 4, 64, pattern_len=1)
+    assert tel.is_empty
+    assert t.ingest_telemetry(tel) == 0
+    assert len(t) == 0
+    assert t.token_freq.sum() == 0
+    np.testing.assert_array_equal(tel.demand_matrix(), np.zeros((2, 4)))
+
+
+def test_telemetry_vocab_mismatch_is_a_clear_error():
+    from repro.serving.telemetry import ExpertTelemetry
+    t = KVTable(num_layers=2, num_experts=4, vocab_size=64)
+    tel = ExpertTelemetry(2, 4, 128, pattern_len=1)
+    with pytest.raises(ValueError, match="vocab"):
+        t.ingest_telemetry(tel)
+
+
+def test_demand_matrix_drops_nonfinite_counts():
+    """NaN/inf counts (corrupted ingest, bad adjustments) must not reach
+    the planner, where they would poison every layer cost."""
+    t = KVTable(num_layers=1, num_experts=2, vocab_size=8)
+    t.set_entry(0, 1, 0, 1, 0, 5.0)
+    t.counts[12345] = float("nan")      # simulate corruption
+    d = t.demand_matrix()
+    assert np.isfinite(d).all()
+    assert d.sum() == 5.0
+    plan = get_planner("ods").plan(
+        np.tile(d, (PROF.num_moe_layers // d.shape[0] or 1, 4)),
+        PROF, SPEC, t_limit_s=1e9)
+    assert np.isfinite(plan.layer_cost).all()
+
+
+def test_set_entry_rejects_nonfinite_values():
+    t = KVTable(num_layers=1, num_experts=2, vocab_size=8)
+    with pytest.raises(ValueError, match="non-finite"):
+        t.set_entry(0, 1, 0, 1, 0, float("nan"))
+
+
+def test_planner_handles_all_zero_demand():
+    """Zero decoded tokens => all-zero demand matrix must still plan
+    (zero cost, finite everything) for every registered demand planner."""
+    zeros = np.zeros((4, 8))
+    for name in ("ods", "fixed-1", "fixed-2", "fixed-3", "lambdaml",
+                 "random"):
+        plan = get_planner(name).plan(zeros, PROF, SPEC, t_limit_s=1e9)
+        assert np.isfinite(plan.layer_cost).all(), name
+        assert np.isfinite(plan.layer_latency).all(), name
+        assert (plan.replicas >= 1).all(), name
+
+
+# ---------------------------------------------------------------------------
+# live-model backends (jax)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_runtime():
+    from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+    rc = RuntimeConfig(arch="gpt2-moe", d_model_reduced=64,
+                       vocab_reduced=512, seq_len=12, batch_size=2,
+                       profile_batches=1, learn_batches=1, eval_batches=1)
+    return ServerlessMoERuntime(rc)
+
+
+def test_empty_telemetry_replan_stays_finite(tiny_runtime):
+    """Regression: re-planning before ANY traffic was served must yield a
+    finite plan in both modes instead of NaN/zero-division."""
+    from repro.serving import ServingEngine
+    rt = tiny_runtime
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    for mode in ("measured", "predicted"):
+        plan = rt.plan_from_telemetry(eng.telemetry, mode=mode)
+        assert np.isfinite(plan.layer_cost).all(), mode
+        assert np.isfinite(plan.layer_latency).all(), mode
+        assert np.isfinite(plan.demand).all(), mode
+
+
+def test_engine_run_segments_dispatch_rounds(tiny_runtime):
+    from repro.serving import ServingEngine
+    rt = tiny_runtime
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.integers(0, rt.cfg.vocab_size, size=6),
+                   max_new_tokens=5)
+    rounds = []
+    eng.run(round_tokens=8, on_round=lambda e, info: rounds.append(info))
+    tel = eng.telemetry
+    assert len(rounds) >= 2
+    assert sum(r["tokens"] for r in rounds) == tel.total_tokens
+    assert all(r["tokens"] >= 8 for r in rounds[:-1])    # last may be partial
+
+
+def test_round_tokens_requires_telemetry(tiny_runtime):
+    from repro.serving import ServingEngine
+    rt = tiny_runtime
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=1,
+                        collect_telemetry=False)
+    eng.submit(np.arange(1, 5), max_new_tokens=2)
+    with pytest.raises(ValueError, match="telemetry"):
+        eng.run(round_tokens=4)
+
+
+def test_both_backends_consume_the_same_plan_object(tiny_runtime):
+    """Acceptance: one DeploymentPlan object drives the simulator AND the
+    live serving engine; the serving report bills the MEASURED routing
+    under the plan's comm design and chunk schedule."""
+    from repro.core.simulator import ServerlessSimulator
+    from repro.serving import ServingEngine
+    rt = tiny_runtime
+    rt.profile_table()
+    batch = rt.learn_batches()[0]
+    plan = rt.plan(rt.real_demand(batch))
+    plan = DeploymentPlan.from_json(plan.to_json())   # the wire artifact
+
+    sim_rep = rt.simulator_backend().execute(
+        plan, Workload(batches=[batch]))
+    assert sim_rep.backend == "simulator"
+
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    serving = rt.serving_backend(eng)
+    rows = [row for row in batch]
+    live_rep = serving.execute(plan, Workload(batches=rows,
+                                              max_new_tokens=4))
+    assert live_rep.backend == "serving"
+    tel = eng.telemetry
+    # the report billed exactly what the engine measured
+    np.testing.assert_array_equal(live_rep.real_demand, tel.demand_matrix())
+    assert live_rep.num_tokens == tel.total_tokens
+    expect = ServerlessSimulator(rt.profile, rt.spec).run(
+        plan, tel.demand_matrix(), tel.total_tokens)
+    assert live_rep.billed_cost == expect.billed_cost
+    assert live_rep.latency_s == expect.latency_s
+    # the chunk schedule segmented live serving into dispatch rounds
+    rounds = live_rep.extras["dispatch_rounds"]
+    assert rounds and sum(r["tokens"] for r in rounds) == tel.total_tokens
+    assert live_rep.extras["chunk_tokens"] == int(plan.chunk_schedule.max())
+    assert all(r.done for r in serving.last_requests)
+
+
+def test_bo_planner_runs_through_the_protocols(tiny_runtime):
+    """Alg. 2 as a Planner: trials are planned+executed via the protocol
+    seam and the result is a serializable DeploymentPlan."""
+    rt = tiny_runtime
+    plan = rt.plan_bo(Q=8, max_iters=2, seed=0)
+    assert plan.planner == "bo"
+    bo = plan.metadata["bo"]
+    assert bo["iterations"] >= 1 and np.isfinite(bo["best_cost"])
+    clone = DeploymentPlan.from_json(plan.to_json())
+    np.testing.assert_array_equal(clone.replicas, plan.replicas)
