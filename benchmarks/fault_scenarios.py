@@ -1,0 +1,137 @@
+"""Fault-scenario suite: how deployments survive a misbehaving platform.
+
+The paper's evaluation assumes well-behaved Lambda invocations; this
+suite drives the discrete-event simulator's :class:`FaultProfile` knobs
+(cold-start storms, straggler tails, transient failures with retry,
+per-account concurrency caps) and trace-driven traffic (bursty arrivals,
+expert-popularity drift) against ODS plans, reporting:
+
+* cost/latency inflation of each fault regime vs. the ideal platform
+  (`fault_<scenario>` rows);
+* what re-planning from failure feedback buys under drift + bursts:
+  a static stale plan vs. the Alg.-2 feedback loop re-planning per
+  window (`fault_replan_*` rows), including how far the re-planned
+  replication/memory moved from the fault-free plan.
+
+Pure numpy (no JAX model) so the suite runs in seconds.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/run.py --only fault_scenarios
+    PYTHONPATH=src:. python benchmarks/fault_scenarios.py [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.backends import run_plan_over_trace
+from repro.plan.planner import get_planner
+from repro.plan.schema import plan_diff
+from repro.traces import (bursty_arrivals, demand_trace, drift_popularity,
+                          zipf_popularity)
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+SCENARIOS = {
+    "cold_start_storm": FaultProfile(cold_start_prob=0.8, warm_pool=4),
+    "straggler_tail": FaultProfile(straggler_prob=0.15,
+                                   straggler_slowdown=6.0),
+    "transient_failures": FaultProfile(failure_prob=0.25, max_retries=3,
+                                       retry_backoff_s=0.1),
+    "concurrency_capped": FaultProfile(concurrency_limit=4),
+    "the_works": FaultProfile(cold_start_prob=0.5, warm_pool=2,
+                              straggler_prob=0.1, straggler_slowdown=4.0,
+                              failure_prob=0.1, concurrency_limit=8),
+}
+
+
+def _demand(L=4, E=8, seed=0, scale=2000):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _fault_regimes(smoke: bool) -> None:
+    d = _demand(scale=600 if smoke else 2000)
+    plan = get_planner("ods").plan(d, PROF, SPEC, t_limit_s=1e9)
+    n_tok = int(d.sum())
+    base = ServerlessSimulator(PROF, SPEC, seed=7).run(plan, d, n_tok)
+    for name, faults in SCENARIOS.items():
+        t0 = time.perf_counter()
+        rep = ServerlessSimulator(PROF, SPEC, seed=7,
+                                  faults=faults).run(plan, d, n_tok)
+        emit(f"fault_{name}", (time.perf_counter() - t0) * 1e6,
+             f"cost_x={rep.billed_cost / base.billed_cost:.3f} "
+             f"lat_x={rep.latency_s / base.latency_s:.3f} "
+             f"cold={rep.cold_starts} retries={rep.retries} "
+             f"straggled={rep.stragglers} "
+             f"queue_s={rep.queue_delay_s:.2f}")
+
+
+def _drift_replan(smoke: bool) -> None:
+    """Bursty + drifting traffic: static stale plan vs. feedback re-plan.
+
+    Runs in the paper's binding-payload regime (the cap scaled to the
+    bench's token scale, as in ``common.paper_regime_spec``) so bursts
+    push direct-transfer replicas past the payload cap — Alg. 2 case
+    (ii) — and drift makes the stale plan's sizing wrong.
+    """
+    steps = 6 if smoke else 16
+    scale = 200          # quiet-window hot-expert load sits under the cap
+    spec = PlatformSpec(payload_mb=0.4)
+    pop = zipf_popularity(PROF.num_moe_layers, PROF.experts_per_layer,
+                          seed=0)
+    arr = bursty_arrivals(1.0, steps, burst_mult=8.0, seed=1)
+    arr = np.maximum(arr, 1)                     # no dead windows
+    arr[steps // 2] = max(int(arr.max()), 8)     # guarantee one real burst
+    trace = demand_trace(arr, drift_popularity(pop, steps, drift=0.35,
+                                               seed=2),
+                         tokens_per_request=scale)
+    faults = SCENARIOS["the_works"]
+    plan0 = get_planner("ods").plan(trace.windows[0].demand, PROF, spec,
+                                    t_limit_s=1e9)
+
+    def run(replan: bool):
+        out = run_plan_over_trace(
+            plan0, trace,
+            ServerlessSimulator(PROF, spec, seed=7, faults=faults),
+            PROF, spec,
+            plan_fn=(lambda d: get_planner("ods").plan(d, PROF, spec,
+                                                       t_limit_s=1e9))
+            if replan else None)
+        cost = sum(r.billed_cost for r in out["reports"])
+        overruns = sum(int(r.mem_overrun.sum()) for r in out["reports"])
+        return cost, overruns, out["replans"], out["final_plan"]
+
+    t0 = time.perf_counter()
+    static_cost, static_over, _, _ = run(replan=False)
+    replan_cost, replan_over, n_replans, final = run(replan=True)
+    diff = plan_diff(plan0, final)
+    emit("fault_replan_drift", (time.perf_counter() - t0) * 1e6,
+         f"static_cost=${static_cost:.4f} replan_cost=${replan_cost:.4f} "
+         f"overruns {static_over}->{replan_over} replans={n_replans} "
+         f"replicas+={diff['replicas_added']} "
+         f"mem_delta_mb={diff['mem_mb_delta_total']:.0f}")
+
+
+def run(smoke: bool = False) -> None:
+    _fault_regimes(smoke)
+    _drift_replan(smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scales for CI")
+    print("name,us_per_call,derived")
+    run(smoke=ap.parse_args().smoke)

@@ -11,7 +11,11 @@ example, now phrased entirely in the plan API:
    chunked scatter-gather rounds, and the measured routing is billed
    under the plan's comm methods);
 3. the runtime re-plans from the live telemetry and prints the structured
-   plan diff the re-plan emitted.
+   plan diff the re-plan emitted;
+4. the recorded session is replayed as a trace on the fault-injecting
+   discrete-event simulator (cold-start storm) to show what the SAME
+   traffic would have cost on a misbehaving platform, and how the Alg. 2
+   feedback loop would have re-planned.
 
 Run:  PYTHONPATH=src python examples/serve_moe_serverless.py [--requests 6]
 """
@@ -20,6 +24,7 @@ import argparse
 import numpy as np
 
 from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+from repro.core.simulator import FaultProfile
 from repro.plan import DeploymentPlan, Workload
 from repro.serving import ServingEngine
 
@@ -83,6 +88,16 @@ def main() -> None:
           f"(+{diff['replicas_added']}/-{diff['replicas_removed']}), "
           f"{len(diff['method_changes'])} method changes, "
           f"cost delta ${diff['cost_delta']:+.6f}")
+
+    # --- what-if: replay the session on a misbehaving platform -----------
+    storm = FaultProfile(cold_start_prob=0.7, warm_pool=2, failure_prob=0.1)
+    replay = rt.replay_telemetry_trace(tel, num_windows=4, faults=storm)
+    cost = sum(r.billed_cost for r in replay["reports"])
+    cold = sum(r.cold_starts for r in replay["reports"])
+    retries = sum(r.retries for r in replay["reports"])
+    print(f"replayed under a cold-start storm: billed ${cost:.6f} "
+          f"({cold} cold starts, {retries} retries, "
+          f"{replay['replans']} feedback re-plans)")
 
 
 if __name__ == "__main__":

@@ -17,10 +17,11 @@ from typing import TYPE_CHECKING
 from repro.core.bo import BOOptimizer, BOResult, EvalOutcome
 from repro.core.costmodel import CPUClusterSpec, ModelProfile, PlatformSpec
 from repro.core.deployment import (DeploymentPolicy, MethodSolution,
-                                   lambdaml_policy, ods, random_policy,
-                                   solve_fixed_method)
+                                   apply_failure_feedback, lambdaml_policy,
+                                   ods, random_policy, solve_fixed_method)
 from repro.core.predictor import ExpertPredictor
-from repro.core.simulator import (ServerlessSimulator, SimResult,
+from repro.core.simulator import (FaultProfile, InvocationEvent,
+                                  ServerlessSimulator, SimResult,
                                   cpu_cluster_result)
 from repro.core.table import KVTable
 # DeploymentPlan et al. come from the dependency-light schema module; the
@@ -34,11 +35,12 @@ __all__ = [
     "CPUClusterSpec", "ModelProfile", "PlatformSpec",
     # profiling + prediction
     "KVTable", "ExpertPredictor",
-    # deployment solvers (Alg. 1)
+    # deployment solvers (Alg. 1) + failure feedback (Alg. 2 lines 10-21)
     "MethodSolution", "DeploymentPolicy", "ods", "solve_fixed_method",
-    "lambdaml_policy", "random_policy",
+    "lambdaml_policy", "random_policy", "apply_failure_feedback",
     # simulation + BO (Alg. 2)
     "ServerlessSimulator", "SimResult", "cpu_cluster_result",
+    "FaultProfile", "InvocationEvent",
     "BOOptimizer", "BOResult", "EvalOutcome",
     # plan API
     "DeploymentPlan", "ExecutionReport", "Workload", "plan_diff",

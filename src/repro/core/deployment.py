@@ -201,6 +201,50 @@ def _mk_policy(a_hat, solutions, demand, cost, lat, *, meets_slo):
 
 
 # ---------------------------------------------------------------------------
+# Failure feedback (Alg. 2 lines 10-21)
+# ---------------------------------------------------------------------------
+
+def apply_failure_feedback(policy: DeploymentPolicy, real: np.ndarray,
+                           prof: ModelProfile, spec: PlatformSpec,
+                           alpha: float = 2.0
+                           ) -> Tuple[DeploymentPolicy, int, np.ndarray]:
+    """Adjust replica counts from real-vs-predicted routing error.
+
+    Case (i): memory overrun -> multiply replicas until the per-replica
+    working set fits the deployed memory. Case (ii): direct-transfer
+    payload violation -> split until each replica's input fits the cap.
+    Returns ``(policy', rho_case, problem_token_mask_layerwise)`` — the
+    feedback Alg. 2's epsilon decay and limited range L consume.
+    """
+    rep = policy.replicas.copy().astype(int)
+    L, E = real.shape
+    rho_case = 3
+    problem = np.zeros((L, E), bool)
+    for e in range(L):
+        g = np.maximum(rep[e], 1)
+        r_pred = policy.demand[e] / g
+        r_real = real[e] / g
+        err = np.abs(r_pred - r_real) > alpha
+        problem[e] = err
+        m_real = comm.memory_required_mb(r_real, prof)
+        over = (m_real > policy.mem_mb[e]) & (real[e] > 0)
+        if over.any():                                   # case (i)
+            n_new = np.ceil(m_real / np.maximum(policy.mem_mb[e], 1))
+            rep[e] = np.where(over, np.minimum(
+                rep[e] * n_new.astype(int), spec.max_replicas), rep[e])
+            rho_case = min(rho_case, 1)
+        if policy.method[e] == 3:                        # case (ii)
+            bad = r_real * prof.token_in_bytes > spec.payload_bytes
+            if bad.any():
+                n_new = np.ceil(real[e] * prof.token_in_bytes
+                                / spec.payload_bytes)
+                rep[e] = np.where(bad, np.minimum(
+                    n_new.astype(int), spec.max_replicas), rep[e])
+                rho_case = min(rho_case, 2)
+    return replace(policy, replicas=rep), rho_case, problem
+
+
+# ---------------------------------------------------------------------------
 # Baseline policies (paper §V-G)
 # ---------------------------------------------------------------------------
 

@@ -21,24 +21,25 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, get_arch, reduced_config
-from repro.core import comm
 from repro.core.bo import BOOptimizer, BOResult, EvalOutcome
 from repro.core.costmodel import (CPUClusterSpec, ModelProfile,
                                   PlatformSpec)
+from repro.core.deployment import apply_failure_feedback
 from repro.core.features import extract_features
 from repro.core.predictor import ExpertPredictor
-from repro.core.simulator import cpu_cluster_result
+from repro.core.simulator import FaultProfile, cpu_cluster_result
 from repro.core.table import KVTable
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import Model
-from repro.plan.backends import ServingBackend, SimulatorBackend
+from repro.plan.backends import (ServingBackend, SimulatorBackend,
+                                 run_plan_over_trace)
 from repro.plan.planner import BOPlanner, Planner, get_planner
 from repro.plan.schema import (DeploymentPlan, ExecutionReport, Workload,
                                plan_diff)
@@ -265,13 +266,17 @@ class ServerlessMoERuntime:
 
     # ------------------------------------------------------------- backends
     def simulator_backend(self, *, seed: Optional[int] = None,
-                          jitter: Optional[float] = None) -> SimulatorBackend:
+                          jitter: Optional[float] = None,
+                          faults: Optional[FaultProfile] = None
+                          ) -> SimulatorBackend:
         """Simulator execution backend bound to this runtime's ground-truth
-        routing (``real_demand``)."""
+        routing (``real_demand``); ``faults`` turns on the discrete-event
+        engine's fault injection."""
         return SimulatorBackend(
             self.profile, self.spec,
             jitter=self.rc.jitter if jitter is None else jitter,
             seed=self.rc.seed if seed is None else seed,
+            faults=faults,
             demand_fn=self.real_demand)
 
     def serving_backend(self, engine, **kw) -> ServingBackend:
@@ -322,35 +327,65 @@ class ServerlessMoERuntime:
                              ) -> Tuple[DeploymentPlan, int, np.ndarray]:
         """Alg. 2 lines 10-21: adjust replicas from real-vs-predicted error.
 
-        Returns (policy', rho_case, problem_token_mask_layerwise)."""
-        spec, prof = self.spec, self.profile
-        rep = policy.replicas.copy().astype(int)
-        L, E = real.shape
-        rho_case = 3
-        problem = np.zeros((L, E), bool)
-        for e in range(L):
-            g = np.maximum(rep[e], 1)
-            r_pred = policy.demand[e] / g
-            r_real = real[e] / g
-            err = np.abs(r_pred - r_real) > alpha
-            problem[e] = err
-            m_real = comm.memory_required_mb(r_real, prof)
-            over = (m_real > policy.mem_mb[e]) & (real[e] > 0)
-            if over.any():                                   # case (i)
-                n_new = np.ceil(m_real / np.maximum(policy.mem_mb[e], 1))
-                rep[e] = np.where(over, np.minimum(
-                    rep[e] * n_new.astype(int), spec.max_replicas), rep[e])
-                rho_case = min(rho_case, 1)
-            if policy.method[e] == 3:                        # case (ii)
-                bad = r_real * prof.token_in_bytes > spec.payload_bytes
-                if bad.any():
-                    n_new = np.ceil(real[e] * prof.token_in_bytes
-                                    / spec.payload_bytes)
-                    rep[e] = np.where(bad, np.minimum(
-                        n_new.astype(int), spec.max_replicas), rep[e])
-                    rho_case = min(rho_case, 2)
-        new_policy = dataclasses.replace(policy, replicas=rep)
-        return new_policy, rho_case, problem
+        Returns (policy', rho_case, problem_token_mask_layerwise).
+        Delegates to :func:`repro.core.deployment.apply_failure_feedback`
+        (usable without a runtime)."""
+        return apply_failure_feedback(policy, real, self.profile, self.spec,
+                                      alpha=alpha)
+
+    # ------------------------------------------------------------- traces
+    def run_trace(self, trace, *, plan: Optional[DeploymentPlan] = None,
+                  faults: Optional[FaultProfile] = None,
+                  replan: bool = True,
+                  alpha: float = 2.0) -> Dict[str, Any]:
+        """Drive a deployment through a demand trace window-by-window.
+
+        Each :class:`repro.traces.TraceWindow` is executed on the
+        (fault-injecting) simulator backend under the current plan; the
+        window's failure feedback then updates the deployment exactly as
+        Alg. 2 prescribes — ``apply_failure_feedback`` multiplies the
+        replicas of overrun/payload-violating experts (cases i/ii), and
+        when feedback fired, the configured planner (ODS or BO) re-plans
+        from the window's OBSERVED demand — so the deployment tracks
+        popularity drift and traffic bursts instead of serving a stale
+        offline plan. ``replan=False`` pins the initial plan (the
+        static-deployment baseline the paper's fault scenarios are
+        measured against).
+
+        Delegates to :func:`repro.plan.backends.run_plan_over_trace`
+        (which also documents the ``replan_diff`` cost-estimate
+        semantics), wiring the configured planner through
+        :meth:`plan`. Returns ``{"reports", "plans", "final_plan",
+        "replans"}``: one report per window, the plan that served each
+        window, the plan left deployed, and how many windows triggered
+        a re-plan.
+        """
+        if plan is None:
+            first = trace.windows[0].demand
+            plan = self.plan(np.asarray(first, float))
+        backend = self.simulator_backend(faults=faults)
+        out = run_plan_over_trace(
+            plan, trace, backend._make_sim(), self.profile, self.spec,
+            plan_fn=self.plan if replan else None, alpha=alpha)
+        self.last_plan = out["final_plan"]
+        return out
+
+    def replay_telemetry_trace(self, telemetry, *, num_windows: int = 4,
+                               faults: Optional[FaultProfile] = None,
+                               replan: bool = True) -> Dict[str, Any]:
+        """Replay recorded live-serving telemetry as a demand trace through
+        :meth:`run_trace`: the session's measured routing is re-executed
+        window-by-window on the (fault-injecting) simulator, with Alg. 2
+        failure feedback re-planning along the way — `what would this
+        traffic have cost, and how would we have re-planned, under that
+        platform?` The initial plan comes from
+        :meth:`plan_from_telemetry` (so the configured planner — ODS or
+        BO — sees the telemetry first)."""
+        from repro.traces import replay_telemetry
+        plan = self.plan_from_telemetry(telemetry)
+        trace = replay_telemetry(telemetry, num_windows=num_windows)
+        return self.run_trace(trace, plan=plan, faults=faults,
+                              replan=replan)
 
     # ------------------------------------------------------------ evaluation
     def simulate(self, plan: DeploymentPlan, batches: List[np.ndarray]

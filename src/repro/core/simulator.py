@@ -1,25 +1,58 @@
 """Serverless execution simulator — the ground truth standing in for AWS
 Lambda (DESIGN.md §3).
 
+Since PR 3 this is a deterministic DISCRETE-EVENT engine, not a
+closed-form evaluator: every (layer, expert, replica) invocation is an
+event with its own start time, container temperature, attempt history,
+and completion time. A :class:`FaultProfile` injects the behaviors real
+serverless MoE systems are dominated by (PAPERS.md: Remoe, FaaSMoE):
+
+* **warm-container pool** — the first ``warm_pool`` invocations of a
+  layer wave reuse warm containers; beyond the pool each invocation
+  draws cold with probability ``cold_start_prob`` and pays the cold-
+  minus-warm start delta (billed — Lambda bills init time);
+* **stragglers** — with probability ``straggler_prob`` an invocation's
+  successful attempt runs ``straggler_slowdown`` times longer (tail
+  latency amplification);
+* **transient failures** — each attempt fails with probability
+  ``failure_prob``; a failed attempt bills its head phase and retries
+  after exponential backoff (``retry_backoff_s * 2**attempt``), up to
+  ``max_retries`` extra attempts (the last attempt always completes);
+* **per-account concurrency limit** — at most ``concurrency_limit``
+  invocations run at once; excess invocations queue (tracked as
+  ``queue_delay_s``, latency-only — queueing is not billed).
+
 Given a deployment plan (planned from PREDICTED expert demand) and the
-REAL routing counts observed when the JAX MoE model processes a batch, the
-simulator accounts:
+REAL routing counts observed when the JAX MoE model processes a batch,
+the simulator accounts:
 
 * billed GB-seconds per expert function (Eq. 4 evaluated at real counts,
   including memory-overrun penalties: an overrun forces a re-invocation at
   the real working set, billed at the deploy-time memory but with extra
   round-trips — the failure feedback consumed by Alg. 2 case (i));
 * payload violations under direct transfer (Alg. 2 case (ii));
-* per-layer MoE-E2E latency and end-to-end throughput.
+* per-layer MoE-E2E latency and end-to-end throughput;
+* the fault breakdown (cold starts, retries, queue delay, stragglers).
 
 Results come back as the plan API's common ``ExecutionReport``
 (``SimResult`` remains as the historical alias). Pipelined (method-1)
-layers honor the plan's per-layer ``chunk_schedule`` when present,
-falling back to the global ``beta``.
+layers honor the plan's per-layer ``chunk_schedule`` when present; a
+schedule shorter than the layer count falls back to the global ``beta``
+for the missing layers.
 
-Determinism: jitter is seeded; with ``jitter=0`` results are exact.
+Determinism and the ZERO-FAULT BIT-IDENTITY GUARANTEE: jitter and every
+fault draw are seeded (independent streams, so enabling faults never
+perturbs the jitter draws). With every :class:`FaultProfile` knob at
+zero, the event engine contributes exactly-zero extras — billed time,
+latency, and cost are numerically IDENTICAL (repr-equal floats) to the
+pre-event closed-form simulator on the same seed, and with ``jitter=0``
+results are exact.
 """
 from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -31,25 +64,188 @@ from repro.plan.schema import DeploymentPlan, ExecutionReport
 SimResult = ExecutionReport
 
 
+@dataclass(frozen=True)
+class FaultProfile:
+    """Fault-injection knobs for the discrete-event simulator.
+
+    All-zero defaults (the instance ``FaultProfile()``) model the ideal
+    platform of the paper's cost analysis and are guaranteed to
+    reproduce the closed-form results bit-identically.
+    """
+
+    cold_start_prob: float = 0.0   # P(cold) once the warm pool is drained
+    warm_pool: int = 0             # pre-warmed containers per layer wave
+    straggler_prob: float = 0.0    # P(an invocation straggles)
+    straggler_slowdown: float = 4.0   # duration multiplier when straggling
+    failure_prob: float = 0.0      # P(transient failure) per attempt
+    max_retries: int = 3           # extra attempts after a failure
+    retry_backoff_s: float = 0.05  # base backoff; doubles per attempt
+    concurrency_limit: int = 0     # per-account concurrent invocations
+    #                                (0 = unlimited)
+
+    def __post_init__(self):
+        assert 0.0 <= self.cold_start_prob <= 1.0
+        assert 0.0 <= self.straggler_prob <= 1.0
+        assert 0.0 <= self.failure_prob < 1.0
+        assert self.straggler_slowdown >= 1.0
+        assert self.warm_pool >= 0 and self.max_retries >= 0
+        assert self.retry_backoff_s >= 0.0 and self.concurrency_limit >= 0
+
+    @property
+    def enabled(self) -> bool:
+        """True when any knob can perturb the ideal-platform results."""
+        return bool(self.cold_start_prob > 0.0 or self.straggler_prob > 0.0
+                    or self.failure_prob > 0.0 or self.concurrency_limit > 0)
+
+
+@dataclass
+class InvocationEvent:
+    """One serverless function invocation inside a layer wave."""
+
+    layer: int
+    expert: int
+    replica: int
+    start_s: float          # dispatch time == time queued for a
+    #                         concurrency slot (nominal dispatch is t=0)
+    attempts: int           # 1 + transient-failure retries
+    cold: bool
+    straggled: bool
+    extra_billed_s: float   # billed time beyond the fault-free duration
+    end_s: float            # completion time within the wave
+
+
+@dataclass
+class _WaveResult:
+    """Aggregate of one layer's invocation wave (extras vs. fault-free)."""
+
+    extra_billed: np.ndarray        # (E,) billed seconds beyond g * t_rep
+    extra_latency: float            # makespan beyond max(t_rep)
+    cold_starts: int = 0
+    cold_start_s: float = 0.0
+    retries: int = 0
+    retry_s: float = 0.0
+    queue_delay_s: float = 0.0
+    stragglers: int = 0
+    events: List[InvocationEvent] = field(default_factory=list)
+
+
+def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
+                    head_s: float, cold_extra_s: float,
+                    faults: FaultProfile,
+                    rng: np.random.Generator) -> _WaveResult:
+    """Discrete-event simulation of one layer's invocation wave.
+
+    Invocations dispatch in deterministic (expert, replica) order; a
+    min-heap of running-invocation end times models the per-account
+    concurrency limit. Everything is accumulated as EXTRAS relative to
+    the fault-free closed form (start at t=0, run for ``t_rep``), so a
+    zero-knob profile contributes exact float zeros.
+    """
+    E = t_rep.shape[0]
+    res = _WaveResult(extra_billed=np.zeros(E), extra_latency=0.0)
+    busy: List[float] = []       # end times of running invocations
+    warm_left = faults.warm_pool
+    makespan = 0.0
+    base_makespan = 0.0
+    limit = faults.concurrency_limit
+    for expert in range(E):
+        dur = float(t_rep[expert])
+        if dur <= 0.0:
+            continue                      # no tokens routed: never invoked
+        base_makespan = max(base_makespan, dur)
+        for replica in range(int(g[expert])):
+            start = 0.0
+            if limit and len(busy) >= limit:
+                start = heapq.heappop(busy)
+            cold = False
+            if faults.cold_start_prob > 0.0:
+                if warm_left > 0:
+                    warm_left -= 1
+                elif rng.random() < faults.cold_start_prob:
+                    cold = True
+            straggled = bool(
+                faults.straggler_prob > 0.0
+                and rng.random() < faults.straggler_prob)
+            # cold init is paid exactly once, on the very first attempt
+            # (failed or not), and attributed to cold_start_s only —
+            # retry_s carries just the head-phase re-runs, so the
+            # breakdown sums reconcile with the extra billed seconds
+            cold_billed = cold_extra_s if cold else 0.0
+            t = start
+            extra_billed = 0.0
+            attempts = 1
+            if faults.failure_prob > 0.0:
+                while (attempts <= faults.max_retries
+                       and rng.random() < faults.failure_prob):
+                    # transient failure: detected after the head phase,
+                    # billed, then retried after exponential backoff
+                    fail_s = head_s + (cold_billed
+                                       if attempts == 1 else 0.0)
+                    extra_billed += fail_s
+                    res.retries += 1
+                    res.retry_s += head_s
+                    t += fail_s + faults.retry_backoff_s \
+                        * (2.0 ** (attempts - 1))
+                    attempts += 1
+            final = dur
+            if attempts == 1:
+                # the successful attempt is the first: it pays cold init
+                final += cold_billed
+                extra_billed += cold_billed
+            if straggled:
+                slow = dur * (faults.straggler_slowdown - 1.0)
+                final += slow
+                extra_billed += slow
+                res.stragglers += 1
+            if cold:
+                res.cold_starts += 1
+                res.cold_start_s += cold_billed
+            end = t + final
+            if limit:
+                heapq.heappush(busy, end)
+            res.extra_billed[expert] += extra_billed
+            res.queue_delay_s += start
+            makespan = max(makespan, end)
+            res.events.append(InvocationEvent(
+                layer=layer, expert=expert, replica=replica, start_s=start,
+                attempts=attempts, cold=cold, straggled=straggled,
+                extra_billed_s=extra_billed, end_s=end))
+    res.extra_latency = makespan - base_makespan
+    return res
+
+
 class ServerlessSimulator:
     def __init__(self, prof: ModelProfile, spec: PlatformSpec, *,
-                 jitter: float = 0.0, seed: int = 0):
+                 jitter: float = 0.0, seed: int = 0,
+                 faults: Optional[FaultProfile] = None):
         self.prof = prof
         self.spec = spec
         self.jitter = jitter
+        self.faults = faults if faults is not None else FaultProfile()
         self.rng = np.random.default_rng(seed)
+        # independent stream: fault draws must never shift jitter draws
+        self._fault_rng = np.random.default_rng([seed, 0xFA17])
+        self.last_events: List[InvocationEvent] = []
 
     def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
             num_tokens: int) -> ExecutionReport:
-        prof, spec = self.prof, self.spec
+        prof, spec, faults = self.prof, self.spec, self.faults
         real_demand = np.asarray(real_demand, float)
         L, E = real_demand.shape
-        chunks = getattr(plan, "chunk_schedule", None)
+        # single source of truth for per-layer chunks: schedules shorter
+        # than the layer count fall back via full_chunk_schedule()
+        chunks = plan.full_chunk_schedule() \
+            if hasattr(plan, "full_chunk_schedule") else None
         layer_cost = np.zeros(L)
         layer_lat = np.zeros(L)
         overrun = np.zeros((L, E), bool)
         payload_bad = np.zeros((L, E), bool)
         min_mem = np.zeros((L, E))
+        head_s = comm.head_time(prof, spec)
+        cold_extra_s = max(spec.t_cold_start_s - spec.t_warm_start_s, 0.0)
+        self.last_events = []
+        breakdown = dict(cold_starts=0, cold_start_s=0.0, retries=0,
+                         retry_s=0.0, queue_delay_s=0.0, stragglers=0)
 
         for e in range(L):
             a = int(plan.method[e])
@@ -71,6 +267,25 @@ class ServerlessSimulator:
                                      prof, spec)
             t_total = times.t_total.copy()
             t_lat = times.t_latency
+            if faults.enabled:
+                # --- discrete-event invocation wave: faults ride as
+                # extras on top of the closed form. With every knob at
+                # zero the wave would contribute exact float zeros (the
+                # differential tests pin this with an inert-but-enabled
+                # profile), so the ideal-platform hot path — every BO
+                # trial — skips the per-invocation loop entirely.
+                wave = _run_layer_wave(e, times.t_rep, g, head_s,
+                                       cold_extra_s, faults,
+                                       self._fault_rng)
+                t_total = t_total + wave.extra_billed
+                t_lat += wave.extra_latency
+                self.last_events.extend(wave.events)
+                breakdown["cold_starts"] += wave.cold_starts
+                breakdown["cold_start_s"] += wave.cold_start_s
+                breakdown["retries"] += wave.retries
+                breakdown["retry_s"] += wave.retry_s
+                breakdown["queue_delay_s"] += wave.queue_delay_s
+                breakdown["stragglers"] += wave.stragglers
             if overrun[e].any():
                 # overrun functions crash + retry with spilled buffers:
                 # extra head time and 2x storage traffic on retried experts
@@ -107,6 +322,12 @@ class ServerlessSimulator:
             min_mem_required_mb=min_mem,
             backend="simulator",
             num_tokens=int(num_tokens),
+            cold_starts=int(breakdown["cold_starts"]),
+            cold_start_s=float(breakdown["cold_start_s"]),
+            retries=int(breakdown["retries"]),
+            retry_s=float(breakdown["retry_s"]),
+            queue_delay_s=float(breakdown["queue_delay_s"]),
+            stragglers=int(breakdown["stragglers"]),
         )
 
 

@@ -42,7 +42,7 @@ def ep_config_for_plan(plan, platform=None) -> Dict[str, Any]:
     method = plan.method
     beta = 1
     if (method == 1).any():
-        beta = int(plan.chunk_schedule[method == 1].max())
+        beta = int(plan.full_chunk_schedule()[method == 1].max())
     max_chunk_bytes = None
     if platform is not None and (method == 3).any():
         max_chunk_bytes = int(platform.payload_bytes)

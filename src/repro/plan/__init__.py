@@ -18,9 +18,11 @@ __all__ = [
     "RandomPlanner", "BOPlanner",
     "register_planner", "get_planner", "available_planners",
     "ExecutionBackend", "SimulatorBackend", "ServingBackend",
+    "run_plan_over_trace",
 ]
 
 _LOCATIONS = {
+    "run_plan_over_trace": "repro.plan.backends",
     "DeploymentPlan": "repro.plan.schema",
     "ExecutionReport": "repro.plan.schema",
     "Workload": "repro.plan.schema",

@@ -6,7 +6,9 @@ loop (Alg. 2) and the paper's figures consume. Two implementations:
 
 * :class:`SimulatorBackend` — wraps :class:`ServerlessSimulator`: bills
   the plan at the workload's REAL routed-token counts, flags memory
-  overruns / payload violations. Deterministic at ``jitter=0``.
+  overruns / payload violations. Deterministic at ``jitter=0``; an
+  optional :class:`~repro.core.simulator.FaultProfile` injects cold
+  starts, stragglers, transient failures, and concurrency queueing.
 * :class:`ServingBackend` — drives the continuous-batching
   :class:`~repro.serving.engine.ServingEngine`: live requests are
   prefillled/decoded through the real JAX MoE model, decode steps are
@@ -15,19 +17,28 @@ loop (Alg. 2) and the paper's figures consume. Two implementations:
   per-layer comm methods — live traffic follows the planned comm design
   instead of an offline estimate.
 
+Both backends also consume :mod:`repro.traces` traffic:
+``SimulatorBackend.execute_trace`` bills a plan window-by-window over a
+demand :class:`~repro.traces.Trace` (drift, bursts), and
+``ServingBackend.execute_requests`` serves a timed arrival schedule of
+:class:`~repro.traces.TraceRequest` objects through the live engine.
+
 Future backends (real AWS Lambda, a multi-host JAX mesh) implement the
 same two-method surface and plug into the identical runtime seam.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Optional, Protocol, runtime_checkable
+from typing import (Callable, List, Optional, Protocol, Sequence,
+                    runtime_checkable)
 
 import numpy as np
 
 from repro.core.costmodel import ModelProfile, PlatformSpec
-from repro.core.simulator import ServerlessSimulator
-from repro.plan.schema import DeploymentPlan, ExecutionReport, Workload
+from repro.core.deployment import apply_failure_feedback
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.schema import (DeploymentPlan, ExecutionReport, Workload,
+                               plan_diff)
 
 
 @runtime_checkable
@@ -59,6 +70,12 @@ def _merge_reports(reports: List[ExecutionReport], *,
         min_mem_required_mb=np.max([r.min_mem_required_mb for r in reports],
                                    axis=0),
         backend=backend, num_tokens=n_tok,
+        cold_starts=int(sum(r.cold_starts for r in reports)),
+        cold_start_s=float(sum(r.cold_start_s for r in reports)),
+        retries=int(sum(r.retries for r in reports)),
+        retry_s=float(sum(r.retry_s for r in reports)),
+        queue_delay_s=float(sum(r.queue_delay_s for r in reports)),
+        stragglers=int(sum(r.stragglers for r in reports)),
         extras={"num_batches": len(reports)},
     )
 
@@ -75,13 +92,20 @@ class SimulatorBackend:
 
     def __init__(self, profile: ModelProfile, platform: PlatformSpec, *,
                  jitter: float = 0.0, seed: int = 0,
+                 faults: Optional[FaultProfile] = None,
                  demand_fn: Optional[Callable[[np.ndarray], np.ndarray]]
                  = None):
         self.profile = profile
         self.platform = platform
         self.jitter = jitter
         self.seed = seed
+        self.faults = faults
         self.demand_fn = demand_fn
+
+    def _make_sim(self) -> ServerlessSimulator:
+        return ServerlessSimulator(self.profile, self.platform,
+                                   jitter=self.jitter, seed=self.seed,
+                                   faults=self.faults)
 
     def _batch_demand(self, workload: Workload,
                       batch: np.ndarray) -> np.ndarray:
@@ -102,8 +126,7 @@ class SimulatorBackend:
         """One report per workload batch (a fresh simulator instance per
         call, jitter seeded once — matching one platform-noise draw per
         invocation wave)."""
-        sim = ServerlessSimulator(self.profile, self.platform,
-                                  jitter=self.jitter, seed=self.seed)
+        sim = self._make_sim()
         return [sim.run(plan, self._batch_demand(workload, b),
                         int(np.asarray(b).size))
                 for b in workload.batches]
@@ -112,6 +135,68 @@ class SimulatorBackend:
                 workload: Workload) -> ExecutionReport:
         return _merge_reports(self.execute_batches(plan, workload),
                               backend=self.name)
+
+    def execute_trace(self, plan: DeploymentPlan,
+                      trace) -> List[ExecutionReport]:
+        """Bill one plan window-by-window over a :class:`repro.traces.Trace`
+        (one fresh jitter/fault stream for the whole trace, one report per
+        window — the granularity re-planning loops consume)."""
+        return run_plan_over_trace(plan, trace, self._make_sim(),
+                                   self.profile,
+                                   self.platform)["reports"]
+
+
+def run_plan_over_trace(plan: DeploymentPlan, trace,
+                        sim: ServerlessSimulator, profile: ModelProfile,
+                        platform: PlatformSpec, *,
+                        plan_fn: Optional[Callable[[np.ndarray],
+                                                   DeploymentPlan]] = None,
+                        alpha: float = 2.0) -> dict:
+    """Drive a deployment through a demand trace window-by-window.
+
+    The single implementation of the trace-feedback loop, shared by
+    ``SimulatorBackend.execute_trace``, ``ServerlessMoERuntime.run_trace``,
+    and ``benchmarks/fault_scenarios.py``. Each window executes on ``sim``
+    under the current plan; with a ``plan_fn`` (demand -> plan), the
+    window's failure feedback (Alg. 2 cases i/ii via
+    :func:`~repro.core.deployment.apply_failure_feedback`) bumps replicas
+    and — when feedback fired — re-plans from the window's OBSERVED
+    demand, keeping the feedback-boosted replicas as a floor. Without a
+    ``plan_fn`` the initial plan is pinned (the static baseline).
+
+    NOTE on ``replan_diff`` cost deltas: a plan's ``layer_cost`` is
+    always the PLANNER'S estimate at plan time (as everywhere else in
+    Alg. 2 — replica floors from feedback are never re-costed); the
+    realized cost of a window lives in its ``ExecutionReport``.
+
+    Returns ``{"reports", "plans", "final_plan", "replans"}``: one
+    report per window, the plan that served each window, the plan left
+    deployed, and how many windows triggered a re-plan.
+    """
+    reports: List[ExecutionReport] = []
+    plans: List[DeploymentPlan] = []
+    replans = 0
+    cur = plan
+    for w in trace.windows:
+        plans.append(cur)
+        rep = sim.run(cur, w.demand, int(w.num_tokens))
+        reports.append(rep)
+        if plan_fn is None:
+            continue
+        adjusted, rho_case, _ = apply_failure_feedback(
+            cur, rep.real_demand, profile, platform, alpha=alpha)
+        if rho_case < 3:
+            # cases (i)/(ii): the plan's sizing was wrong for what the
+            # window actually routed — re-plan from observed demand
+            fresh = plan_fn(rep.real_demand)
+            fresh.replicas = np.maximum(fresh.replicas, adjusted.replicas)
+            fresh.metadata["replan_diff"] = plan_diff(cur, fresh)
+            cur = fresh
+            replans += 1
+        else:
+            cur = adjusted
+    return {"reports": reports, "plans": plans, "final_plan": cur,
+            "replans": replans}
 
 
 class ServingBackend:
@@ -153,16 +238,29 @@ class ServingBackend:
 
     def execute(self, plan: DeploymentPlan,
                 workload: Workload) -> ExecutionReport:
+        reqs = [self.engine.submit(row,
+                                   max_new_tokens=workload.max_new_tokens)
+                for row in self._rows(workload)]
+        return self._serve_and_bill(plan, reqs)
+
+    def execute_requests(self, plan: DeploymentPlan,
+                         requests: Sequence) -> ExecutionReport:
+        """Serve a timed arrival schedule (:class:`repro.traces.TraceRequest`
+        objects with ``arrival_step``/``prompt``/``max_new_tokens``) under
+        the plan: requests are admitted by the engine as their arrival
+        step comes due, so bursty/diurnal traces exercise mid-stream
+        admission, and the measured routing is billed under the plan."""
+        return self._serve_and_bill(plan, [], arrivals=list(requests))
+
+    def _serve_and_bill(self, plan: DeploymentPlan, reqs: List, *,
+                        arrivals: Optional[List] = None) -> ExecutionReport:
         eng, tel = self.engine, self.engine.telemetry
         base_demand = tel.demand_matrix()
         base_tokens = tel.total_tokens
-        reqs = [eng.submit(row, max_new_tokens=workload.max_new_tokens)
-                for row in self._rows(workload)]
-        self.last_requests = reqs
         t0 = time.perf_counter()
 
         # --- serve, segmented into the plan's scatter-gather rounds ------
-        chunk_tokens = int(plan.chunk_schedule.max())
+        chunk_tokens = int(plan.full_chunk_schedule().max())
         rounds: List[dict] = []
         steps = 0
 
@@ -170,9 +268,12 @@ class ServingBackend:
             nonlocal steps
             steps = step
 
-        eng.run(max_steps=self.max_steps, on_step=_count,
-                round_tokens=chunk_tokens,
-                on_round=lambda engine, info: rounds.append(info))
+        finished = eng.run(max_steps=self.max_steps, on_step=_count,
+                           round_tokens=chunk_tokens,
+                           on_round=lambda engine, info: rounds.append(info),
+                           arrivals=arrivals)
+        reqs = reqs if reqs else finished
+        self.last_requests = reqs
         wall_s = time.perf_counter() - t0
 
         # --- bill the measured routing under the plan's comm design ------

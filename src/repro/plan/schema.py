@@ -91,9 +91,25 @@ class DeploymentPlan:
     def total_latency(self) -> float:
         return float(self.layer_latency.sum())
 
+    def full_chunk_schedule(self) -> np.ndarray:
+        """(L,) chunk schedule with short schedules padded out.
+
+        A schedule shorter than the layer count (hand-built plans,
+        truncated JSON) falls back to the global ``beta`` for each
+        missing pipelined (method-1) layer and 1 otherwise, instead of
+        indexing past the end.
+        """
+        cs = self.chunk_schedule
+        L = self.num_layers
+        if cs.shape[0] >= L:
+            return cs[:L]
+        pad = np.where(self.method[cs.shape[0]:] == 1,
+                       max(self.beta, 1), 1).astype(np.int64)
+        return np.concatenate([cs, pad])
+
     def chunk_for_layer(self, layer: int) -> int:
         """Pipeline minibatch size the scatter-gather of ``layer`` uses."""
-        return int(self.chunk_schedule[layer])
+        return int(self.full_chunk_schedule()[layer])
 
     def function_placement(self, layer: int) -> List[List[str]]:
         """Expert -> serverless-function-name placement for one layer."""
@@ -173,7 +189,10 @@ class ExecutionReport:
 
     The field set is the union of what Alg. 2 consumes as feedback
     (billed cost, memory overruns for case (i), payload violations for
-    case (ii)) and what the paper's figures report (latency, throughput).
+    case (ii)), what the paper's figures report (latency, throughput),
+    and the discrete-event simulator's fault breakdown (cold starts,
+    transient-failure retries, concurrency queueing, stragglers — all
+    zero on an ideal platform).
     """
 
     billed_cost: float                 # total $ for all MoE layers
@@ -187,6 +206,12 @@ class ExecutionReport:
     min_mem_required_mb: np.ndarray    # (L, E) M^real
     backend: str = ""
     num_tokens: int = 0
+    cold_starts: int = 0               # invocations that paid cold init
+    cold_start_s: float = 0.0          # billed cold-init seconds
+    retries: int = 0                   # transient-failure retry attempts
+    retry_s: float = 0.0               # billed seconds burnt by failures
+    queue_delay_s: float = 0.0         # concurrency-limit queueing (latency)
+    stragglers: int = 0                # invocations that straggled
     extras: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -206,6 +231,12 @@ class ExecutionReport:
             "min_mem_required_mb": np.asarray(self.min_mem_required_mb,
                                               float).tolist(),
             "num_tokens": int(self.num_tokens),
+            "cold_starts": int(self.cold_starts),
+            "cold_start_s": float(self.cold_start_s),
+            "retries": int(self.retries),
+            "retry_s": float(self.retry_s),
+            "queue_delay_s": float(self.queue_delay_s),
+            "stragglers": int(self.stragglers),
         }
 
     def to_json(self, **json_kwargs) -> str:
@@ -228,8 +259,8 @@ def plan_diff(old: DeploymentPlan, new: DeploymentPlan) -> Dict[str, Any]:
         "planner": {"old": old.planner, "new": new.planner},
         "method_changes": method_changes,
         "beta": {"old": int(old.beta), "new": int(new.beta)},
-        "chunk_changes": int(np.sum(old.chunk_schedule
-                                    != new.chunk_schedule)),
+        "chunk_changes": int(np.sum(old.full_chunk_schedule()
+                                    != new.full_chunk_schedule())),
         "replicas_changed": int(np.sum(rep_delta != 0)),
         "replicas_added": int(rep_delta[rep_delta > 0].sum()),
         "replicas_removed": int(-rep_delta[rep_delta < 0].sum()),

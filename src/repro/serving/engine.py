@@ -261,7 +261,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------------- run
     def run(self, *, max_steps: int = 256, on_step=None,
-            round_tokens: int = 0, on_round=None) -> List[Request]:
+            round_tokens: int = 0, on_round=None,
+            arrivals=None) -> List[Request]:
         """Serve until queue and slots drain (or ``max_steps`` decode steps).
 
         ``on_step(engine, step_index)`` runs after every decode step —
@@ -277,7 +278,18 @@ class ServingEngine:
         tokens have been served since the round opened, the round closes
         and ``on_round(engine, {"steps", "tokens"})`` fires — the
         execution granularity a ``DeploymentPlan``'s pipeline chunk
-        schedule prescribes (``repro.plan.backends.ServingBackend``)."""
+        schedule prescribes (``repro.plan.backends.ServingBackend``).
+
+        ``arrivals`` is an optional timed request schedule (objects with
+        ``arrival_step``/``prompt``/``max_new_tokens``, e.g.
+        :class:`repro.traces.TraceRequest`): each request is submitted
+        once the arrival clock reaches its arrival step, so bursty
+        traces drive queueing and mid-stream admission. The clock
+        advances one tick per decode step; idle gaps (no live work
+        before the next arrival) fast-forward the clock WITHOUT burning
+        the ``max_steps`` decode budget. Arrivals still due when the
+        budget runs out are submitted into the queue on exit (never
+        silently dropped) and served by the next ``run()`` call."""
         if round_tokens and self.telemetry is None:
             raise ValueError("round_tokens requires expert telemetry")
         mark = len(self._finished)
@@ -294,12 +306,39 @@ class ServingEngine:
             round_start = self.telemetry.total_tokens
             round_steps = 0
 
+        queue_arr = sorted(arrivals, key=lambda r: r.arrival_step) \
+            if arrivals else []
+        arr_i = 0
+
+        def _submit_due(step: int) -> None:
+            nonlocal arr_i
+            while arr_i < len(queue_arr) \
+                    and queue_arr[arr_i].arrival_step <= step:
+                r = queue_arr[arr_i]
+                self.submit(r.prompt, max_new_tokens=r.max_new_tokens)
+                arr_i += 1
+
+        _submit_due(0)
         self._admit()      # prefill-only / instant-EOS requests complete here
-        steps = 0
-        while self.scheduler.has_work and steps < max_steps:
-            if not self.step():
+        steps = 0          # decode budget: real decode steps only
+        clock = 0          # arrival time: advances with decode steps AND
+        #                    fast-forwards across idle gaps
+        while steps < max_steps:
+            _submit_due(clock)
+            if not self.scheduler.has_work:
+                if arr_i < len(queue_arr):
+                    # idle gap: jump the clock to the next arrival
+                    clock = max(clock + 1,
+                                queue_arr[arr_i].arrival_step)
+                    continue
                 break
+            if not self.step():
+                # nothing was decodable (e.g. every admitted request
+                # finished instantly at prefill): fall through to the
+                # top, which re-checks pending arrivals before quitting
+                continue
             steps += 1
+            clock += 1
             round_steps += 1
             if on_step is not None:
                 on_step(self, steps)
@@ -308,6 +347,12 @@ class ServingEngine:
                 _close_round()
         if round_tokens and self.telemetry.total_tokens > round_start:
             _close_round()     # final partial round
+        # arrivals the budget never reached: queue them (not dropped) so
+        # the next run() serves them
+        while arr_i < len(queue_arr):
+            r = queue_arr[arr_i]
+            self.submit(r.prompt, max_new_tokens=r.max_new_tokens)
+            arr_i += 1
         if self.scheduler.has_work:
             for req in list(self.scheduler.active()):
                 self._finish(req, "truncated")

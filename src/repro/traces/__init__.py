@@ -1,0 +1,17 @@
+"""Trace generation for serverless MoE workloads (arrivals, drift, replay).
+
+Pure numpy (no JAX): importable by the simulator, benchmarks, and tests
+without model warmup. See :mod:`repro.traces.generators` for the model.
+"""
+from repro.traces.generators import (Trace, TraceRequest, TraceWindow,
+                                     bursty_arrivals, demand_trace,
+                                     diurnal_arrivals, drift_popularity,
+                                     poisson_arrivals, replay_telemetry,
+                                     request_trace, zipf_popularity)
+
+__all__ = [
+    "Trace", "TraceRequest", "TraceWindow",
+    "poisson_arrivals", "bursty_arrivals", "diurnal_arrivals",
+    "zipf_popularity", "drift_popularity",
+    "demand_trace", "replay_telemetry", "request_trace",
+]

@@ -1,0 +1,234 @@
+"""Workload traces: arrival processes, expert-popularity drift, replay.
+
+The paper evaluates one-shot batches; real serverless MoE traffic is
+bursty, diurnal, and non-stationary (Remoe / FaaSMoE in PAPERS.md). This
+module generates the traffic the planner must survive, in two shapes:
+
+* **demand traces** (:class:`Trace` of :class:`TraceWindow`) — a sequence
+  of (L, E) routed-token demand matrices plus token counts, consumed by
+  ``SimulatorBackend.execute_trace`` and the runtime's re-planning loop
+  (``ServerlessMoERuntime.run_trace``);
+* **request traces** (lists of :class:`TraceRequest`) — timed prompt
+  arrivals for the live serving engine (``ServingEngine.run(arrivals=…)``
+  / ``ServingBackend.execute_requests``), so bursts exercise queueing
+  and mid-stream slot admission for real.
+
+Arrival processes: homogeneous Poisson, a two-state Markov-modulated
+(bursty) Poisson, and a sinusoidally rate-modulated (diurnal) Poisson.
+Demand processes: a Zipf popularity profile (the paper's skew), a
+mixing-based popularity drift (each step blends toward a rotated
+popularity, so hot experts cool and cold experts heat — the regime that
+invalidates offline plans), and exact replay of a recorded
+:class:`~repro.serving.telemetry.ExpertTelemetry`.
+
+Everything is seeded; identical seeds give identical traces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class TraceRequest:
+    """A timed request for the live serving engine."""
+
+    arrival_step: int           # decode step at which the request arrives
+    prompt: np.ndarray          # 1-D token ids
+    max_new_tokens: int = 8
+
+
+@dataclass
+class TraceWindow:
+    """One accounting window of a demand trace."""
+
+    demand: np.ndarray          # (L, E) routed-token counts in the window
+    num_tokens: int             # tokens served in the window
+    t_start_s: float = 0.0      # window start on the trace clock
+
+    def __post_init__(self):
+        self.demand = np.asarray(self.demand, float)
+        assert self.demand.ndim == 2, self.demand.shape
+        self.num_tokens = int(self.num_tokens)
+
+
+@dataclass
+class Trace:
+    """A sequence of demand windows (what a deployment lives through)."""
+
+    windows: List[TraceWindow] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.windows)
+
+    def __iter__(self) -> Iterator[TraceWindow]:
+        return iter(self.windows)
+
+    @property
+    def num_tokens(self) -> int:
+        return int(sum(w.num_tokens for w in self.windows))
+
+    def total_demand(self) -> np.ndarray:
+        """(L, E) sum over all windows."""
+        assert self.windows, "empty trace"
+        return np.sum([w.demand for w in self.windows], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes (requests per step)
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(rate: float, steps: int, *, seed: int = 0) -> np.ndarray:
+    """Homogeneous Poisson arrivals: (steps,) request counts per step."""
+    assert rate >= 0 and steps >= 0
+    rng = np.random.default_rng(seed)
+    return rng.poisson(rate, size=steps).astype(np.int64)
+
+
+def bursty_arrivals(rate: float, steps: int, *, burst_mult: float = 8.0,
+                    p_enter: float = 0.1, p_exit: float = 0.4,
+                    seed: int = 0) -> np.ndarray:
+    """Two-state Markov-modulated Poisson process (quiet <-> burst).
+
+    In the burst state the rate is ``burst_mult`` times the quiet rate;
+    state transitions are Bernoulli per step (``p_enter``/``p_exit``).
+    The multi-tenant traffic shape that defeats static provisioning.
+    """
+    assert burst_mult >= 1.0
+    rng = np.random.default_rng(seed)
+    out = np.zeros(steps, np.int64)
+    bursting = False
+    for t in range(steps):
+        bursting = (rng.random() >= p_exit) if bursting \
+            else (rng.random() < p_enter)
+        out[t] = rng.poisson(rate * (burst_mult if bursting else 1.0))
+    return out
+
+
+def diurnal_arrivals(rate: float, steps: int, *, period: int = 48,
+                     depth: float = 0.9, seed: int = 0) -> np.ndarray:
+    """Sinusoidally rate-modulated Poisson (day/night load swing).
+
+    ``depth`` in [0, 1] is the modulation depth: the instantaneous rate
+    swings between ``rate * (1 - depth)`` and ``rate * (1 + depth)``
+    over ``period`` steps.
+    """
+    assert 0.0 <= depth <= 1.0 and period > 0
+    rng = np.random.default_rng(seed)
+    t = np.arange(steps)
+    lam = rate * (1.0 + depth * np.sin(2 * np.pi * t / period))
+    return rng.poisson(np.maximum(lam, 0.0)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Expert-popularity processes
+# ---------------------------------------------------------------------------
+
+def zipf_popularity(num_layers: int, num_experts: int, *,
+                    alpha: float = 1.2, seed: int = 0) -> np.ndarray:
+    """(L, E) Zipf popularity fractions (rows sum to 1), independently
+    permuted per layer — the paper's skewed expert-selection profile."""
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, num_experts + 1)) ** alpha
+    zipf = zipf / zipf.sum()
+    return np.stack([rng.permutation(zipf) for _ in range(num_layers)])
+
+
+def drift_popularity(popularity: np.ndarray, steps: int, *,
+                     drift: float = 0.25,
+                     seed: int = 0) -> Iterator[np.ndarray]:
+    """Yield ``steps`` popularity matrices under gradual drift.
+
+    Each step mixes the current popularity toward a per-layer random
+    rotation of itself: ``p' = (1 - drift) * p + drift * rotate(p)``.
+    Row sums are preserved, hot experts cool, previously cold experts
+    heat up — exactly the non-stationarity that turns a once-optimal
+    deployment into memory overruns (Alg. 2 case (i) feedback).
+    """
+    assert 0.0 <= drift <= 1.0
+    rng = np.random.default_rng(seed)
+    p = np.asarray(popularity, float).copy()
+    L, E = p.shape
+    for _ in range(steps):
+        # E == 1: rotation is a no-op, popularity is trivially stationary
+        target = np.stack([np.roll(p[e], int(rng.integers(1, E)) if E > 1
+                           else 0) for e in range(L)])
+        p = (1.0 - drift) * p + drift * target
+        yield p.copy()
+
+
+# ---------------------------------------------------------------------------
+# Trace builders
+# ---------------------------------------------------------------------------
+
+def demand_trace(arrivals: np.ndarray, popularity, *,
+                 tokens_per_request: int = 64,
+                 window_s: float = 1.0) -> Trace:
+    """Compose arrivals x popularity into a demand :class:`Trace`.
+
+    ``popularity`` is either a fixed (L, E) matrix (rows summing to 1)
+    or an iterable yielding one per window (e.g. ``drift_popularity``).
+    Window ``t`` carries ``arrivals[t] * tokens_per_request`` tokens
+    routed according to that window's popularity.
+    """
+    arrivals = np.asarray(arrivals, np.int64)
+    if isinstance(popularity, np.ndarray):
+        pops: Sequence[np.ndarray] = [popularity] * len(arrivals)
+    else:
+        pops = list(popularity)
+        assert len(pops) >= len(arrivals), \
+            f"popularity sequence ({len(pops)}) shorter than arrivals " \
+            f"({len(arrivals)})"
+    windows = []
+    for t, n_req in enumerate(arrivals):
+        tokens = int(n_req) * tokens_per_request
+        windows.append(TraceWindow(demand=pops[t] * float(tokens),
+                                   num_tokens=tokens,
+                                   t_start_s=t * window_s))
+    return Trace(windows=windows)
+
+
+def replay_telemetry(telemetry, *, num_windows: int = 1,
+                     window_s: float = 1.0) -> Trace:
+    """Replay a recorded :class:`ExpertTelemetry` as a demand trace.
+
+    The cumulative measured (L, E) demand and served token count are
+    split evenly across ``num_windows`` windows (the trace's total is
+    exactly the telemetry's total), so a live serving session can be
+    re-executed against the simulator — with fault injection — under
+    any candidate plan.
+    """
+    assert num_windows >= 1
+    demand = telemetry.demand_matrix()
+    total = int(telemetry.total_tokens)
+    share = demand / num_windows
+    base, rem = divmod(total, num_windows)
+    return Trace(windows=[
+        TraceWindow(demand=share, num_tokens=base + (1 if i < rem else 0),
+                    t_start_s=i * window_s)
+        for i in range(num_windows)])
+
+
+def request_trace(arrivals: np.ndarray, vocab_size: int, *,
+                  prompt_len: int = 8, max_new_tokens: int = 8,
+                  steps_per_window: int = 4,
+                  seed: int = 0) -> List[TraceRequest]:
+    """Expand per-window arrival counts into timed engine requests.
+
+    Window ``t`` contributes ``arrivals[t]`` requests arriving at decode
+    step ``t * steps_per_window``, each with a random ``prompt_len``-token
+    prompt — input for ``ServingEngine.run(arrivals=...)`` /
+    ``ServingBackend.execute_requests``.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[TraceRequest] = []
+    for t, n_req in enumerate(np.asarray(arrivals, np.int64)):
+        for _ in range(int(n_req)):
+            out.append(TraceRequest(
+                arrival_step=t * steps_per_window,
+                prompt=rng.integers(0, vocab_size, size=prompt_len,
+                                    dtype=np.int64),
+                max_new_tokens=max_new_tokens))
+    return out

@@ -4,9 +4,16 @@ must see the single real CPU device; only launch/dryrun.py forces 512.
 ``hypothesis`` is an OPTIONAL dev dependency (see pyproject.toml). When it
 is unavailable (e.g. offline CI images) we install a stub module into
 ``sys.modules`` BEFORE any test module imports it: ``@given`` tests are
-skipped, everything deterministic still collects and runs.
+skipped, everything deterministic still collects and runs. When it IS
+available, a bounded ``ci`` settings profile (capped examples, no
+deadline — property cases must not blow the per-test ``--timeout``) is
+registered and auto-loaded under ``CI=…`` environments.
+
+``--regen-golden`` regenerates the committed fixtures under
+``tests/golden/`` instead of comparing against them.
 """
 import dataclasses
+import os
 import sys
 import types
 
@@ -14,6 +21,10 @@ import pytest
 
 try:
     import hypothesis  # noqa: F401
+    hypothesis.settings.register_profile(
+        "ci", max_examples=25, deadline=None, derandomize=True)
+    if os.environ.get("CI"):
+        hypothesis.settings.load_profile("ci")
 except ImportError:      # pragma: no cover - exercised on offline images
     def _skip_given(*_a, **_k):
         def deco(fn):
@@ -49,6 +60,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_arch, reduced_config
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite the fixtures under tests/golden/ from the current "
+             "code instead of comparing against them")
+
+
+@pytest.fixture
+def regen_golden(request):
+    """True when the run should REGENERATE golden fixtures."""
+    return bool(request.config.getoption("--regen-golden"))
 from repro.models import Model
 from repro.models.frontends import stub_frontend_embeddings
 

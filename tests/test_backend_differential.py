@@ -1,0 +1,173 @@
+"""Differential test harness across execution backends.
+
+Two guarantees are pinned here:
+
+1. **Event engine == closed form at zero faults.** The discrete-event
+   simulator with every ``FaultProfile`` knob at zero (and ``jitter=0``)
+   must reproduce the ``comm.layer_times`` closed forms EXACTLY — same
+   floats — for all three comm methods, across beta and per-layer
+   chunk-schedule choices (property-based under hypothesis, plus a
+   deterministic parametrized sweep that runs even without it). Checked
+   on BOTH paths: the all-zero profile (which short-circuits the wave)
+   and an inert-but-enabled profile (a concurrency limit too large to
+   ever bind), which runs every invocation through the event loop and
+   must still contribute exact float zeros.
+
+2. **SimulatorBackend and ServingBackend bill the same GB-seconds for
+   identical measured routing.** The serving backend's report for live
+   traffic must equal the simulator backend's report fed the very same
+   measured (L, E) demand and token count.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import comm
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.deployment import solve_fixed_method
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.schema import DeploymentPlan, Workload
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+
+def _demand(L=4, E=8, seed=0, scale=400):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _plan_for(method: int, demand: np.ndarray, beta: int,
+              chunk_schedule=None) -> DeploymentPlan:
+    """A feasible fixed-method plan (solver memory/replicas satisfy 12c and
+    12f at this demand, so the closed form has no penalty terms)."""
+    sol = solve_fixed_method(method, demand, PROF, SPEC)
+    L = demand.shape[0]
+    return DeploymentPlan(
+        method=np.full(L, method, np.int64), beta=beta,
+        mem_mb=sol.mem_mb, replicas=sol.replicas, demand=demand,
+        layer_cost=sol.layer_cost, layer_latency=sol.layer_latency,
+        chunk_schedule=chunk_schedule)
+
+
+def _closed_form(plan: DeploymentPlan, demand: np.ndarray):
+    """Independent aggregation of the paper's closed forms (Eqs. 3-11 via
+    ``comm.layer_times`` + Eq. 4 billing + the latency sum)."""
+    L, E = demand.shape
+    layer_cost = np.zeros(L)
+    layer_lat = np.zeros(L)
+    for e in range(L):
+        beta = (int(plan.chunk_schedule[e])
+                if e < len(plan.chunk_schedule) else plan.beta)
+        g = plan.replicas[e].astype(float)
+        times = comm.layer_times(int(plan.method[e]), demand[e] / g, g,
+                                 plan.mem_mb[e], beta, PROF, SPEC)
+        layer_cost[e] = comm.layer_billed_cost(times, plan.mem_mb[e], SPEC)
+        layer_lat[e] = times.t_latency
+    total_lat = (PROF.t_head_s + PROF.t_tail_s + layer_lat.sum()
+                 + L * PROF.t_nonmoe_s)
+    return layer_cost, layer_lat, total_lat
+
+
+# enabled (so the per-invocation event loop really runs) but inert (the
+# limit can never bind): the wave must contribute exact float zeros
+INERT_FAULTS = FaultProfile(concurrency_limit=10 ** 9)
+
+
+def _assert_event_sim_matches_closed_form(method, scale, beta, chunks,
+                                          seed):
+    d = _demand(seed=seed, scale=scale)
+    plan = _plan_for(method, d, beta, chunk_schedule=chunks)
+    cost, lat, total = _closed_form(plan, d)
+    for faults in (FaultProfile(), INERT_FAULTS):
+        sim = ServerlessSimulator(PROF, SPEC, jitter=0.0, seed=seed,
+                                  faults=faults)
+        rep = sim.run(plan, d, int(d.sum()))
+        assert not rep.mem_overrun.any() \
+            and not rep.payload_violation.any(), \
+            "domain error: solver plan must be penalty-free at its demand"
+        np.testing.assert_array_equal(rep.layer_cost, cost)
+        np.testing.assert_array_equal(rep.layer_latency, lat)
+        assert rep.billed_cost == cost.sum()
+        assert rep.latency_s == total
+        assert rep.cold_starts == rep.retries == rep.stragglers == 0
+        assert rep.queue_delay_s == 0.0
+        if faults.enabled:     # the event loop really saw every invocation
+            assert len(sim.last_events) == int(plan.replicas[d > 0].sum())
+
+
+# --- deterministic sweep (runs without hypothesis) -------------------------
+
+@pytest.mark.parametrize("method", comm.METHODS)
+@pytest.mark.parametrize("beta,chunks", [
+    (1, None),
+    (8, None),
+    (32, np.array([1, 8, 32, 64])),      # per-layer schedule
+    (4, np.array([4, 4])),               # SHORT schedule: beta fallback
+])
+def test_zero_fault_event_sim_is_the_closed_form(method, beta, chunks):
+    _assert_event_sim_matches_closed_form(method, scale=400, beta=beta,
+                                          chunks=chunks, seed=0)
+
+
+# --- property-based (hypothesis; skipped when unavailable) -----------------
+
+@settings(max_examples=40, deadline=None)
+@given(method=st.sampled_from(comm.METHODS),
+       scale=st.integers(10, 1500),
+       beta=st.sampled_from([1, 2, 8, 32, 128]),
+       chunk_exp=st.integers(0, 6),
+       seed=st.integers(0, 31))
+def test_zero_fault_event_sim_is_the_closed_form_property(
+        method, scale, beta, chunk_exp, seed):
+    chunks = np.full(4, 2 ** chunk_exp, np.int64) if chunk_exp else None
+    _assert_event_sim_matches_closed_form(method, scale=scale, beta=beta,
+                                          chunks=chunks, seed=seed)
+
+
+# --- backend billing parity (live jax model) -------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_runtime():
+    from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+    rc = RuntimeConfig(arch="gpt2-moe", d_model_reduced=64,
+                       vocab_reduced=512, seq_len=12, batch_size=2,
+                       profile_batches=1, learn_batches=1, eval_batches=1)
+    return ServerlessMoERuntime(rc)
+
+
+def test_backends_bill_identical_gb_seconds_for_identical_routing(
+        tiny_runtime):
+    """One plan, one measured routing: the serving backend's bill and the
+    simulator backend's bill must be the same floats."""
+    from repro.serving import ServingEngine
+    rt = tiny_runtime
+    rt.profile_table()
+    batch = rt.learn_batches()[0]
+    plan = rt.plan(rt.real_demand(batch))
+
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    live = rt.serving_backend(eng).execute(
+        plan, Workload(batches=[row for row in batch], max_new_tokens=4))
+    measured = eng.telemetry.demand_matrix()
+    n_tokens = eng.telemetry.total_tokens
+
+    sim = rt.simulator_backend().execute(
+        plan, Workload(batches=[np.zeros(n_tokens, np.int64)],
+                       real_demand=measured))
+    assert live.billed_cost == sim.billed_cost
+    np.testing.assert_array_equal(live.layer_cost, sim.layer_cost)
+    np.testing.assert_array_equal(live.layer_latency, sim.layer_latency)
+    assert live.latency_s == sim.latency_s
+    assert live.num_tokens == sim.num_tokens == n_tokens
+    np.testing.assert_array_equal(live.real_demand, sim.real_demand)
+    # full-report equality modulo provenance (backend tag + serving extras)
+    d_live, d_sim = live.to_dict(), sim.to_dict()
+    d_live.pop("backend"), d_sim.pop("backend")
+    assert d_live == d_sim

@@ -1,0 +1,192 @@
+"""BOPlanner / multi-dimensional epsilon-greedy determinism + feedback.
+
+Satellite coverage for Alg. 2's operational guarantees:
+
+* identical seeds => identical trial histories and identical plans
+  (BO is a reproducible artifact, not a lucky run);
+* failure feedback (cases i/ii) provably shrinks the infeasible set:
+  ``apply_failure_feedback`` raises replication until memory overruns /
+  payload violations clear, and the feedback case slows the epsilon
+  decay of the limited-range dimensions exactly as line 20 prescribes;
+* problem tokens reported by a trial restrict the limited-range
+  dimensions' exploration (the range L of Alg. 2).
+"""
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core.bo import BOOptimizer, EvalOutcome
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.deployment import apply_failure_feedback
+from repro.core.simulator import ServerlessSimulator
+from repro.core.table import KVTable, pack_key, unpack_key
+from repro.plan.planner import BOPlanner, get_planner
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+
+def _demand(L=4, E=8, seed=0, scale=400):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _profiled_table(seed=0) -> KVTable:
+    t = KVTable(num_layers=2, num_experts=4, vocab_size=32)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 32, 400)
+    t.observe_tokens(toks)
+    for tok in toks:
+        t.set_entry(0, int(tok), 0, int(tok), int(tok) % 4,
+                    t.get_entry(0, int(tok), 0, int(tok), int(tok) % 4) + 1)
+    return t
+
+
+def _toy_eval_fn(target_key, rho_case=3, problem=()):
+    def fn(table: KVTable) -> EvalOutcome:
+        v = table.counts.get(target_key, 0.0)
+        return EvalOutcome(cost=1.0 / (1.0 + v), rho_case=rho_case,
+                           problem_token_ids=np.asarray(problem, np.int64),
+                           demand_pred=np.zeros((1, 2)),
+                           demand_real=np.zeros((1, 2)))
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def _run_bo(seed):
+    t = _profiled_table()
+    key = int(pack_key(0, 3, 0, 3, 1))
+    return BOOptimizer(t, _toy_eval_fn(key), Q=16, max_iters=8,
+                       seed=seed).run()
+
+
+def test_identical_seeds_identical_trial_histories():
+    r1, r2 = _run_bo(seed=5), _run_bo(seed=5)
+    assert r1.costs == r2.costs
+    assert r1.best_cost == r2.best_cost
+    assert len(r1.history) == len(r2.history)
+    for t1, t2 in zip(r1.history, r2.history):
+        np.testing.assert_array_equal(t1.keys, t2.keys)
+        np.testing.assert_array_equal(t1.values, t2.values)
+        assert t1.cost == t2.cost
+    assert dict(r1.best_table.counts) == dict(r2.best_table.counts)
+
+
+def test_different_seeds_explore_differently():
+    r1, r2 = _run_bo(seed=0), _run_bo(seed=1)
+    same = all(np.array_equal(t1.keys, t2.keys)
+               and np.array_equal(t1.values, t2.values)
+               for t1, t2 in zip(r1.history, r2.history))
+    assert not same
+
+
+def test_bo_planner_identical_seeds_identical_plans():
+    d = _demand()
+
+    def planner():
+        t = _profiled_table()
+        key = int(pack_key(0, 3, 0, 3, 1))
+        return BOPlanner(table=t, eval_fn=_toy_eval_fn(key), Q=8,
+                         max_iters=4)
+
+    p1 = planner().plan(d, PROF, SPEC, t_limit_s=1e9, seed=11)
+    p2 = planner().plan(d, PROF, SPEC, t_limit_s=1e9, seed=11)
+    assert p1.to_dict() == p2.to_dict()
+    assert p1.metadata["bo"]["best_cost"] == p2.metadata["bo"]["best_cost"]
+
+
+# ---------------------------------------------------------------------------
+# failure feedback shrinks the infeasible set
+# ---------------------------------------------------------------------------
+
+def test_case_i_feedback_shrinks_memory_overruns():
+    """Real demand far above planned: feedback must multiply replicas so
+    strictly fewer (layer, expert) pairs overrun on re-execution."""
+    d = _demand(scale=400)
+    plan = get_planner("ods").plan(d, PROF, SPEC, t_limit_s=1e9)
+    real = d * 60.0                       # blows the per-replica working set
+    sim = ServerlessSimulator(PROF, SPEC)
+    before = sim.run(plan, real, int(real.sum()))
+    assert before.mem_overrun.any()
+
+    adjusted, rho_case, _ = apply_failure_feedback(plan, real, PROF, SPEC)
+    assert rho_case == 1
+    grew = adjusted.replicas > plan.replicas
+    assert grew[before.mem_overrun].all(), \
+        "every overrun expert must gain replicas"
+    after = sim.run(adjusted, real, int(real.sum()))
+    assert after.mem_overrun.sum() < before.mem_overrun.sum()
+    # replica caps permitting, the shrink is monotone per expert
+    assert not (after.mem_overrun & ~before.mem_overrun).any()
+
+
+def test_case_ii_feedback_shrinks_payload_violations():
+    spec = PlatformSpec(payload_mb=0.4)
+    d = _demand(scale=60)                 # small: direct transfer planned
+    plan = get_planner("fixed-3").plan(d, PROF, spec, t_limit_s=1e9)
+    real = d * 8.0                        # burst blows the payload cap
+    sim = ServerlessSimulator(PROF, spec)
+    before = sim.run(plan, real, int(real.sum()))
+    assert before.payload_violation.any()
+
+    adjusted, rho_case, _ = apply_failure_feedback(plan, real, PROF, spec)
+    assert rho_case == 2
+    after = sim.run(adjusted, real, int(real.sum()))
+    assert after.payload_violation.sum() < before.payload_violation.sum()
+
+
+def test_feedback_case_slows_epsilon_decay_of_limited_dims():
+    """Line 20: eps_{1:muQ} decays slower the worse the feedback case
+    (rho1 < rho2 < rho3 => bigger multiplier for overruns)."""
+    opt = BOOptimizer(_profiled_table(), _toy_eval_fn(1), Q=8, seed=0)
+    tau = 4
+    muQ = int(opt.mu * opt.Q)
+    eps_by_case = {}
+    for case in (1, 2, 3):
+        eps = opt.eps0 / (1 + opt.rho * tau)
+        eps[:muQ] = eps[:muQ] * (1 + opt.rhos[case] * tau)
+        eps_by_case[case] = np.clip(eps, 0.0, 1.0)
+    assert (eps_by_case[1][:muQ] > eps_by_case[2][:muQ]).all()
+    assert (eps_by_case[2][:muQ] > eps_by_case[3][:muQ]).all()
+    # full-range dims are untouched by the feedback case
+    for a, b in ((1, 2), (2, 3)):
+        np.testing.assert_array_equal(eps_by_case[a][muQ:],
+                                      eps_by_case[b][muQ:])
+
+
+def test_problem_tokens_restrict_limited_range_sampling():
+    """Tokens flagged by a trial constrain the limited-range dims' key
+    exploration to the problem set (Alg. 2's range L)."""
+    opt = BOOptimizer(_profiled_table(), _toy_eval_fn(1), Q=8, seed=3)
+    limit = np.array([7, 9], np.int64)
+    for _ in range(64):
+        key = opt._sample_key(limit)
+        _, f1, _, _, _ = unpack_key(key)
+        assert int(f1) in {7, 9}
+
+
+def test_bo_limit_tokens_accumulate_across_trials():
+    """problem_token_ids reported by eval outcomes must accumulate into
+    the optimizer's limited range across iterations."""
+    t = _profiled_table()
+    key = int(pack_key(0, 3, 0, 3, 1))
+    calls = []
+
+    def eval_fn(table):
+        calls.append(1)
+        return _toy_eval_fn(key, rho_case=1,
+                            problem=[len(calls)])(table)
+
+    opt = BOOptimizer(t, eval_fn, Q=8, max_iters=4, seed=0)
+    res = opt.run()
+    assert res.iterations >= 2
+    # the optimizer saw every reported problem token exactly once each
+    assert len(calls) == res.iterations

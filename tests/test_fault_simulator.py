@@ -1,0 +1,211 @@
+"""Discrete-event fault injection: knob semantics, determinism, merging.
+
+The zero-fault bit-identity guarantee itself is pinned by
+``tests/test_backend_differential.py`` (closed-form equality) and
+``tests/test_golden_regression.py`` (committed numerics); this module
+covers the fault knobs' behavior.
+"""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.backends import SimulatorBackend
+from repro.plan.planner import get_planner
+from repro.plan.schema import Workload
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+
+def _demand(L=4, E=8, seed=0, scale=2000):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+@pytest.fixture(scope="module")
+def plan_and_demand():
+    d = _demand()
+    return get_planner("ods").plan(d, PROF, SPEC, t_limit_s=1e9), d
+
+
+def _run(plan, d, faults=None, *, jitter=0.0, seed=7):
+    sim = ServerlessSimulator(PROF, SPEC, jitter=jitter, seed=seed,
+                              faults=faults)
+    rep = sim.run(plan, d, int(d.sum()))
+    return rep, sim
+
+
+def _invocations(plan, d):
+    """Invocation count: one per replica of every expert with demand."""
+    return int(plan.replicas[d > 0].sum())
+
+
+# ---------------------------------------------------------------------------
+# knob semantics
+# ---------------------------------------------------------------------------
+
+def test_cold_start_prob_one_no_warm_pool_chills_every_invocation(
+        plan_and_demand):
+    plan, d = plan_and_demand
+    base, _ = _run(plan, d)
+    rep, sim = _run(plan, d, FaultProfile(cold_start_prob=1.0, warm_pool=0))
+    n_inv = _invocations(plan, d)
+    assert rep.cold_starts == n_inv
+    assert len(sim.last_events) == n_inv
+    assert all(ev.cold for ev in sim.last_events)
+    assert rep.billed_cost > base.billed_cost
+    assert rep.latency_s > base.latency_s
+    assert rep.cold_start_s > 0
+
+
+def test_warm_pool_covers_the_wave(plan_and_demand):
+    """A warm pool at least as large as any layer's invocation wave means
+    no invocation ever draws cold, even at cold_start_prob=1."""
+    plan, d = plan_and_demand
+    base, _ = _run(plan, d)
+    pool = int(plan.replicas.sum())          # >= any single layer's wave
+    rep, _ = _run(plan, d, FaultProfile(cold_start_prob=1.0,
+                                        warm_pool=pool))
+    assert rep.cold_starts == 0
+    assert rep.billed_cost == base.billed_cost
+    assert rep.latency_s == base.latency_s
+
+
+def test_stragglers_amplify_tail_latency(plan_and_demand):
+    plan, d = plan_and_demand
+    base, _ = _run(plan, d)
+    rep, sim = _run(plan, d, FaultProfile(straggler_prob=1.0,
+                                          straggler_slowdown=5.0))
+    assert rep.stragglers == _invocations(plan, d)
+    assert all(ev.straggled for ev in sim.last_events)
+    # every replica runs 5x longer => every layer's billed time scales 5x
+    np.testing.assert_allclose(rep.layer_cost, 5.0 * base.layer_cost,
+                               rtol=1e-12)
+    assert rep.latency_s > base.latency_s
+
+
+def test_transient_failures_bill_retries(plan_and_demand):
+    plan, d = plan_and_demand
+    base, _ = _run(plan, d)
+    rep, sim = _run(plan, d, FaultProfile(failure_prob=0.4, max_retries=3,
+                                          retry_backoff_s=0.1))
+    assert rep.retries > 0 and rep.retry_s > 0
+    assert rep.billed_cost > base.billed_cost
+    assert max(ev.attempts for ev in sim.last_events) > 1
+    # attempts are bounded by 1 + max_retries
+    assert max(ev.attempts for ev in sim.last_events) <= 4
+    none, _ = _run(plan, d, FaultProfile(failure_prob=0.4, max_retries=0))
+    assert none.retries == 0
+
+
+def test_breakdown_reconciles_cold_and_retry_seconds(plan_and_demand):
+    """Regression: a cold invocation whose first attempt fails must bill
+    its cold init ONCE — attributed to cold_start_s, with retry_s
+    carrying only the head-phase re-runs (no double count)."""
+    from repro.core import comm
+    plan, d = plan_and_demand
+    rep, _ = _run(plan, d, FaultProfile(cold_start_prob=1.0, warm_pool=0,
+                                        failure_prob=0.4, max_retries=3,
+                                        retry_backoff_s=0.1))
+    head_s = comm.head_time(PROF, SPEC)
+    cold_extra = SPEC.t_cold_start_s - SPEC.t_warm_start_s
+    assert rep.retries > 0
+    assert rep.retry_s == pytest.approx(rep.retries * head_s)
+    assert rep.cold_start_s == pytest.approx(rep.cold_starts * cold_extra)
+
+
+def test_concurrency_limit_queues_latency_but_not_dollars(plan_and_demand):
+    plan, d = plan_and_demand
+    base, _ = _run(plan, d)
+    rep, sim = _run(plan, d, FaultProfile(concurrency_limit=2))
+    assert rep.queue_delay_s > 0
+    assert rep.latency_s > base.latency_s
+    # queueing is waiting, not executing: the bill must not change
+    assert rep.billed_cost == base.billed_cost
+    assert any(ev.start_s > 0 for ev in sim.last_events)
+
+
+# ---------------------------------------------------------------------------
+# determinism + stream independence
+# ---------------------------------------------------------------------------
+
+FAULTY = FaultProfile(cold_start_prob=0.5, warm_pool=2, straggler_prob=0.2,
+                      failure_prob=0.2, concurrency_limit=6)
+
+
+def test_seeded_faults_are_reproducible(plan_and_demand):
+    plan, d = plan_and_demand
+    r1, _ = _run(plan, d, FAULTY, seed=13)
+    r2, _ = _run(plan, d, FAULTY, seed=13)
+    assert r1.to_dict() == r2.to_dict()
+    r3, _ = _run(plan, d, FAULTY, seed=14)
+    assert r3.to_dict() != r1.to_dict()
+
+
+def test_fault_stream_is_independent_of_jitter_stream(plan_and_demand):
+    """Enabling jitter must not change which invocations went cold /
+    straggled / failed (separate seeded streams)."""
+    plan, d = plan_and_demand
+    quiet, _ = _run(plan, d, FAULTY, jitter=0.0)
+    noisy, _ = _run(plan, d, FAULTY, jitter=0.4)
+    for f in ("cold_starts", "retries", "stragglers"):
+        assert getattr(quiet, f) == getattr(noisy, f), f
+    assert quiet.cold_start_s == noisy.cold_start_s
+    assert quiet.queue_delay_s == noisy.queue_delay_s
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+def test_backend_execute_trace_bills_window_by_window(plan_and_demand):
+    """execute_trace == sequential sim.run calls on one fault stream."""
+    from repro.core.simulator import ServerlessSimulator
+    from repro.traces import Trace, TraceWindow
+    plan, d = plan_and_demand
+    trace = Trace(windows=[TraceWindow(demand=d * s, num_tokens=int(d.sum()))
+                           for s in (0.5, 1.0, 2.0)])
+    backend = SimulatorBackend(PROF, SPEC, faults=FAULTY, seed=13)
+    reports = backend.execute_trace(plan, trace)
+    sim = ServerlessSimulator(PROF, SPEC, seed=13, faults=FAULTY)
+    expected = [sim.run(plan, w.demand, w.num_tokens)
+                for w in trace.windows]
+    assert len(reports) == 3
+    for got, exp in zip(reports, expected):
+        assert got.to_dict() == exp.to_dict()
+    assert sum(r.cold_starts for r in reports) > 0
+
+
+def test_backend_merges_fault_breakdowns(plan_and_demand):
+    plan, d = plan_and_demand
+    backend = SimulatorBackend(PROF, SPEC, faults=FAULTY, seed=13)
+    batches = [np.zeros(100, np.int64), np.zeros(300, np.int64)]
+    merged = backend.execute(plan, Workload(batches=batches, real_demand=d))
+    singles = backend.execute_batches(plan,
+                                      Workload(batches=batches,
+                                               real_demand=d))
+    assert merged.cold_starts == sum(r.cold_starts for r in singles)
+    assert merged.retries == sum(r.retries for r in singles)
+    assert merged.stragglers == sum(r.stragglers for r in singles)
+    assert merged.queue_delay_s == pytest.approx(
+        sum(r.queue_delay_s for r in singles))
+    assert merged.cold_starts > 0
+
+
+def test_fault_profile_validates_knobs():
+    with pytest.raises(AssertionError):
+        FaultProfile(cold_start_prob=1.5)
+    with pytest.raises(AssertionError):
+        FaultProfile(straggler_slowdown=0.5)
+    with pytest.raises(AssertionError):
+        FaultProfile(failure_prob=1.0)      # would retry forever
+    with pytest.raises(AssertionError):
+        FaultProfile(concurrency_limit=-1)
+    assert not FaultProfile().enabled
+    assert FaultProfile(concurrency_limit=1).enabled

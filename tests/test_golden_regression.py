@@ -1,0 +1,125 @@
+"""Golden regression fixtures: committed DeploymentPlan + ExecutionReport
+JSON under ``tests/golden/``.
+
+These pin BOTH the wire schema and the numerics: a key appearing,
+disappearing, or changing type fails with a loud schema-drift message;
+a numeric drift fails with the value diff. After an INTENTIONAL change,
+regenerate with::
+
+    PYTHONPATH=src python -m pytest tests/test_golden_regression.py \
+        --regen-golden
+
+and commit the rewritten fixtures.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.planner import get_planner
+from repro.plan.schema import DeploymentPlan
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4,           # pinned: golden numerics must not depend on
+    #                         wall-clock calibration
+    intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+
+def _demand(L=4, E=8, seed=0, scale=2000):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _make_plan() -> DeploymentPlan:
+    return get_planner("ods").plan(_demand(), PROF, SPEC, t_limit_s=1e9)
+
+
+def _make_reports(plan: DeploymentPlan):
+    real = _demand(seed=3, scale=2400)     # real routing != planned
+    ideal = ServerlessSimulator(PROF, SPEC, seed=7).run(
+        plan, real, int(real.sum()))
+    faulted = ServerlessSimulator(
+        PROF, SPEC, seed=7,
+        faults=FaultProfile(cold_start_prob=0.5, warm_pool=2,
+                            straggler_prob=0.1, failure_prob=0.1,
+                            concurrency_limit=8)).run(
+        plan, real, int(real.sum()))
+    return {"report_simulator.json": ideal.to_dict(),
+            "report_faulted.json": faulted.to_dict()}
+
+
+def _assert_same_schema(path: str, golden, current):
+    """Loud, specific failure on schema drift (keys/types), then values."""
+    assert type(golden) is type(current), (
+        f"SCHEMA DRIFT at {path}: type {type(golden).__name__} -> "
+        f"{type(current).__name__}. If intentional, rerun with "
+        f"--regen-golden and commit the fixtures.")
+    if isinstance(golden, dict):
+        missing = sorted(set(golden) - set(current))
+        added = sorted(set(current) - set(golden))
+        assert not missing and not added, (
+            f"SCHEMA DRIFT at {path}: fields removed {missing}, fields "
+            f"added {added}. If intentional, rerun with --regen-golden "
+            f"and commit the fixtures.")
+        for k in golden:
+            _assert_same_schema(f"{path}.{k}", golden[k], current[k])
+    elif isinstance(golden, list):
+        assert len(golden) == len(current), \
+            f"length drift at {path}: {len(golden)} -> {len(current)}"
+        for i, (g, c) in enumerate(zip(golden, current)):
+            _assert_same_schema(f"{path}[{i}]", g, c)
+    elif isinstance(golden, float):
+        np.testing.assert_allclose(current, golden, rtol=1e-12, atol=0.0,
+                                   err_msg=f"numeric drift at {path}")
+    else:
+        assert golden == current, \
+            f"value drift at {path}: {golden!r} -> {current!r}"
+
+
+def _check_or_regen(name: str, current: dict, regen: bool):
+    path = GOLDEN_DIR / name
+    if regen:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(current, indent=1, sort_keys=True)
+                        + "\n")
+        pytest.skip(f"regenerated {path}")
+    assert path.exists(), (
+        f"missing golden fixture {path}; generate it once with "
+        f"--regen-golden and commit it")
+    golden = json.loads(path.read_text())
+    _assert_same_schema(name.removesuffix(".json"), golden, current)
+
+
+def test_plan_golden(regen_golden):
+    _check_or_regen("plan_ods.json", _make_plan().to_dict(), regen_golden)
+
+
+@pytest.mark.parametrize("name", ["report_simulator.json",
+                                  "report_faulted.json"])
+def test_report_golden(name, regen_golden):
+    reports = _make_reports(_make_plan())
+    _check_or_regen(name, reports[name], regen_golden)
+
+
+def test_golden_plan_roundtrips_and_drives_backend():
+    """The committed plan JSON is a live artifact: it must load and drive
+    the simulator to exactly the committed report."""
+    plan_path = GOLDEN_DIR / "plan_ods.json"
+    rep_path = GOLDEN_DIR / "report_simulator.json"
+    plan = DeploymentPlan.from_json(plan_path.read_text())
+    fresh = _make_plan()
+    np.testing.assert_array_equal(plan.method, fresh.method)
+    np.testing.assert_array_equal(plan.replicas, fresh.replicas)
+    reports = _make_reports(plan)
+    golden = json.loads(rep_path.read_text())
+    _assert_same_schema("roundtrip", golden, reports["report_simulator.json"])

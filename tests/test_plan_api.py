@@ -72,6 +72,29 @@ def test_chunk_schedule_derivation():
     assert plan.chunk_for_layer(0) == int(expect[0])
 
 
+def test_short_chunk_schedule_falls_back_to_global_beta():
+    """Regression: a chunk schedule shorter than the layer count used to
+    index past the end; missing layers must fall back to the global beta
+    (method-1 layers) and execute identically to the padded schedule."""
+    from repro.core.simulator import ServerlessSimulator
+    d = _demand()
+    L = d.shape[0]
+    sol = solve_fixed_method(1, d, PROF, SPEC)
+    mk = lambda cs: DeploymentPlan(  # noqa: E731
+        method=np.full(L, 1, np.int64), beta=16, mem_mb=sol.mem_mb,
+        replicas=sol.replicas, demand=d, layer_cost=sol.layer_cost,
+        layer_latency=sol.layer_latency, chunk_schedule=cs)
+    short = mk(np.array([4, 8]))                     # 2 entries for 4 layers
+    padded = mk(np.array([4, 8, 16, 16]))            # explicit beta fallback
+    np.testing.assert_array_equal(short.full_chunk_schedule(),
+                                  padded.chunk_schedule)
+    assert short.chunk_for_layer(3) == 16            # no IndexError
+    sim = ServerlessSimulator(PROF, SPEC)
+    r_short = sim.run(short, d, int(d.sum()))
+    r_padded = sim.run(padded, d, int(d.sum()))
+    assert r_short.to_dict() == r_padded.to_dict()
+
+
 # ---------------------------------------------------------------------------
 # Planner registry
 # ---------------------------------------------------------------------------

@@ -1,0 +1,212 @@
+"""repro.traces generators + trace threading through engine/backends/runtime.
+
+Ends with the PR's acceptance scenario: a bursty, drifting trace run
+through ``ServerlessMoERuntime.run_trace`` with fault injection makes
+the planner's chosen replication measurably different from the
+fault-free static plan.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import PlatformSpec
+from repro.core.simulator import FaultProfile
+from repro.traces import (Trace, TraceWindow, bursty_arrivals, demand_trace,
+                          diurnal_arrivals, drift_popularity,
+                          poisson_arrivals, replay_telemetry, request_trace,
+                          zipf_popularity)
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_arrivals_match_rate_and_seed():
+    a = poisson_arrivals(3.0, 4000, seed=0)
+    b = poisson_arrivals(3.0, 4000, seed=0)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4000,) and a.dtype == np.int64
+    assert abs(a.mean() - 3.0) < 0.15
+    assert (poisson_arrivals(3.0, 4000, seed=1) != a).any()
+
+
+def test_bursty_arrivals_are_overdispersed():
+    """MMPP variance-to-mean must exceed Poisson's (which is ~1)."""
+    a = bursty_arrivals(2.0, 4000, burst_mult=8.0, seed=0)
+    p = poisson_arrivals(2.0, 4000, seed=0)
+    assert a.var() / a.mean() > 2.0 * (p.var() / p.mean())
+    np.testing.assert_array_equal(
+        a, bursty_arrivals(2.0, 4000, burst_mult=8.0, seed=0))
+
+
+def test_diurnal_arrivals_swing_with_the_period():
+    a = diurnal_arrivals(6.0, 4800, period=48, depth=0.9, seed=0)
+    phase = np.arange(4800) % 48
+    peak = a[(phase >= 6) & (phase < 18)].mean()      # around sin=+1
+    trough = a[(phase >= 30) & (phase < 42)].mean()   # around sin=-1
+    assert peak > 2.5 * trough
+
+
+# ---------------------------------------------------------------------------
+# popularity processes
+# ---------------------------------------------------------------------------
+
+def test_zipf_popularity_rows_are_distributions():
+    p = zipf_popularity(4, 8, seed=0)
+    assert p.shape == (4, 8)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0)
+    assert (p > 0).all()
+
+
+def test_drift_preserves_mass_and_reorders_experts():
+    p0 = zipf_popularity(4, 8, seed=0)
+    seq = list(drift_popularity(p0, 12, drift=0.4, seed=1))
+    assert len(seq) == 12
+    for p in seq:
+        np.testing.assert_allclose(p.sum(axis=1), 1.0)
+    # hot experts must actually move: per-layer argmax changes somewhere
+    first = np.argmax(p0, axis=1)
+    last = np.argmax(seq[-1], axis=1)
+    assert (first != last).any()
+    # seeded: identical streams
+    seq2 = list(drift_popularity(p0, 12, drift=0.4, seed=1))
+    np.testing.assert_array_equal(seq[-1], seq2[-1])
+
+
+# ---------------------------------------------------------------------------
+# trace builders
+# ---------------------------------------------------------------------------
+
+def test_demand_trace_composes_arrivals_and_popularity():
+    arr = np.array([2, 0, 5])
+    pop = zipf_popularity(2, 4, seed=0)
+    tr = demand_trace(arr, pop, tokens_per_request=10)
+    assert len(tr) == 3
+    assert [w.num_tokens for w in tr] == [20, 0, 50]
+    assert tr.num_tokens == 70
+    np.testing.assert_allclose(tr.windows[2].demand.sum(axis=1), 50.0)
+    np.testing.assert_allclose(tr.total_demand(),
+                               pop * 20 + pop * 0 + pop * 50)
+
+
+def test_demand_trace_rejects_short_popularity_sequence():
+    pops = [zipf_popularity(2, 4, seed=s) for s in range(2)]
+    with pytest.raises(AssertionError, match="shorter"):
+        demand_trace(np.array([1, 1, 1]), iter(pops))
+
+
+def test_replay_telemetry_splits_exactly():
+    class FakeTel:
+        total_tokens = 11
+
+        def demand_matrix(self):
+            return np.full((2, 4), 5.0)
+
+    tr = replay_telemetry(FakeTel(), num_windows=3)
+    assert len(tr) == 3
+    assert tr.num_tokens == 11                      # remainder distributed
+    np.testing.assert_allclose(tr.total_demand(), np.full((2, 4), 5.0))
+
+
+def test_request_trace_times_and_bounds_prompts():
+    arr = np.array([2, 0, 3])
+    reqs = request_trace(arr, vocab_size=64, prompt_len=5,
+                         steps_per_window=4, seed=0)
+    assert len(reqs) == 5
+    assert [r.arrival_step for r in reqs] == [0, 0, 8, 8, 8]
+    for r in reqs:
+        assert r.prompt.shape == (5,)
+        assert (0 <= r.prompt).all() and (r.prompt < 64).all()
+
+
+# ---------------------------------------------------------------------------
+# live engine + runtime threading (jax)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_runtime():
+    from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+    rc = RuntimeConfig(arch="gpt2-moe", d_model_reduced=64,
+                       vocab_reduced=512, seq_len=12, batch_size=2,
+                       profile_batches=1, learn_batches=1, eval_batches=1)
+    rt = ServerlessMoERuntime(rc, spec=PlatformSpec(payload_mb=0.4))
+    # pin the calibrated per-token time: trace tests compare plans/costs
+    # numerically and must not depend on wall-clock (see MEMORY.md)
+    rt.profile = dataclasses.replace(rt.profile, u_ref_s=2e-4)
+    return rt
+
+
+def test_engine_serves_timed_arrival_schedule(tiny_runtime):
+    from repro.serving import ServingEngine
+    rt = tiny_runtime
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    reqs = request_trace(np.array([1, 0, 2, 0, 1]), rt.cfg.vocab_size,
+                         prompt_len=4, max_new_tokens=3,
+                         steps_per_window=3, seed=0)
+    done = eng.run(max_steps=200, arrivals=reqs)
+    assert len(done) == len(reqs)
+    assert all(r.done for r in done)
+    assert eng.telemetry.total_tokens > 0
+    # late arrivals really arrived late: engine kept stepping past the
+    # first request's completion to serve them
+    assert eng.step_count >= 3
+
+
+def test_serving_backend_executes_request_trace(tiny_runtime):
+    from repro.serving import ServingEngine
+    rt = tiny_runtime
+    rt.profile_table()
+    plan = rt.plan(rt.real_demand(rt.learn_batches()[0]))
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    reqs = request_trace(np.array([2, 0, 2]), rt.cfg.vocab_size,
+                         prompt_len=4, max_new_tokens=3,
+                         steps_per_window=2, seed=1)
+    rep = rt.serving_backend(eng).execute_requests(plan, reqs)
+    assert rep.backend == "serving"
+    assert rep.extras["requests"] == len(reqs)
+    assert rep.num_tokens == eng.telemetry.total_tokens
+    np.testing.assert_array_equal(rep.real_demand,
+                                  eng.telemetry.demand_matrix())
+
+
+def test_fault_trace_changes_planned_replication(tiny_runtime):
+    """ACCEPTANCE: under a bursty+drifting trace with faults, the
+    feedback-driven re-plan chooses measurably different replication
+    than the fault-free static plan."""
+    rt = tiny_runtime
+    L, E = rt.num_layers, rt.num_experts
+    pop = zipf_popularity(L, E, seed=0)
+    arr = np.maximum(bursty_arrivals(1.0, 6, burst_mult=8.0, seed=1), 1)
+    arr[3] = 8                                      # guaranteed burst
+    trace = demand_trace(arr, drift_popularity(pop, 6, drift=0.35, seed=2),
+                         tokens_per_request=200)
+    faults = FaultProfile(cold_start_prob=0.5, warm_pool=2,
+                          failure_prob=0.1, concurrency_limit=8)
+
+    static = rt.run_trace(trace, faults=None, replan=False)
+    live = rt.run_trace(trace, faults=faults, replan=True)
+
+    assert live["replans"] >= 1
+    static_plan, final = static["final_plan"], live["final_plan"]
+    assert (final.replicas != static_plan.replicas).any() \
+        or (final.mem_mb != static_plan.mem_mb).any()
+    assert final.replicas.sum() > static_plan.replicas.sum()
+    # the re-plan recorded what changed
+    assert any("replan_diff" in p.metadata for p in live["plans"][1:]) \
+        or "replan_diff" in final.metadata
+    # fault breakdowns surfaced in the reports
+    assert sum(r.cold_starts for r in live["reports"]) > 0
+
+
+def test_run_trace_is_stable_on_stationary_traffic(tiny_runtime):
+    """No drift, no faults: the plan must survive the whole trace without
+    a single re-plan (replicas may only be feedback-adjusted upward)."""
+    rt = tiny_runtime
+    pop = zipf_popularity(rt.num_layers, rt.num_experts, seed=3)
+    tr = Trace(windows=[TraceWindow(demand=pop * 100.0, num_tokens=100)
+                        for _ in range(4)])
+    out = rt.run_trace(tr, faults=None, replan=True)
+    assert out["replans"] == 0
+    np.testing.assert_array_equal(out["final_plan"].method,
+                                  out["plans"][0].method)
