@@ -14,6 +14,21 @@ import jax.numpy as jnp
 from repro.kernels.expert_ffn.kernel import expert_ffn_kernel
 
 
+def aligned_block(block: int, dim: int, sublane: int = 8) -> int:
+    """Clamp a requested block size to ``dim`` and round it UP to the
+    sublane multiple.
+
+    The old clamp ``min(block, max(dim, 8))`` produced misaligned blocks
+    whenever ``8 < dim < block`` (e.g. C=12 -> block 12) or the caller
+    asked for a sub-sublane block — fine under ``interpret=True`` but a
+    Mosaic tiling violation on a real TPU. Rounding the clamped block up
+    (the data is zero-padded to match) keeps numerics identical while
+    staying (8, 128)-tileable for any capacity, including ``C < 8``.
+    """
+    b = max(1, min(block, dim))
+    return ((b + sublane - 1) // sublane) * sublane
+
+
 @partial(jax.jit, static_argnames=("activation", "block_c", "block_f",
                                    "interpret"))
 def expert_ffn_pallas(buf: jnp.ndarray, w_gate: jnp.ndarray,
@@ -21,10 +36,10 @@ def expert_ffn_pallas(buf: jnp.ndarray, w_gate: jnp.ndarray,
                       activation: str = "swiglu", block_c: int = 128,
                       block_f: int = 128,
                       interpret: bool = True) -> jnp.ndarray:
-    # pad capacity / ffn dims up to the block multiples
+    # pad capacity / ffn dims up to the (sublane-aligned) block multiples
     E, C, D = buf.shape
     F = w_gate.shape[-1]
-    bc, bf = min(block_c, max(C, 8)), min(block_f, max(F, 8))
+    bc, bf = aligned_block(block_c, C), aligned_block(block_f, F)
     pc, pf = (-C) % bc, (-F) % bf
     if pc:
         buf = jnp.pad(buf, ((0, 0), (0, pc), (0, 0)))

@@ -1,0 +1,3 @@
+from repro.kernels.grouped_moe.ops import (  # noqa: F401
+    grouped_moe_pallas, moe_grouped_ffn_adapter)
+from repro.kernels.grouped_moe.ref import grouped_moe_ref  # noqa: F401

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the ragged grouped-GEMM expert FFN.
+
+Deliberately structured differently from both the Pallas kernel (scalar
+prefetch indirection) and the model's blocked-einsum fast path: it
+accumulates one masked dense GEMM per expert, so the three realizations
+are mutually independent for differential testing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_moe_ref(x_sorted: jnp.ndarray, tile_expert: jnp.ndarray,
+                    w_gate: jnp.ndarray, w_up, w_down: jnp.ndarray,
+                    activation: str = "swiglu") -> jnp.ndarray:
+    """x_sorted: (R, D); tile_expert: (R // block_rows,);
+    w_gate/w_up: (E, D, F); w_down: (E, F, D)."""
+    R, D = x_sorted.shape
+    nt = tile_expert.shape[0]
+    block_rows = R // nt
+    E = w_gate.shape[0]
+    row_expert = jnp.repeat(tile_expert, block_rows)          # (R,)
+    x = x_sorted.astype(jnp.float32)
+    out = jnp.zeros((R, D), jnp.float32)
+    for e in range(E):
+        mask = (row_expert == e)[:, None]
+        xe = jnp.where(mask, x, 0.0)
+        if activation == "swiglu":
+            assert w_up is not None
+            g = xe @ w_gate[e].astype(jnp.float32)
+            u = xe @ w_up[e].astype(jnp.float32)
+            h = jax.nn.silu(g) * u
+        else:
+            h = jax.nn.gelu(xe @ w_gate[e].astype(jnp.float32))
+        out = out + jnp.where(mask, h @ w_down[e].astype(jnp.float32), 0.0)
+    return out.astype(x_sorted.dtype)

@@ -79,17 +79,21 @@ def collective_bytes(hlo_text: str):
     return out, counts
 
 
-VARIANTS = ("baseline", "ep", "ep_beta4", "mb4", "mb8", "mb8_zero1",
-            "dense_decode", "mb4_zero1", "zero1")
+VARIANTS = ("baseline", "ep", "ep_beta4", "ep_grouped", "ep_grouped_beta4",
+            "mb4", "mb8", "mb8_zero1", "dense_decode", "mb4_zero1",
+            "zero1")
 
 
 def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             out_dir: Path, force: bool = False, variant: str = "baseline"):
     """``variant`` selects a §Perf optimization over the paper-faithful
     baseline: ep[_betaN] = explicit expert-parallel shard_map all_to_all
-    (optionally beta-pipelined); mbN[_zero1] = N-way gradient accumulation
-    (+ ZeRO-1 optimizer-state sharding); dense_decode = sequence-sharded
-    dense decode attention (no cache all-gather)."""
+    (optionally beta-pipelined); ep_grouped[_betaN] = the DROPLESS
+    gather-based grouped EP (beta chunks over sorted expert groups —
+    ``ep_config_for_plan(..., executor="grouped")``); mbN[_zero1] = N-way
+    gradient accumulation (+ ZeRO-1 optimizer-state sharding);
+    dense_decode = sequence-sharded dense decode attention (no cache
+    all-gather)."""
     vtag = "" if variant == "baseline" else f"+{variant}"
     tag = f"{arch}_{shape_name}_{mesh_kind}{vtag}".replace("/", "-")
     out_path = out_dir / f"{tag}.json"
@@ -118,10 +122,12 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         microbatch = int(variant.split("_")[0][2:])
     if variant.startswith("ep"):
         from functools import partial as _partial
-        from repro.distributed.moe_parallel import expert_parallel_moe
+        from repro.distributed.moe_parallel import (
+            expert_parallel_moe, expert_parallel_moe_grouped)
         beta = int(variant.split("beta")[1]) if "beta" in variant else 1
-        model.moe_layer_fn = _partial(expert_parallel_moe, mesh=mesh,
-                                      beta=beta)
+        ep_fn = expert_parallel_moe_grouped \
+            if variant.startswith("ep_grouped") else expert_parallel_moe
+        model.moe_layer_fn = _partial(ep_fn, mesh=mesh, beta=beta)
     if variant == "dense_decode":
         model.decode_dense_threshold = 1 << 30
     t0 = time.time()

@@ -25,7 +25,8 @@ from repro.models import Model
 from repro.models.frontends import frontend_token_count
 
 
-def ep_config_for_plan(plan, platform=None) -> Dict[str, Any]:
+def ep_config_for_plan(plan, platform=None, *,
+                       executor: str = "dense") -> Dict[str, Any]:
     """Map a ``DeploymentPlan``'s comm design onto the expert-parallel
     ``shard_map`` realization (``repro.distributed.moe_parallel``) and the
     dry-run variant that lowers it:
@@ -35,6 +36,12 @@ def ep_config_for_plan(plan, platform=None) -> Dict[str, Any]:
     * method 3 (direct transfer) -> monolithic all_to_all (``beta=1``)
       with the platform payload cap as ``max_chunk_bytes``;
     * method 2 (non-pipelined indirect) -> ``beta=1``, no cap.
+
+    ``executor="grouped"`` targets the DROPLESS
+    :func:`repro.distributed.moe_parallel.expert_parallel_moe_grouped`
+    instead: the same ``beta`` chunk count pipelines the SORTED ragged
+    expert groups (the payload cap does not apply — chunk payloads scale
+    with routed tokens, not capacity).
 
     This is the seam through which a planner-produced plan configures a
     multi-host JAX-mesh execution backend.
@@ -46,9 +53,14 @@ def ep_config_for_plan(plan, platform=None) -> Dict[str, Any]:
     max_chunk_bytes = None
     if platform is not None and (method == 3).any():
         max_chunk_bytes = int(platform.payload_bytes)
-    variant = f"ep_beta{beta}" if beta > 1 else "ep"
-    return {"beta": beta, "max_chunk_bytes": max_chunk_bytes,
-            "variant": variant}
+    tag = "ep_grouped" if executor == "grouped" else "ep"
+    variant = f"{tag}_beta{beta}" if beta > 1 else tag
+    out = {"beta": beta, "max_chunk_bytes": max_chunk_bytes,
+           "variant": variant}
+    if executor == "grouped":
+        out["executor"] = "grouped"
+        out["max_chunk_bytes"] = None
+    return out
 
 
 def applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:

@@ -110,9 +110,12 @@ def block_forward(
     return_cache: bool = False,
     moe_ffn_fn=None,
     moe_layer_fn=None,
+    moe_executor: str = "dense",
+    moe_grouped_fn=None,
 ) -> Tuple[jnp.ndarray, Dict[str, Any], Dict[str, Any]]:
     """Returns (x, cache, captured). ``captured`` may hold attn_argmax /
-    topk_idx / expert_counts for the paper's feature extraction."""
+    topk_idx / expert_counts / routing (the executor's RoutingSummary)
+    for the paper's feature extraction and the serving telemetry."""
     cache: Dict[str, Any] = {}
     cap: Dict[str, Any] = {}
     h = apply_norm(cfg.norm, params["norm1"], x)
@@ -162,7 +165,9 @@ def block_forward(
             y, aux = moe_layer_fn(params["moe"], cfg, h)
         else:
             y, aux = moe_forward(params["moe"], cfg, h, capture=capture,
-                                 expert_ffn_fn=moe_ffn_fn)
+                                 executor=moe_executor,
+                                 expert_ffn_fn=moe_ffn_fn,
+                                 grouped_ffn_fn=moe_grouped_fn)
         x = x + y
         cap["lb_loss"] = aux["lb_loss"]
         cap["z_loss"] = aux["z_loss"]
@@ -170,6 +175,8 @@ def block_forward(
         if capture:
             cap["topk_idx"] = aux["topk_idx"]
             cap["topk_weight"] = aux["topk_weight"]
+            if "routing" in aux:
+                cap["routing"] = aux["routing"]
     return x, cache, cap
 
 
@@ -190,6 +197,8 @@ def block_decode_step(
     cross_valid=None,
     moe_ffn_fn=None,
     moe_layer_fn=None,
+    moe_executor: str = "dense",
+    moe_grouped_fn=None,
     dense_threshold: int = 4096,
 ) -> Tuple[jnp.ndarray, Dict[str, Any], Dict[str, Any]]:
     """Returns (x, new_cache, captured). ``pos`` may be scalar or (B,).
@@ -249,9 +258,13 @@ def block_decode_step(
             y, aux = moe_layer_fn(params["moe"], cfg, h)
         else:
             y, aux = moe_forward(params["moe"], cfg, h, capture=capture,
-                                 expert_ffn_fn=moe_ffn_fn)
+                                 executor=moe_executor,
+                                 expert_ffn_fn=moe_ffn_fn,
+                                 grouped_ffn_fn=moe_grouped_fn)
         x = x + y
         if capture and "topk_idx" in aux:
             cap["topk_idx"] = aux["topk_idx"]
             cap["topk_weight"] = aux["topk_weight"]
+            if "routing" in aux:
+                cap["routing"] = aux["routing"]
     return x, new_cache, cap

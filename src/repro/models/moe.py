@@ -1,20 +1,38 @@
-"""Mixture-of-Experts layer: top-k router + capacity-buffer dispatch.
+"""Mixture-of-Experts layer: top-k router + pluggable dispatch executors.
 
-The dispatch is sort-based (GShard-style capacity buffers, no dense
-(N, E, C) one-hot einsum): token/expert pairs are sorted by expert,
-assigned a position inside their expert's fixed-capacity buffer, scattered
-into (E, C, d) buffers, processed by a batched expert FFN, and combined
-back with the router weights. Overflowing tokens are dropped (capacity
-factor controls the drop rate), exactly the mechanism the paper's
-deployment policy sizes memory for.
+One routing front-end (:func:`route`) feeds three interchangeable
+executors, selected by ``moe_forward(..., executor=...)``:
 
-The same dispatch plan feeds three executors:
-* local dense        -- this module (single device / data parallel);
-* expert parallel    -- ``repro.distributed.moe_parallel`` (all_to_all);
-* Pallas kernel      -- ``repro.kernels.expert_ffn`` consumes the buffers.
+* ``"dense"``   -- GShard-style sort-based capacity buffers: token/expert
+  pairs are sorted by expert, assigned a position inside their expert's
+  fixed-capacity ``(E, C, d)`` buffer, processed by a batched expert FFN,
+  and combined back with the router weights. Overflowing tokens are
+  DROPPED (capacity factor controls the drop rate) — the mechanism the
+  paper's deployment policy sizes memory for.
+* ``"grouped"`` -- dropless ragged grouped GEMM: pairs are sorted by
+  expert into block-aligned ragged groups (no capacity bound, no drops);
+  compute cost is proportional to the tokens actually routed, not to a
+  padded capacity. The Pallas realization lives in
+  ``repro.kernels.grouped_moe``; the jnp fast path here uses the same
+  layout with a blocked per-tile einsum.
+* ``"oracle"``  -- every expert computed for every token, top-k mixed
+  (O(N*E*ff), tests/benchmarks only).
+
+Every executor emits a shared :class:`RoutingSummary` (per-expert routed
+/kept/dropped counts, drop mask, group offsets) consumed by the serving
+telemetry, so downstream cost measurements see exactly what the execution
+path computed or refused to compute.
+
+The same dispatch plans also feed the distributed layer
+(``repro.distributed.moe_parallel``: all_to_all capacity buffers, or the
+gather-based dropless grouped variant) and the Pallas kernels
+(``repro.kernels.expert_ffn`` on capacity buffers,
+``repro.kernels.grouped_moe`` on sorted ragged groups).
 """
 from __future__ import annotations
 
+import math
+from fractions import Fraction
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -23,6 +41,8 @@ import jax.numpy as jnp
 from repro.config import MoEConfig, ModelConfig
 from repro.models.common import Params, dense_init, split_keys
 from repro.models.mlp import init_mlp, mlp_forward
+
+MOE_EXECUTORS = ("dense", "grouped", "oracle")
 
 
 # ---------------------------------------------------------------------------
@@ -100,8 +120,38 @@ class DispatchPlan(NamedTuple):
 
 def capacity_for(n_tokens: int, m: MoEConfig, num_experts: int,
                  multiple: int = 8) -> int:
-    c = int(n_tokens * m.top_k * m.capacity_factor / num_experts) + 1
+    """Per-expert buffer rows: ceil(n * k * capacity_factor / E), rounded
+    up to ``multiple``.
+
+    The ceiling is taken in EXACT rational arithmetic
+    (``Fraction(cf).limit_denominator`` recovers the decimal the float
+    encodes), so the result never depends on float rounding of the
+    ``n * k * cf / E`` product chain: when ``n_tokens * top_k`` divides
+    evenly by ``num_experts`` at cf=1.0 a perfectly balanced routing
+    fits exactly — no off-by-one row that the multiple round-up would
+    inflate into a whole extra tile.
+    """
+    cf = Fraction(m.capacity_factor).limit_denominator(1 << 16)
+    c = max(1, math.ceil(Fraction(n_tokens * m.top_k) * cf / num_experts))
     return ((c + multiple - 1) // multiple) * multiple
+
+
+class RoutingSummary(NamedTuple):
+    """What an executor did with the routed (token, k) pairs.
+
+    Shared across all executors and surfaced through ``aux["routing"]``
+    (and, under ``capture``, through the serving telemetry): the planner's
+    demand signal counts ROUTED pairs, while ``dropped`` exposes the tax
+    the capacity-buffer path silently pays under skew. All leaves are
+    arrays so the summary flows through scan/jit capture stacking.
+    """
+
+    expert_counts: jnp.ndarray  # (E,) int32 routed pair counts (pre-drop)
+    kept_counts: jnp.ndarray    # (E,) int32 pairs actually computed
+    dropped: jnp.ndarray        # (E,) int32 pairs dropped by capacity
+    drop_mask: jnp.ndarray      # (N, k) bool, True where the pair dropped
+    group_offsets: jnp.ndarray  # (E,) int32 first buffer row of each expert
+    capacity: jnp.ndarray       # () int32 per-expert capacity (0 = dropless)
 
 
 def build_dispatch(topk_idx: jnp.ndarray, num_experts: int,
@@ -153,6 +203,121 @@ def combine_tokens(buf_out: jnp.ndarray, plan: DispatchPlan,
 
 
 # ---------------------------------------------------------------------------
+# Grouped (dropless) dispatch: sorted block-aligned ragged groups
+# ---------------------------------------------------------------------------
+
+class GroupedDispatch(NamedTuple):
+    """Sorted ragged-group layout for the dropless grouped-GEMM path."""
+
+    row_of_pair: jnp.ndarray    # (N, k) int32 destination row per pair
+    tile_expert: jnp.ndarray    # (T,) int32 expert owning each row tile
+    group_offsets: jnp.ndarray  # (E,) int32 first row of each expert group
+    expert_counts: jnp.ndarray  # (E,) int32 routed pair counts
+    block_rows: int             # static row-tile height
+    num_rows: int               # static padded row count R (T * block_rows)
+
+
+def grouped_rows_for(n_pairs: int, num_experts: int, block_rows: int = 8,
+                     multiple: int = 1) -> int:
+    """Static worst-case sorted-buffer rows: every routed pair plus up to
+    ``block_rows - 1`` padding rows per ACTIVE expert (at most
+    ``min(E, n_pairs)`` experts can be active), tile-aligned."""
+    active = min(num_experts, n_pairs)
+    worst = n_pairs + active * (block_rows - 1)
+    step = block_rows * max(1, multiple)
+    return ((worst + step - 1) // step) * step
+
+
+def build_grouped_dispatch(topk_idx: jnp.ndarray, num_experts: int, *,
+                           block_rows: int = 8,
+                           row_multiple: int = 1) -> GroupedDispatch:
+    """Sort (token, k) pairs by expert into block-aligned ragged groups.
+
+    Each expert's group is padded up to a multiple of ``block_rows`` so
+    every row tile belongs to exactly one expert (``tile_expert``) — the
+    layout both the jnp blocked fast path and the
+    ``repro.kernels.grouped_moe`` Pallas kernel consume. No capacity
+    bound: every pair gets a unique destination row (dropless).
+    ``row_multiple`` additionally aligns the TOTAL row count (in tiles)
+    so the distributed path can split rows into equal pipeline chunks.
+    """
+    N, k = topk_idx.shape
+    E = num_experts
+    flat_e = topk_idx.reshape(N * k)
+    counts = jnp.bincount(flat_e, length=E)
+    padded = ((counts + block_rows - 1) // block_rows) * block_rows
+    ends = jnp.cumsum(padded)
+    offsets = ends - padded
+    R = grouped_rows_for(N * k, E, block_rows, row_multiple)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    raw_off = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(N * k) - raw_off[sorted_e]
+    dest_sorted = offsets[sorted_e] + pos_in_e
+    row_of_flat = jnp.zeros((N * k,), jnp.int32).at[order].set(
+        dest_sorted.astype(jnp.int32))
+    # tile t covers rows [t*block_rows, (t+1)*block_rows) — one group each;
+    # tiles past the last group clamp to E-1 and hold only zero rows
+    tile_start = jnp.arange(R // block_rows) * block_rows
+    tile_expert = jnp.clip(
+        jnp.searchsorted(ends, tile_start, side="right"), 0, E - 1)
+    return GroupedDispatch(
+        row_of_pair=row_of_flat.reshape(N, k),
+        tile_expert=tile_expert.astype(jnp.int32),
+        group_offsets=offsets.astype(jnp.int32),
+        expert_counts=counts.astype(jnp.int32),
+        block_rows=block_rows,
+        num_rows=R,
+    )
+
+
+def dispatch_grouped(x_flat: jnp.ndarray, gd: GroupedDispatch) -> jnp.ndarray:
+    """Scatter tokens into the sorted (R, d) ragged-group buffer."""
+    d = x_flat.shape[-1]
+    N, k = gd.row_of_pair.shape
+    tok = jnp.arange(N * k) // k
+    buf = jnp.zeros((gd.num_rows, d), x_flat.dtype)
+    return buf.at[gd.row_of_pair.reshape(-1)].set(x_flat[tok])
+
+
+def combine_grouped(buf_out: jnp.ndarray, gd: GroupedDispatch,
+                    topk_weight: jnp.ndarray) -> jnp.ndarray:
+    """Gather every pair's expert output (dropless) and mix by router
+    weight."""
+    g = buf_out[gd.row_of_pair]                      # (N, k, d)
+    return jnp.einsum("nkd,nk->nd", g, topk_weight.astype(g.dtype))
+
+
+def grouped_expert_ffn(params: Params, buf: jnp.ndarray,
+                       tile_expert: jnp.ndarray,
+                       activation: str) -> jnp.ndarray:
+    """jnp fast path: blocked grouped GEMM over (T, block_rows, d) tiles.
+
+    Gathers each tile's expert weights and contracts per tile — the same
+    ragged layout (and cost ∝ routed tokens) as the Pallas kernel, with
+    f32 accumulation. ``repro.kernels.grouped_moe.moe_grouped_ffn_adapter``
+    is the drop-in kernel replacement.
+    """
+    R, d = buf.shape
+    T = tile_expert.shape[0]
+    xb = buf.reshape(T, R // T, d).astype(jnp.float32)
+    if activation == "swiglu":
+        wg = params["w_gate"][tile_expert].astype(jnp.float32)
+        wu = params["w_up"][tile_expert].astype(jnp.float32)
+        g = jnp.einsum("tbd,tdf->tbf", xb, wg)
+        u = jnp.einsum("tbd,tdf->tbf", xb, wu)
+        h = jax.nn.silu(g) * u
+        wd = params["w_down"][tile_expert].astype(jnp.float32)
+    else:
+        wi = params["w_in"][tile_expert].astype(jnp.float32)
+        h = jax.nn.gelu(jnp.einsum("tbd,tdf->tbf", xb, wi))
+        wd = params["w_out"][tile_expert].astype(jnp.float32)
+    out = jnp.einsum("tbf,tfd->tbd", h, wd)
+    return out.reshape(R, d).astype(buf.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Expert FFN on capacity buffers
 # ---------------------------------------------------------------------------
 
@@ -171,28 +336,96 @@ def expert_ffn(params: Params, buf: jnp.ndarray, activation: str) -> jnp.ndarray
 # Full layer
 # ---------------------------------------------------------------------------
 
+def _all_experts_out(params: Params, activation: str,
+                     x_flat: jnp.ndarray) -> jnp.ndarray:
+    """(E, N, d): every expert applied to every token (oracle compute)."""
+    if activation == "swiglu":
+        g = jnp.einsum("nd,edf->enf", x_flat, params["w_gate"])
+        u = jnp.einsum("nd,edf->enf", x_flat, params["w_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("enf,efd->end", h, params["w_down"])
+    h = jax.nn.gelu(jnp.einsum("nd,edf->enf", x_flat, params["w_in"]))
+    return jnp.einsum("enf,efd->end", h, params["w_out"])
+
+
+def _dropless_summary(counts: jnp.ndarray, drop_mask_shape: Tuple[int, int],
+                      group_offsets: jnp.ndarray) -> RoutingSummary:
+    return RoutingSummary(
+        expert_counts=counts,
+        kept_counts=counts,
+        dropped=jnp.zeros_like(counts),
+        drop_mask=jnp.zeros(drop_mask_shape, bool),
+        group_offsets=group_offsets.astype(jnp.int32),
+        capacity=jnp.int32(0),
+    )
+
+
 def moe_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
-                *, capture: bool = False,
-                expert_ffn_fn=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Local (data-parallel) MoE layer. x: (B, S, d)."""
+                *, executor: str = "dense", capture: bool = False,
+                expert_ffn_fn=None, grouped_ffn_fn=None,
+                block_rows: int = 8
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Local (data-parallel) MoE layer. x: (B, S, d).
+
+    ``executor`` selects the dispatch path (see module docstring):
+    ``"dense"`` capacity buffers (may drop tokens), ``"grouped"`` dropless
+    ragged grouped GEMM, ``"oracle"`` all-experts reference.
+    ``expert_ffn_fn`` / ``grouped_ffn_fn`` swap in the Pallas kernels for
+    the dense / grouped expert compute respectively. ``aux["routing"]``
+    always carries the executor's :class:`RoutingSummary`.
+    """
     m = cfg.moe
     assert m is not None
+    if executor not in MOE_EXECUTORS:
+        raise ValueError(f"unknown MoE executor {executor!r}; "
+                         f"expected one of {MOE_EXECUTORS}")
     B, S, d = x.shape
     x_flat = x.reshape(B * S, d)
     r = route(params["router"], x_flat, m, valid_experts=m.num_experts)
     E = params["router"].shape[-1]
-    C = capacity_for(B * S, m, E)
-    plan = build_dispatch(r.topk_idx, E, C)
-    buf = dispatch_tokens(x_flat, plan, E)
-    fn = expert_ffn_fn or expert_ffn
-    buf_out = fn(params, buf, cfg.activation)
-    y = combine_tokens(buf_out, plan, r.topk_weight)
+
+    if executor == "dense":
+        C = capacity_for(B * S, m, E)
+        plan = build_dispatch(r.topk_idx, E, C)
+        buf = dispatch_tokens(x_flat, plan, E)
+        fn = expert_ffn_fn or expert_ffn
+        buf_out = fn(params, buf, cfg.activation)
+        y = combine_tokens(buf_out, plan, r.topk_weight)
+        counts = plan.expert_counts
+        kept = jnp.minimum(counts, C)    # sort-based: first C per expert
+        summary = RoutingSummary(
+            expert_counts=counts,
+            kept_counts=kept,
+            dropped=counts - kept,
+            drop_mask=~plan.kept,
+            group_offsets=jnp.arange(E, dtype=jnp.int32) * C,
+            capacity=jnp.int32(C),
+        )
+    elif executor == "grouped":
+        gd = build_grouped_dispatch(r.topk_idx, E, block_rows=block_rows)
+        buf = dispatch_grouped(x_flat, gd)
+        fn = grouped_ffn_fn or grouped_expert_ffn
+        buf_out = fn(params, buf, gd.tile_expert, cfg.activation)
+        y = combine_grouped(buf_out, gd, r.topk_weight)
+        summary = _dropless_summary(gd.expert_counts,
+                                    (B * S, m.top_k), gd.group_offsets)
+    else:  # oracle
+        all_out = _all_experts_out(params, cfg.activation, x_flat)
+        sel = jnp.take_along_axis(
+            jnp.moveaxis(all_out, 0, 1), r.topk_idx[..., None], axis=1)
+        y = jnp.einsum("nkd,nk->nd", sel, r.topk_weight.astype(sel.dtype))
+        counts = jnp.bincount(r.topk_idx.reshape(-1),
+                              length=E).astype(jnp.int32)
+        summary = _dropless_summary(counts, (B * S, m.top_k),
+                                    jnp.cumsum(counts) - counts)
+
     if m.num_shared_experts > 0:
         y = y + mlp_forward(params["shared"], x_flat, cfg.activation)
     aux: Dict[str, jnp.ndarray] = {
         "lb_loss": r.lb_loss * m.router_aux_coef,
         "z_loss": r.z_loss * m.router_z_coef,
-        "expert_counts": plan.expert_counts,
+        "expert_counts": summary.expert_counts,
+        "routing": summary,
     }
     if capture:
         aux["topk_idx"] = r.topk_idx.reshape(B, S, m.top_k)
@@ -205,21 +438,15 @@ def moe_forward_oracle(params: Params, cfg: ModelConfig,
     """Reference: every expert computed for every token, then top-k mixed.
 
     O(N * E * ff) -- only for tests. No capacity dropping, so it matches
-    ``moe_forward`` exactly only when capacity_factor admits all tokens.
+    the dense executor exactly only when capacity_factor admits every
+    token; the grouped executor matches it for EVERY routing.
     """
     m = cfg.moe
     assert m is not None
     B, S, d = x.shape
     x_flat = x.reshape(B * S, d)
     r = route(params["router"], x_flat, m)
-    if cfg.activation == "swiglu":
-        g = jnp.einsum("nd,edf->enf", x_flat, params["w_gate"])
-        u = jnp.einsum("nd,edf->enf", x_flat, params["w_up"])
-        h = jax.nn.silu(g) * u
-        all_out = jnp.einsum("enf,efd->end", h, params["w_down"])
-    else:
-        h = jax.nn.gelu(jnp.einsum("nd,edf->enf", x_flat, params["w_in"]))
-        all_out = jnp.einsum("enf,efd->end", h, params["w_out"])
+    all_out = _all_experts_out(params, cfg.activation, x_flat)
     # all_out: (E, N, d); select top-k
     sel = jnp.take_along_axis(
         jnp.moveaxis(all_out, 0, 1), r.topk_idx[..., None], axis=1)  # (N,k,d)

@@ -35,11 +35,19 @@ class Model:
     """Functional model wrapper bound to a :class:`ModelConfig`."""
 
     def __init__(self, cfg: ModelConfig, *, expert_pad_multiple: int = 1,
-                 moe_ffn_fn=None, moe_layer_fn=None, remat: bool = True):
+                 moe_ffn_fn=None, moe_layer_fn=None,
+                 moe_executor: str = "dense", moe_grouped_fn=None,
+                 remat: bool = True):
         self.cfg = cfg
         self.expert_pad_multiple = expert_pad_multiple
         self.moe_ffn_fn = moe_ffn_fn
         self.moe_layer_fn = moe_layer_fn   # replaces the whole MoE layer
+        # default MoE dispatch path ("dense" | "grouped" | "oracle");
+        # forward/prefill/decode_step accept a per-call override so e.g.
+        # the serving engine can pick the dropless grouped path without
+        # mutating a shared Model instance
+        self.moe_executor = moe_executor
+        self.moe_grouped_fn = moe_grouped_fn
         self.remat = remat   # checkpoint each block in the training path
         self.decode_dense_threshold = 4096  # see attention_decode_step
         self.num_experts_padded = (
@@ -132,11 +140,15 @@ class Model:
         capture: bool = False,
         return_cache: bool = False,
         hidden_only: bool = False,
+        moe_executor: Optional[str] = None,
     ) -> Tuple[jnp.ndarray, Dict[str, Any], Any]:
         """Returns (logits, aux, cache). ``aux`` carries MoE losses and,
         under ``capture``, per-block routing/attention features.
-        ``hidden_only`` skips the LM head (the loss fuses head+CE)."""
+        ``hidden_only`` skips the LM head (the loss fuses head+CE).
+        ``moe_executor`` overrides the model's MoE dispatch path for this
+        call."""
         cfg = self.cfg
+        executor = moe_executor or self.moe_executor
         x = jnp.take(params["embed"], tokens, axis=0)
         n_front = 0
         if cfg.frontend == "vision_stub" and frontend is not None:
@@ -162,7 +174,9 @@ class Model:
                     blk_params[f"pos{p}"], shared, cfg, spec, h,
                     positions=positions, enc_out=enc_out, capture=capture,
                     return_cache=return_cache, moe_ffn_fn=self.moe_ffn_fn,
-                    moe_layer_fn=self.moe_layer_fn)
+                    moe_layer_fn=self.moe_layer_fn,
+                    moe_executor=executor,
+                    moe_grouped_fn=self.moe_grouped_fn)
                 caches[f"pos{p}"] = c
                 caps[f"pos{p}"] = cap
             return h, (caches, caps)
@@ -260,7 +274,8 @@ class Model:
         return out
 
     def prefill(self, params: Params, tokens: jnp.ndarray, *,
-                frontend=None, enc_tokens=None, capture: bool = False):
+                frontend=None, enc_tokens=None, capture: bool = False,
+                moe_executor: Optional[str] = None):
         """Full-sequence pass that returns (logits, cache) for decoding.
 
         With ``capture=True`` returns (logits, cache, aux) where ``aux``
@@ -268,14 +283,15 @@ class Model:
         engine's telemetry source)."""
         logits, aux, cache = self.forward(
             params, tokens, frontend=frontend, enc_tokens=enc_tokens,
-            return_cache=True, capture=capture)
+            return_cache=True, capture=capture, moe_executor=moe_executor)
         if capture:
             return logits, cache, aux
         return logits, cache
 
     def decode_step(self, params: Params, tokens: jnp.ndarray,
                     cache: Dict[str, Any], pos, *,
-                    capture: bool = False, cross_valid=None):
+                    capture: bool = False, cross_valid=None,
+                    moe_executor: Optional[str] = None):
         """One-token step. tokens: (B, 1); ``pos``: absolute position —
         scalar (whole batch) or a (B,) vector of per-slot positions for
         ragged continuous batching. Returns (logits, new_cache), or
@@ -284,6 +300,7 @@ class Model:
         captures. ``cross_valid`` masks encoder padding per row (enc-dec
         slots prefilled from ragged sources)."""
         cfg = self.cfg
+        executor = moe_executor or self.moe_executor
         pos = jnp.asarray(pos)
         x = jnp.take(params["embed"], tokens, axis=0)
         if cfg.pos_embed == "learned":
@@ -304,6 +321,8 @@ class Model:
                     cross_valid=cross_valid,
                     moe_ffn_fn=self.moe_ffn_fn,
                     moe_layer_fn=self.moe_layer_fn,
+                    moe_executor=executor,
+                    moe_grouped_fn=self.moe_grouped_fn,
                     dense_threshold=self.decode_dense_threshold)
                 new_caches[f"pos{p}"] = nc
                 caps[f"pos{p}"] = cap

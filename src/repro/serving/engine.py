@@ -39,10 +39,19 @@ from repro.serving.telemetry import ExpertTelemetry
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_len: int = 256,
                  batch_size: int = 4, eos_id: Optional[int] = None,
-                 collect_telemetry: bool = True, prompt_bucket: int = 8):
+                 collect_telemetry: bool = True, prompt_bucket: int = 8,
+                 moe_executor: str = "grouped"):
         self.model = model
         self.params = params
         self.cfg = model.cfg
+        # Serving dispatches MoE layers through the DROPLESS grouped
+        # ragged-GEMM path by default: under the skewed expert popularity
+        # the planner exploits, the dense capacity path silently drops
+        # tokens mid-stream. Passed per-call (never mutates the shared
+        # Model). RoutingSummary drops (zero for "grouped") flow into the
+        # telemetry's dropped_matrix.
+        self.moe_executor = moe_executor if self.cfg.moe is not None \
+            else None
         self.max_len = max_len
         self.batch_size = batch_size          # == number of decode slots
         self.num_slots = batch_size
@@ -88,11 +97,12 @@ class ServingEngine:
         if self._capture:
             logits, cache, aux = self.model.prefill(
                 params, toks, frontend=frontend, enc_tokens=enc_tokens,
-                capture=True)
+                capture=True, moe_executor=self.moe_executor)
             caps = aux["captures"]
         else:
             logits, cache = self.model.prefill(
-                params, toks, frontend=frontend, enc_tokens=enc_tokens)
+                params, toks, frontend=frontend, enc_tokens=enc_tokens,
+                moe_executor=self.moe_executor)
             caps = {}
         cache = self.model.prepare_decode_cache(cache, self.max_len)
         # last REAL token's logits (bucketed prompts are right-padded),
@@ -103,10 +113,11 @@ class ServingEngine:
         if self._capture:
             logits, cache, caps = self.model.decode_step(
                 params, toks, cache, pos, capture=True,
-                cross_valid=cross_valid)
+                cross_valid=cross_valid, moe_executor=self.moe_executor)
         else:
             logits, cache = self.model.decode_step(
-                params, toks, cache, pos, cross_valid=cross_valid)
+                params, toks, cache, pos, cross_valid=cross_valid,
+                moe_executor=self.moe_executor)
             caps = {}
         # never emit padding-vocab ids: they corrupt telemetry keying and
         # downstream consumers of Request.output

@@ -35,17 +35,43 @@ class ExpertTelemetry:
         self.vocab_size = vocab_size
         self.pattern_len = pattern_len
         self.demand = np.zeros((num_layers, num_experts))
+        # pairs the execution path REFUSED to compute (capacity-buffer
+        # drops); identically zero under the dropless grouped executor
+        self.drop_counts = np.zeros((num_layers, num_experts))
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self._records: List[LayerRecords] = []
         self._token_freq = np.zeros(vocab_size)   # pending flush buffer
         self.served_freq = np.zeros(vocab_size)   # cumulative served tokens
 
+    # -------------------------------------------------------------- routing
+    def _ingest_routing(self, captures: Dict) -> None:
+        """Fold per-layer RoutingSummary captures (``cap["routing"]``,
+        leaves stacked (num_blocks, ...)) into the drop ledger."""
+        for p in range(self.pattern_len):
+            cap = captures.get(f"pos{p}", {})
+            summary = cap.get("routing") if hasattr(cap, "get") else None
+            if summary is None:
+                continue
+            # summary rows span the model's PADDED expert axis (sharding
+            # alignment); pad experts never receive tokens, so slicing to
+            # the real expert count loses nothing
+            dropped = np.asarray(summary.dropped)[:, :self.num_experts]
+            for b in range(dropped.shape[0]):
+                self.drop_counts[b * self.pattern_len + p] += dropped[b]
+
+    def dropped_matrix(self) -> np.ndarray:
+        """Cumulative (L, E) pairs dropped by the execution path — the
+        silent capacity tax the grouped executor eliminates."""
+        return np.nan_to_num(self.drop_counts, copy=True, posinf=0.0,
+                             neginf=0.0)
+
     # -------------------------------------------------------------- prefill
     def record_prefill(self, tokens: np.ndarray, captures: Dict) -> None:
         """``tokens``: (1, S) prompt; ``captures``: aux["captures"] from
         ``Model.prefill(..., capture=True)`` (host arrays)."""
         tokens = np.asarray(tokens)
+        self._ingest_routing(captures)
         recs = extract_features(tokens, captures, self.pattern_len)
         for r in recs:
             np.add.at(self.demand[r.layer], r.experts.ravel(), 1.0)
@@ -74,6 +100,7 @@ class ExpertTelemetry:
         """
         if not active:
             return
+        self._ingest_routing(captures)
         act = np.asarray(list(active), np.int64)
         # defensive: keys must stay inside the table's vocab (the engine
         # already restricts sampling to the valid vocab)
@@ -138,6 +165,7 @@ class ExpertTelemetry:
 
     def reset(self) -> None:
         self.demand[:] = 0.0
+        self.drop_counts[:] = 0.0
         self._token_freq[:] = 0.0
         self.served_freq[:] = 0.0
         self._records.clear()

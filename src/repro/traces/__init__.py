@@ -7,11 +7,12 @@ from repro.traces.generators import (Trace, TraceRequest, TraceWindow,
                                      bursty_arrivals, demand_trace,
                                      diurnal_arrivals, drift_popularity,
                                      poisson_arrivals, replay_telemetry,
-                                     request_trace, zipf_popularity)
+                                     request_trace, zipf_popularity,
+                                     zipf_routing)
 
 __all__ = [
     "Trace", "TraceRequest", "TraceWindow",
     "poisson_arrivals", "bursty_arrivals", "diurnal_arrivals",
-    "zipf_popularity", "drift_popularity",
+    "zipf_popularity", "drift_popularity", "zipf_routing",
     "demand_trace", "replay_telemetry", "request_trace",
 ]

@@ -136,6 +136,20 @@ def zipf_popularity(num_layers: int, num_experts: int, *,
     return np.stack([rng.permutation(zipf) for _ in range(num_layers)])
 
 
+def zipf_routing(n_tokens: int, num_experts: int, top_k: int, *,
+                 alpha: float = 1.2, seed: int = 0) -> np.ndarray:
+    """(n_tokens, top_k) expert assignments drawn (without replacement
+    per token) from a Zipf(alpha) popularity — the skewed routing the
+    dense capacity path drops under. Shared by the kernel benchmarks and
+    the grouped-dispatch tests so skew fixtures cannot drift apart."""
+    rng = np.random.default_rng(seed)
+    p = (1.0 / np.arange(1, num_experts + 1)) ** alpha
+    p /= p.sum()
+    return np.stack([rng.choice(num_experts, size=top_k, replace=False,
+                                p=p)
+                     for _ in range(n_tokens)]).astype(np.int32)
+
+
 def drift_popularity(popularity: np.ndarray, steps: int, *,
                      drift: float = 0.25,
                      seed: int = 0) -> Iterator[np.ndarray]:

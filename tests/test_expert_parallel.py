@@ -40,6 +40,24 @@ for beta, use_kernel in [(1, False), (4, False), (1, True)]:
     assert err < 5e-4, (beta, use_kernel, err)
     assert cnt_err == 0, (beta, use_kernel)
     print(f"beta={beta} kernel={use_kernel} err={err:.2e} OK")
+
+# the grouped EP variant is DROPLESS: it must equal the all-experts
+# oracle even at capacity_factor=1.0 (where the a2a capacity path drops)
+from repro.distributed.moe_parallel import expert_parallel_moe_grouped
+from repro.models.moe import moe_forward_oracle
+cfg1 = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, capacity_factor=1.0))
+y_or = moe_forward_oracle(moe_p, cfg1, x)
+for beta, use_kernel in [(1, False), (4, False), (1, True)]:
+    with mesh:
+        yg, auxg = expert_parallel_moe_grouped(
+            moe_p, cfg1, x, mesh, beta=beta, use_kernel=use_kernel)
+    err = float(jnp.abs(yg - y_or).max())
+    assert err < 5e-5, ("grouped", beta, use_kernel, err)
+    cnt_err = int(jnp.abs(auxg["expert_counts"]
+                          - aux_ref["expert_counts"]).max())
+    assert cnt_err == 0, ("grouped", beta, use_kernel)
+    print(f"grouped beta={beta} kernel={use_kernel} err={err:.2e} OK")
 print("ALL OK")
 """
 

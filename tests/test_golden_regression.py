@@ -100,8 +100,65 @@ def _check_or_regen(name: str, current: dict, regen: bool):
     _assert_same_schema(name.removesuffix(".json"), golden, current)
 
 
+def _make_routing_summary() -> dict:
+    """RoutingSummary of every executor on one PINNED Zipf-skewed batch:
+    pins per-expert routed/kept/dropped counts, the dense capacity, the
+    grouped block-aligned group offsets, and the drop-pair total. All
+    integers — any drift is a real dispatch-semantics change."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import Model
+    from repro.models.moe import moe_forward
+    from conftest import tiny_model
+
+    cfg, _ = tiny_model("qwen2-moe-a2.7b")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, num_experts=8, top_k=2, capacity_factor=1.0))
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    moe_p = jax.tree.map(lambda a: a[0], params["blocks"]["pos0"])["moe"]
+    # Zipf(1.2) per-expert bias, fixed permutation -> skewed routing
+    E = moe_p["router"].shape[-1]
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    bias = 4.0 * np.log(np.random.default_rng(5).permutation(
+        zipf / zipf.max()))
+    moe_p = dict(moe_p)
+    moe_p["router"] = moe_p["router"] + jnp.asarray(bias, jnp.float32)[None]
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(11),
+                                (2, 48, cfg.d_model))
+
+    out = {}
+    for ex in ("dense", "grouped", "oracle"):
+        _, aux = moe_forward(moe_p, cfg, x, executor=ex)
+        s = aux["routing"]
+        out[ex] = {
+            "expert_counts": np.asarray(s.expert_counts).tolist(),
+            "kept_counts": np.asarray(s.kept_counts).tolist(),
+            "dropped": np.asarray(s.dropped).tolist(),
+            "group_offsets": np.asarray(s.group_offsets).tolist(),
+            "capacity": int(s.capacity),
+            "drop_pairs": int(np.asarray(s.drop_mask).sum()),
+        }
+    return out
+
+
 def test_plan_golden(regen_golden):
     _check_or_regen("plan_ods.json", _make_plan().to_dict(), regen_golden)
+
+
+def test_routing_summary_golden(regen_golden):
+    """The pinned skewed batch must keep dropping on dense (nonzero
+    ledger) and never drop on grouped/oracle, with stable offsets."""
+    current = _make_routing_summary()
+    assert sum(current["dense"]["dropped"]) > 0, \
+        "fixture batch must provoke dense drops"
+    assert sum(current["grouped"]["dropped"]) == 0
+    assert current["grouped"]["kept_counts"] == \
+        current["grouped"]["expert_counts"]
+    _check_or_regen("routing_summary.json", current, regen_golden)
 
 
 @pytest.mark.parametrize("name", ["report_simulator.json",

@@ -132,3 +132,10 @@ def test_ep_config_for_plan_maps_comm_design_to_shard_map_knobs():
     assert direct["variant"] == "ep"
     storage = ep_config_for_plan(mk([2, 2], beta=1))
     assert storage == {"beta": 1, "max_chunk_bytes": None, "variant": "ep"}
+    # grouped executor: same beta drives the chunks over SORTED expert
+    # groups; the capacity payload cap does not apply to ragged payloads
+    grouped = ep_config_for_plan(mk([1, 3, 1], beta=4), spec,
+                                 executor="grouped")
+    assert grouped == {"beta": 4, "max_chunk_bytes": None,
+                       "variant": "ep_grouped_beta4",
+                       "executor": "grouped"}

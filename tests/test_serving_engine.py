@@ -2,6 +2,7 @@
 EOS/truncation handling, and expert telemetry vs. capture ground truth."""
 import numpy as np
 import jax
+import jax.numpy as jnp
 import pytest
 
 from repro.core.table import KVTable
@@ -185,7 +186,14 @@ def test_budget_exhaustion_keeps_unadmitted_requests_queued(gpt2_moe):
 # ---------------------------------------------------------------- telemetry
 def test_telemetry_matches_capture_ground_truth():
     """Engine telemetry on a served token stream == real_demand's
-    capture=True ground truth, and it survives KVTable ingestion."""
+    capture=True ground truth, and it survives KVTable ingestion.
+
+    The engine runs the same MoE executor as the offline profiling
+    forward here ("dense"): with stacked MoE layers a later layer routes
+    the PREVIOUS layer's output, so executors that differ in what they
+    compute (capacity drops vs dropless) legitimately diverge in deep
+    routing counts — cross-executor agreement is pinned separately in
+    test_grouped_engine_telemetry_matches_grouped_capture."""
     from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
 
     rc = RuntimeConfig(arch="gpt2-moe", d_model_reduced=64,
@@ -195,7 +203,8 @@ def test_telemetry_matches_capture_ground_truth():
     batch = next(rt.corpus.batches(1))["tokens"]          # (4, 12)
     real = np.sum([rt.real_demand(row[None]) for row in batch], axis=0)
 
-    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2,
+                        moe_executor="dense")
     for row in batch:
         eng.submit(row, max_new_tokens=0)   # prefill-only: same token stream
     done = eng.run()
@@ -212,6 +221,83 @@ def test_telemetry_matches_capture_ground_truth():
     # flush drains the record buffer but keeps cumulative demand
     assert table.ingest_telemetry(tel) == 0
     np.testing.assert_array_equal(tel.demand_matrix(), real)
+
+
+def test_grouped_engine_telemetry_matches_grouped_capture():
+    """The DEFAULT (dropless grouped) engine's demand matrix equals a
+    capture=True forward through the same grouped executor, and its drop
+    ledger is identically zero — the dropless guarantee, observed from
+    serving telemetry."""
+    from repro.core.features import extract_features
+    from repro.core.runtime import RuntimeConfig, ServerlessMoERuntime
+
+    rc = RuntimeConfig(arch="gpt2-moe", d_model_reduced=64,
+                       vocab_reduced=512, seq_len=12, batch_size=4,
+                       profile_batches=1, learn_batches=1, eval_batches=1)
+    rt = ServerlessMoERuntime(rc)
+    batch = next(rt.corpus.batches(1))["tokens"]
+
+    real = np.zeros((rt.num_layers, rt.num_experts))
+    for row in batch:
+        _, aux, _ = rt.model.forward(rt.params, jnp.asarray(row[None]),
+                                     capture=True, moe_executor="grouped")
+        caps = jax.tree.map(np.asarray, aux["captures"])
+        for r in extract_features(row[None], caps, len(rt.cfg.pattern)):
+            np.add.at(real[r.layer], r.experts.ravel(), 1.0)
+
+    eng = ServingEngine(rt.model, rt.params, max_len=32, batch_size=2)
+    assert eng.moe_executor == "grouped"    # serving default is dropless
+    for row in batch:
+        eng.submit(row, max_new_tokens=0)
+    eng.run()
+    np.testing.assert_array_equal(eng.telemetry.demand_matrix(), real)
+    assert eng.telemetry.dropped_matrix().sum() == 0.0
+
+
+def test_dense_engine_reports_capacity_drops():
+    """Forcing the dense executor on a batch that overflows capacity
+    surfaces a nonzero drop ledger — the tax the grouped default
+    removes. (Drops are counted per decoded batch, padding slots
+    included: the summary is batch-level, exactly what the dense path
+    computed.)"""
+    # cf=0.5 with 56-token prompts over 4 experts: capacity rounds to 8
+    # but SOME expert must receive >= ceil(56/4) = 14 pairs (pigeonhole),
+    # so the dense prefill provably drops
+    cfg, model = tiny_model("gpt2-moe", capacity_factor=0.5)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, [56, 50, 52])
+    dense = ServingEngine(model, params, max_len=64, batch_size=3,
+                          moe_executor="dense")
+    for p in prompts:
+        dense.submit(p, max_new_tokens=6)
+    dense.run()
+    grouped = ServingEngine(model, params, max_len=64, batch_size=3,
+                            moe_executor="grouped")
+    for p in prompts:
+        grouped.submit(p, max_new_tokens=6)
+    grouped.run()
+    assert dense.telemetry.dropped_matrix().sum() > 0
+    assert grouped.telemetry.dropped_matrix().sum() == 0.0
+
+
+def test_drop_ledger_survives_padded_expert_axis():
+    """REGRESSION: a Model built with expert_pad_multiple > 1 routes over
+    a padded expert axis; the RoutingSummary rows span E_pad but the
+    telemetry ledger is sized by the real expert count — ingestion must
+    slice, not broadcast-crash (pad experts never receive tokens)."""
+    from repro.models import Model
+    cfg, _ = tiny_model("gpt2-moe", capacity_factor=0.5)
+    model = Model(cfg, expert_pad_multiple=8)   # E=4 -> E_pad=8
+    assert model.num_experts_padded > cfg.moe.num_experts
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_len=64, batch_size=2,
+                        moe_executor="dense")
+    for p in _prompts(cfg, [56, 50]):
+        eng.submit(p, max_new_tokens=3)
+    eng.run()
+    ledger = eng.telemetry.dropped_matrix()
+    assert ledger.shape == (cfg.num_layers, cfg.moe.num_experts)
+    assert ledger.sum() > 0
 
 
 def test_decode_telemetry_counts(gpt2_moe):
