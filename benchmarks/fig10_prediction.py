@@ -12,7 +12,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, small_runtime
-from repro.core.predictor import ExpertPredictor
+from repro.predict import ExpertPredictor, predict_demand_reference
 
 CASES = [
     ("bert-moe", {}),                       # basic Bert MoE: 4e top-1
@@ -25,7 +25,34 @@ CASES = [
 ]
 
 
+def _demand_hot_path_speedup() -> None:
+    """Satellite row: the vectorized ``predict_demand`` (one dense-tensor
+    argsort/einsum pass) vs the historical per-layer, per-unique-token
+    loop — verified exactly equal on the same table before timing."""
+    rt = small_runtime("gpt2-moe")
+    rt.profile_table()
+    b = rt.learn_batches()[0]
+    p = ExpertPredictor(rt.table, top_k=rt.top_k).fit()
+    import numpy as np
+    np.testing.assert_array_equal(p.predict_demand(b, mode="map"),
+                                  predict_demand_reference(p, b,
+                                                           mode="map"))
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        predict_demand_reference(p, b, mode="map")
+    t_loop = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        p.predict_demand(b, mode="map")
+    t_vec = (time.perf_counter() - t0) / reps
+    emit("fig10_demand_vectorized", t_vec * 1e6,
+         f"speedup={t_loop / max(t_vec, 1e-9):.1f}x "
+         f"loop_us={t_loop * 1e6:.0f}")
+
+
 def run() -> None:
+    _demand_hot_path_speedup()
     for arch, over in CASES:
         tag = arch + "".join(f"_{k}{v}" for k, v in over.items())
         rt = small_runtime(arch, **over)

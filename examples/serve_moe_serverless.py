@@ -9,13 +9,17 @@ example, now phrased entirely in the plan API:
    ``SimulatorBackend`` (predicted-demand billing) and ``ServingBackend``
    (the continuous-batching engine serves real requests in the plan's
    chunked scatter-gather rounds, and the measured routing is billed
-   under the plan's comm methods);
+   under the plan's comm methods) — with an ``OnlinePredictor`` attached
+   to the engine, so every decode step emits speculative per-layer
+   prewarm hints and reports the live hit rate;
 3. the runtime re-plans from the live telemetry and prints the structured
    plan diff the re-plan emitted;
 4. the recorded session is replayed as a trace on the fault-injecting
    discrete-event simulator (cold-start storm) to show what the SAME
-   traffic would have cost on a misbehaving platform, and how the Alg. 2
-   feedback loop would have re-planned.
+   traffic would have cost on a misbehaving platform — once reactively
+   and once with the online predictor driving speculative pre-warming
+   (cold starts convert to prewarm hits, mispredictions bill wasted
+   keep-alive GB-seconds).
 
 Run:  PYTHONPATH=src python examples/serve_moe_serverless.py [--requests 6]
 """
@@ -57,7 +61,12 @@ def main() -> None:
     workload = Workload(batches=prompts, max_new_tokens=8)
 
     # --- execute the SAME plan on both backends --------------------------
-    eng = ServingEngine(rt.model, rt.params, max_len=128, batch_size=4)
+    # the online predictor (warm-started from the profiled table) rides
+    # along: each decode step emits speculative prewarm hints and scores
+    # them against the routing that actually happened
+    predictor = rt.online_predictor(decay=0.98)
+    eng = ServingEngine(rt.model, rt.params, max_len=128, batch_size=4,
+                        predictor=predictor)
     serving = rt.serving_backend(eng)
     live = serving.execute(plan, workload)
     print(f"serving backend: billed ${live.billed_cost:.6f} for "
@@ -66,6 +75,10 @@ def main() -> None:
           f"(chunk={live.extras['chunk_tokens']}); "
           f"mean TTFT {1e3 * live.extras['mean_ttft_s']:.1f}ms; "
           f"reasons {live.extras['finish_reasons']}")
+    spec = eng.speculation_stats()
+    print(f"speculative dispatch: {spec['hits']}/{spec['pairs']} routed "
+          f"pairs pre-warmed (hit rate {spec['hit_rate']:.0%}, "
+          f"{spec['misses']} wasted hints)")
 
     sim = rt.simulator_backend()
     offline = sim.execute(plan, Workload(
@@ -98,6 +111,19 @@ def main() -> None:
     print(f"replayed under a cold-start storm: billed ${cost:.6f} "
           f"({cold} cold starts, {retries} retries, "
           f"{replay['replans']} feedback re-plans)")
+
+    # --- same storm, but the online predictor pre-warms each window ------
+    from repro.traces import replay_telemetry
+    warm = rt.run_trace(replay_telemetry(tel, num_windows=4),
+                        plan=rt.last_plan, faults=storm, replan=False,
+                        predictor=predictor, prewarm="predicted")
+    w_cost = sum(r.billed_cost for r in warm["reports"])
+    w_cold = sum(r.cold_starts for r in warm["reports"])
+    hits = sum(r.prewarm_hits for r in warm["reports"])
+    wasted = sum(r.wasted_prewarm_gb_s for r in warm["reports"])
+    print(f"same storm with predictive pre-warming: billed ${w_cost:.6f} "
+          f"({w_cold} cold starts, {hits} prewarm hits, "
+          f"{wasted:.3f} wasted GB-s)")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,12 @@ from repro.core.deployment import (DeploymentPolicy, MethodSolution,
                                    apply_failure_feedback, lambdaml_policy,
                                    ods, random_policy, solve_fixed_method)
 from repro.core.predictor import ExpertPredictor
+# the streaming predictor + prewarm helpers live in repro.predict; the
+# two most-used names are re-exported here for convenience (submodule
+# imports — the repro.predict package itself imports repro.core.features,
+# so importing the predict PACKAGE here would be circular)
+from repro.predict.online import OnlinePredictor
+from repro.predict.prewarm import prewarm_containers
 from repro.core.simulator import (FaultProfile, InvocationEvent,
                                   ServerlessSimulator, SimResult,
                                   cpu_cluster_result)
@@ -33,8 +39,8 @@ from repro.plan.schema import (DeploymentPlan, ExecutionReport, Workload,
 __all__ = [
     # cost/platform models
     "CPUClusterSpec", "ModelProfile", "PlatformSpec",
-    # profiling + prediction
-    "KVTable", "ExpertPredictor",
+    # profiling + prediction (batch + streaming; see repro.predict)
+    "KVTable", "ExpertPredictor", "OnlinePredictor", "prewarm_containers",
     # deployment solvers (Alg. 1) + failure feedback (Alg. 2 lines 10-21)
     "MethodSolution", "DeploymentPolicy", "ods", "solve_fixed_method",
     "lambdaml_policy", "random_policy", "apply_failure_feedback",

@@ -38,6 +38,10 @@ class PlatformSpec:
     # option. cpu_speed(mem) multiplies per-token compute time.
     full_speed_mem_mb: int = 3072
     min_speed_frac: float = 0.06            # 128MB floor
+    # a speculatively pre-warmed container idles warm for this long; a
+    # MISpredicted prewarm bills these GB-seconds for nothing (provisioned
+    # concurrency pricing model). Only consulted when a prewarmer runs.
+    t_prewarm_keepalive_s: float = 1.0
 
     def cpu_slowdown(self, mem_mb: float) -> float:
         """Per-token compute-time multiplier at a given memory size."""

@@ -1,120 +1,14 @@
-"""Expert selection prediction (paper §III-B, Eqs. 1-2).
+"""Compatibility shim: the predictor moved to :mod:`repro.predict`.
 
-The posterior of expert N_{e,i} given only the known feature f1' of a new
-token marginalizes the unknown position f2 and attention ID f3 through the
-profiled joint counts. Expanding Eq. (1), the P'(f2) / P*(f1',f2) factors
-cancel between the inner integrand and the outer weight, leaving
-
-    P(N_{e,i} | f1')  ∝  sum_{f2, f3} count(f1', f2, f3, e, i) * P'(f3)
-
-with P'(f3) approximated by the dataset frequency of token f3 (the paper's
-stated approximation: the attention ID is itself a token ID). Prediction is
-maximum-a-posteriori (Eq. 2), extended to top-k.
-
-``mode="lina"`` reproduces the Lina baseline [USENIX ATC'23]: token-ID-only
-posterior, i.e. count(f1', e, i) with no attention-frequency weighting.
+``repro.core.predictor.ExpertPredictor`` remains importable (planner, BO,
+benchmarks, and user code predate the move); new code should import from
+:mod:`repro.predict`, which also houses the streaming
+:class:`~repro.predict.online.OnlinePredictor`, calibration metrics, and
+the pre-warming helpers.
 """
-from __future__ import annotations
+from repro.predict.posterior import (ExpertPredictor,
+                                     predict_demand_reference,
+                                     predict_reference)
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
-
-import numpy as np
-
-from repro.core.table import KVTable, unpack_key
-
-
-@dataclass
-class ExpertPredictor:
-    table: KVTable
-    mode: str = "full"          # "full" (ours) | "lina" (token-ID only)
-    top_k: int = 1
-    _post: Dict[Tuple[int, int], np.ndarray] = field(default_factory=dict)
-    _prior: Optional[np.ndarray] = None     # (L, E) per-layer expert prior
-
-    # ------------------------------------------------------------------ fit
-    def fit(self) -> "ExpertPredictor":
-        """Compile per-(layer, f1) posteriors from the current table."""
-        keys, vals = self.table.entries()
-        L, E = self.table.num_layers, self.table.num_experts
-        self._post = {}
-        self._prior = np.ones((L, E))       # Laplace prior
-        if len(keys) == 0:
-            return self
-        layer, f1, f2, f3, expert = unpack_key(keys)
-        if self.mode == "full":
-            tf = self.table.token_prob
-            w = vals * np.maximum(tf[np.clip(f3, 0, len(tf) - 1)], 1e-12)
-        else:
-            w = vals.astype(float)
-        # group by (layer, f1, expert)
-        group = (layer * self.table.vocab_size + f1) * E + expert
-        uniq, inv = np.unique(group, return_inverse=True)
-        agg = np.zeros(len(uniq))
-        np.add.at(agg, inv, w)
-        u_layer = uniq // (self.table.vocab_size * E)
-        u_f1 = (uniq // E) % self.table.vocab_size
-        u_e = uniq % E
-        order = np.lexsort((u_e, u_f1, u_layer))
-        u_layer, u_f1, u_e, agg = (a[order] for a in
-                                   (u_layer, u_f1, u_e, agg))
-        lf = u_layer * self.table.vocab_size + u_f1
-        starts = np.searchsorted(lf, np.unique(lf))
-        bounds = np.append(starts, len(lf))
-        for s, t in zip(bounds[:-1], bounds[1:]):
-            li, fi = int(u_layer[s]), int(u_f1[s])
-            post = np.zeros(E)
-            post[u_e[s:t]] = agg[s:t]
-            self._post[(li, fi)] = post
-            self._prior[li] += post
-        return self
-
-    # -------------------------------------------------------------- predict
-    def posterior(self, layer: int, token_id: int) -> np.ndarray:
-        assert self._prior is not None, "call fit() first"
-        p = self._post.get((layer, int(token_id)))
-        if p is None or p.sum() == 0:
-            p = self._prior[layer]
-        s = p.sum()
-        return p / s if s > 0 else np.full(len(p), 1.0 / len(p))
-
-    def predict(self, layer: int, token_ids: np.ndarray,
-                k: Optional[int] = None) -> np.ndarray:
-        """Eq. 2 (top-k): (N,) token ids -> (N, k) predicted experts."""
-        k = k or self.top_k
-        token_ids = np.asarray(token_ids).ravel()
-        uniq, inv = np.unique(token_ids, return_inverse=True)
-        tops = np.stack([
-            np.argsort(-self.posterior(layer, t))[:k] for t in uniq])
-        return tops[inv]
-
-    def predict_demand(self, tokens: np.ndarray, k: Optional[int] = None,
-                       mode: str = "map") -> np.ndarray:
-        """Predicted per-expert token counts d_{e,i}: (L, E).
-
-        ``mode="map"`` assigns every token instance to its MAP experts
-        (Eq. 2, the paper's method). ``mode="expected"`` accumulates the
-        full posterior instead — a beyond-paper improvement that captures
-        positionally-spread routing (EXPERIMENTS.md §Repro ablation).
-        """
-        k = k or self.top_k
-        L, E = self.table.num_layers, self.table.num_experts
-        demand = np.zeros((L, E))
-        flat = np.asarray(tokens).ravel()
-        uniq, cnt = np.unique(flat, return_counts=True)
-        for layer in range(L):
-            if mode == "expected":
-                for u, c in zip(uniq, cnt):
-                    demand[layer] += c * k * self.posterior(layer, int(u))
-            else:
-                pred = np.stack([np.argsort(-self.posterior(layer, int(u)))[:k]
-                                 for u in uniq])
-                for row, c in zip(pred, cnt):
-                    demand[layer, row] += c
-        return demand
-
-    # --------------------------------------------------------------- metrics
-    def prediction_difference(self, demand_pred: np.ndarray,
-                              demand_real: np.ndarray) -> float:
-        """Fig. 10 metric: mean |real - predicted| tokens per expert."""
-        return float(np.abs(demand_pred - demand_real).mean())
+__all__ = ["ExpertPredictor", "predict_reference",
+           "predict_demand_reference"]

@@ -33,7 +33,6 @@ from repro.core.costmodel import (CPUClusterSpec, ModelProfile,
                                   PlatformSpec)
 from repro.core.deployment import apply_failure_feedback
 from repro.core.features import extract_features
-from repro.core.predictor import ExpertPredictor
 from repro.core.simulator import FaultProfile, cpu_cluster_result
 from repro.core.table import KVTable
 from repro.data.synthetic import SyntheticCorpus
@@ -43,6 +42,8 @@ from repro.plan.backends import (ServingBackend, SimulatorBackend,
 from repro.plan.planner import BOPlanner, Planner, get_planner
 from repro.plan.schema import (DeploymentPlan, ExecutionReport, Workload,
                                plan_diff)
+from repro.predict import (ExpertPredictor, OnlinePredictor,
+                           mispredicted_tokens)
 
 
 @dataclass
@@ -186,7 +187,12 @@ class ServerlessMoERuntime:
         self.planner: Planner = get_planner(rc.planner)
         self.last_plan: Optional[DeploymentPlan] = None
         self._profiled = False
-        self._demand_cache: Dict[int, np.ndarray] = {}
+        # keyed by the batch's exact bytes (collision-free, hash-seed
+        # independent); demand matrices are tiny and kept forever, full
+        # token-level records are bounded LRU-style
+        self._demand_cache: Dict[tuple, np.ndarray] = {}
+        self._records_cache: Dict[tuple, List] = {}
+        self._records_cache_max = 32
 
     @staticmethod
     def _emulate_trained_routing(params, sharpen: float,
@@ -214,17 +220,40 @@ class ServerlessMoERuntime:
         aux = self._fwd(self.params, jnp.asarray(tokens))
         return jax.tree.map(np.asarray, aux["captures"])
 
+    def batch_records(self, tokens: np.ndarray) -> List:
+        """Ground-truth per-token routing records (``LayerRecords``) for a
+        batch, cached by content — one capture forward per distinct batch
+        serves both demand accounting and prediction-error scoring. The
+        cache is bounded (records are the heavy artifact; oldest entries
+        are evicted), while the derived demand matrices stay cached for
+        good in ``real_demand``."""
+        tokens = np.asarray(tokens)
+        key = (tokens.shape, tokens.dtype.str, tokens.tobytes())
+        if key not in self._records_cache:
+            caps = self.run_capture(tokens)
+            if len(self._records_cache) >= self._records_cache_max:
+                self._records_cache.pop(next(iter(self._records_cache)))
+            self._records_cache[key] = extract_features(
+                tokens, caps, len(self.cfg.pattern))
+        return self._records_cache[key]
+
     def real_demand(self, tokens: np.ndarray) -> np.ndarray:
         """(L, E) ground-truth routed token counts for a batch."""
-        key = hash(tokens.tobytes())
+        tokens = np.asarray(tokens)
+        key = (tokens.shape, tokens.dtype.str, tokens.tobytes())
         if key not in self._demand_cache:
-            caps = self.run_capture(tokens)
-            recs = extract_features(tokens, caps, len(self.cfg.pattern))
             d = np.zeros((self.num_layers, self.num_experts))
-            for r in recs:
+            for r in self.batch_records(tokens):
                 np.add.at(d[r.layer], r.experts.ravel(), 1.0)
             self._demand_cache[key] = d
         return self._demand_cache[key]
+
+    def mispredicted_tokens(self, pred, tokens: np.ndarray) -> np.ndarray:
+        """Token IDs whose REALIZED routing the predictor's top-k missed —
+        the real per-batch prediction errors Alg. 2 line 12 appends to
+        BO's feedback-limited exploration range L (historically the whole
+        batch's token set was used as a synthetic stand-in)."""
+        return mispredicted_tokens(pred, self.batch_records(tokens))
 
     def profile_table(self) -> KVTable:
         """Paper §III-B: profile token-to-expert mappings on the corpus."""
@@ -286,6 +315,19 @@ class ServerlessMoERuntime:
         kw.setdefault("seed", self.rc.seed)
         return ServingBackend(engine, self.profile, self.spec, **kw)
 
+    def online_predictor(self, *, decay: float = 1.0, mode: str = "full",
+                         top_k: Optional[int] = None) -> OnlinePredictor:
+        """A streaming :class:`~repro.predict.online.OnlinePredictor`
+        warm-started from the offline-profiled table (§III-B done online:
+        the serving engine's speculative dispatch stage and the trace
+        loop keep updating it from live traffic)."""
+        self.profile_table()
+        pred = OnlinePredictor(self.num_layers, self.num_experts,
+                               self.cfg.vocab_size, mode=mode,
+                               top_k=top_k or self.top_k, decay=decay)
+        pred.ingest_table(self.table)
+        return pred
+
     # -------------------------------------------------- live serving feedback
     def ingest_telemetry(self, telemetry) -> KVTable:
         """Fold live serving observations (``ServingEngine.telemetry``) into
@@ -337,7 +379,9 @@ class ServerlessMoERuntime:
     def run_trace(self, trace, *, plan: Optional[DeploymentPlan] = None,
                   faults: Optional[FaultProfile] = None,
                   replan: bool = True,
-                  alpha: float = 2.0) -> Dict[str, Any]:
+                  alpha: float = 2.0,
+                  predictor: Optional[OnlinePredictor] = None,
+                  prewarm: Optional[str] = None) -> Dict[str, Any]:
         """Drive a deployment through a demand trace window-by-window.
 
         Each :class:`repro.traces.TraceWindow` is executed on the
@@ -351,6 +395,13 @@ class ServerlessMoERuntime:
         offline plan. ``replan=False`` pins the initial plan (the
         static-deployment baseline the paper's fault scenarios are
         measured against).
+
+        ``predictor`` (see :meth:`online_predictor`) swaps the oracle's
+        observed demand for online forecasts in re-planning and records
+        per-window prediction errors; ``prewarm`` in
+        ``{"predicted", "oracle"}`` speculatively warms containers ahead
+        of each window (cold starts convert to prewarm hits,
+        mispredictions bill wasted keep-alive GB-seconds).
 
         Delegates to :func:`repro.plan.backends.run_plan_over_trace`
         (which also documents the ``replan_diff`` cost-estimate
@@ -366,7 +417,8 @@ class ServerlessMoERuntime:
         backend = self.simulator_backend(faults=faults)
         out = run_plan_over_trace(
             plan, trace, backend._make_sim(), self.profile, self.spec,
-            plan_fn=self.plan if replan else None, alpha=alpha)
+            plan_fn=self.plan if replan else None, alpha=alpha,
+            predictor=predictor, prewarm=prewarm)
         self.last_plan = out["final_plan"]
         return out
 
@@ -424,8 +476,10 @@ class ServerlessMoERuntime:
                     rho_case = min(rho_case, 2)
                 costs.append(sim.billed_cost)
                 if problem.any():
-                    # token IDs of this batch routed to erroneous experts
-                    problems.append(np.unique(b))
+                    # Alg. 2 line 12: token IDs whose realized routing the
+                    # predictor actually missed (real prediction errors,
+                    # not the whole batch as a synthetic stand-in)
+                    problems.append(self.mispredicted_tokens(pred, b))
             return EvalOutcome(
                 cost=float(np.mean(costs)),
                 rho_case=rho_case,

@@ -47,6 +47,23 @@ zero, the event engine contributes exactly-zero extras — billed time,
 latency, and cost are numerically IDENTICAL (repr-equal floats) to the
 pre-event closed-form simulator on the same seed, and with ``jitter=0``
 results are exact.
+
+**Predictive pre-warming** (``run(..., prewarm=...)``): a (L, E) matrix
+of speculatively warmed containers per expert function (or a list of
+:class:`repro.predict.prewarm.PrewarmEvent`). An invocation first
+consumes its expert's pre-warmed containers (a *prewarm hit*: the cold
+draw is masked), then the reactive ``warm_pool``, then draws cold.
+Containers never consumed are *prewarm misses* and bill their idle
+keep-alive (``PlatformSpec.t_prewarm_keepalive_s`` at the plan's memory
+size) as ``wasted_prewarm_gb_s``. Two determinism contracts:
+
+* ``prewarm=None`` (default) takes the exact historical code path —
+  reports are bit-identical to the pre-prewarm engine (golden-pinned);
+* with a prewarm MATRIX (even all-zero), the cold-start stream draws
+  once per invocation regardless of pool state, so two runs differing
+  only in their hint matrices see IDENTICAL cold draws — a hint can only
+  mask a cold start, never create one (prewarm-on cold counts are
+  provably <= prewarm-off-with-zero-matrix counts at the same seed).
 """
 from __future__ import annotations
 
@@ -112,6 +129,7 @@ class InvocationEvent:
     straggled: bool
     extra_billed_s: float   # billed time beyond the fault-free duration
     end_s: float            # completion time within the wave
+    prewarmed: bool = False  # served by a speculatively warmed container
 
 
 @dataclass
@@ -126,13 +144,16 @@ class _WaveResult:
     retry_s: float = 0.0
     queue_delay_s: float = 0.0
     stragglers: int = 0
+    prewarm_hits: int = 0
+    prewarm_leftover: Optional[np.ndarray] = None   # (E,) unconsumed hints
     events: List[InvocationEvent] = field(default_factory=list)
 
 
 def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
                     head_s: float, cold_extra_s: float,
                     faults: FaultProfile,
-                    rng: np.random.Generator) -> _WaveResult:
+                    rng: np.random.Generator,
+                    prewarmed: Optional[np.ndarray] = None) -> _WaveResult:
     """Discrete-event simulation of one layer's invocation wave.
 
     Invocations dispatch in deterministic (expert, replica) order; a
@@ -140,11 +161,21 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
     concurrency limit. Everything is accumulated as EXTRAS relative to
     the fault-free closed form (start at t=0, run for ``t_rep``), so a
     zero-knob profile contributes exact float zeros.
+
+    ``prewarmed`` (E,) counts speculatively warmed containers per expert:
+    consumed before the reactive warm pool, each consumption a prewarm
+    hit that masks the invocation's cold draw. With a prewarmed array
+    present (even all-zero) the cold stream draws once per invocation
+    unconditionally, so runs differing only in hints share the same
+    draws; with ``prewarmed=None`` the historical draw-after-pool
+    discipline is preserved bit-for-bit.
     """
     E = t_rep.shape[0]
     res = _WaveResult(extra_billed=np.zeros(E), extra_latency=0.0)
     busy: List[float] = []       # end times of running invocations
     warm_left = faults.warm_pool
+    pre_left = None if prewarmed is None \
+        else np.asarray(prewarmed, np.int64).copy()
     makespan = 0.0
     base_makespan = 0.0
     limit = faults.concurrency_limit
@@ -158,7 +189,18 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
             if limit and len(busy) >= limit:
                 start = heapq.heappop(busy)
             cold = False
-            if faults.cold_start_prob > 0.0:
+            pre_hit = False
+            if pre_left is not None:
+                draw = rng.random() if faults.cold_start_prob > 0.0 else 1.0
+                if pre_left[expert] > 0:
+                    pre_left[expert] -= 1
+                    pre_hit = True
+                    res.prewarm_hits += 1
+                elif warm_left > 0:
+                    warm_left -= 1
+                elif draw < faults.cold_start_prob:
+                    cold = True
+            elif faults.cold_start_prob > 0.0:
                 if warm_left > 0:
                     warm_left -= 1
                 elif rng.random() < faults.cold_start_prob:
@@ -209,8 +251,10 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
             res.events.append(InvocationEvent(
                 layer=layer, expert=expert, replica=replica, start_s=start,
                 attempts=attempts, cold=cold, straggled=straggled,
-                extra_billed_s=extra_billed, end_s=end))
+                extra_billed_s=extra_billed, end_s=end,
+                prewarmed=pre_hit))
     res.extra_latency = makespan - base_makespan
+    res.prewarm_leftover = pre_left
     return res
 
 
@@ -227,11 +271,29 @@ class ServerlessSimulator:
         self._fault_rng = np.random.default_rng([seed, 0xFA17])
         self.last_events: List[InvocationEvent] = []
 
+    @staticmethod
+    def _prewarm_matrix(prewarm, L: int, E: int) -> Optional[np.ndarray]:
+        """Normalize a prewarm order to the (L, E) container matrix: pass
+        through None, accept a matrix, or collapse PrewarmEvent-like
+        objects (anything with layer/expert/containers attributes)."""
+        if prewarm is None:
+            return None
+        if isinstance(prewarm, (list, tuple)):
+            out = np.zeros((L, E), np.int64)
+            for ev in prewarm:
+                out[int(ev.layer), int(ev.expert)] += int(ev.containers)
+            return out
+        out = np.asarray(prewarm, np.int64)
+        assert out.shape == (L, E), (out.shape, (L, E))
+        assert (out >= 0).all(), "negative prewarm container counts"
+        return out
+
     def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
-            num_tokens: int) -> ExecutionReport:
+            num_tokens: int, *, prewarm=None) -> ExecutionReport:
         prof, spec, faults = self.prof, self.spec, self.faults
         real_demand = np.asarray(real_demand, float)
         L, E = real_demand.shape
+        pw = self._prewarm_matrix(prewarm, L, E)
         # single source of truth for per-layer chunks: schedules shorter
         # than the layer count fall back via full_chunk_schedule()
         chunks = plan.full_chunk_schedule() \
@@ -245,7 +307,9 @@ class ServerlessSimulator:
         cold_extra_s = max(spec.t_cold_start_s - spec.t_warm_start_s, 0.0)
         self.last_events = []
         breakdown = dict(cold_starts=0, cold_start_s=0.0, retries=0,
-                         retry_s=0.0, queue_delay_s=0.0, stragglers=0)
+                         retry_s=0.0, queue_delay_s=0.0, stragglers=0,
+                         prewarm_hits=0, prewarm_misses=0,
+                         wasted_prewarm_gb_s=0.0)
 
         for e in range(L):
             a = int(plan.method[e])
@@ -267,16 +331,21 @@ class ServerlessSimulator:
                                      prof, spec)
             t_total = times.t_total.copy()
             t_lat = times.t_latency
-            if faults.enabled:
+            wasted_gb_s = 0.0
+            if faults.enabled or pw is not None:
                 # --- discrete-event invocation wave: faults ride as
                 # extras on top of the closed form. With every knob at
                 # zero the wave would contribute exact float zeros (the
                 # differential tests pin this with an inert-but-enabled
                 # profile), so the ideal-platform hot path — every BO
-                # trial — skips the per-invocation loop entirely.
+                # trial — skips the per-invocation loop entirely. A
+                # prewarm order forces the wave so hints are consumed
+                # and scored even on an otherwise ideal platform.
                 wave = _run_layer_wave(e, times.t_rep, g, head_s,
                                        cold_extra_s, faults,
-                                       self._fault_rng)
+                                       self._fault_rng,
+                                       prewarmed=(pw[e] if pw is not None
+                                                  else None))
                 t_total = t_total + wave.extra_billed
                 t_lat += wave.extra_latency
                 self.last_events.extend(wave.events)
@@ -286,6 +355,15 @@ class ServerlessSimulator:
                 breakdown["retry_s"] += wave.retry_s
                 breakdown["queue_delay_s"] += wave.queue_delay_s
                 breakdown["stragglers"] += wave.stragglers
+                if pw is not None:
+                    leftover = wave.prewarm_leftover
+                    breakdown["prewarm_hits"] += wave.prewarm_hits
+                    breakdown["prewarm_misses"] += int(leftover.sum())
+                    # mispredicted containers idle warm for the keep-alive
+                    # window at the deployed memory size: pure waste
+                    wasted_gb_s = float((leftover * mem).sum()) / 1024.0 \
+                        * spec.t_prewarm_keepalive_s
+                    breakdown["wasted_prewarm_gb_s"] += wasted_gb_s
             if overrun[e].any():
                 # overrun functions crash + retry with spilled buffers:
                 # extra head time and 2x storage traffic on retried experts
@@ -305,7 +383,7 @@ class ServerlessSimulator:
                 t_total = np.maximum(t_total, 0.0)
             layer_cost[e] = comm.layer_billed_cost(
                 comm.LayerTimes(times.t_rep, t_total, t_lat, times.feasible),
-                mem, spec)
+                mem, spec) + wasted_gb_s * spec.price_per_gb_s
             layer_lat[e] = t_lat
 
         total_lat = (prof.t_head_s + prof.t_tail_s
@@ -328,6 +406,9 @@ class ServerlessSimulator:
             retry_s=float(breakdown["retry_s"]),
             queue_delay_s=float(breakdown["queue_delay_s"]),
             stragglers=int(breakdown["stragglers"]),
+            prewarm_hits=int(breakdown["prewarm_hits"]),
+            prewarm_misses=int(breakdown["prewarm_misses"]),
+            wasted_prewarm_gb_s=float(breakdown["wasted_prewarm_gb_s"]),
         )
 
 

@@ -76,6 +76,10 @@ def _merge_reports(reports: List[ExecutionReport], *,
         retry_s=float(sum(r.retry_s for r in reports)),
         queue_delay_s=float(sum(r.queue_delay_s for r in reports)),
         stragglers=int(sum(r.stragglers for r in reports)),
+        prewarm_hits=int(sum(r.prewarm_hits for r in reports)),
+        prewarm_misses=int(sum(r.prewarm_misses for r in reports)),
+        wasted_prewarm_gb_s=float(sum(r.wasted_prewarm_gb_s
+                                      for r in reports)),
         extras={"num_batches": len(reports)},
     )
 
@@ -136,14 +140,18 @@ class SimulatorBackend:
         return _merge_reports(self.execute_batches(plan, workload),
                               backend=self.name)
 
-    def execute_trace(self, plan: DeploymentPlan,
-                      trace) -> List[ExecutionReport]:
+    def execute_trace(self, plan: DeploymentPlan, trace, *,
+                      predictor=None,
+                      prewarm: Optional[str] = None
+                      ) -> List[ExecutionReport]:
         """Bill one plan window-by-window over a :class:`repro.traces.Trace`
         (one fresh jitter/fault stream for the whole trace, one report per
-        window — the granularity re-planning loops consume)."""
+        window — the granularity re-planning loops consume). ``predictor``
+        / ``prewarm`` thread through to :func:`run_plan_over_trace`."""
         return run_plan_over_trace(plan, trace, self._make_sim(),
-                                   self.profile,
-                                   self.platform)["reports"]
+                                   self.profile, self.platform,
+                                   predictor=predictor,
+                                   prewarm=prewarm)["reports"]
 
 
 def run_plan_over_trace(plan: DeploymentPlan, trace,
@@ -151,7 +159,9 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
                         platform: PlatformSpec, *,
                         plan_fn: Optional[Callable[[np.ndarray],
                                                    DeploymentPlan]] = None,
-                        alpha: float = 2.0) -> dict:
+                        alpha: float = 2.0,
+                        predictor=None,
+                        prewarm: Optional[str] = None) -> dict:
     """Drive a deployment through a demand trace window-by-window.
 
     The single implementation of the trace-feedback loop, shared by
@@ -160,35 +170,79 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
     under the current plan; with a ``plan_fn`` (demand -> plan), the
     window's failure feedback (Alg. 2 cases i/ii via
     :func:`~repro.core.deployment.apply_failure_feedback`) bumps replicas
-    and — when feedback fired — re-plans from the window's OBSERVED
-    demand, keeping the feedback-boosted replicas as a floor. Without a
-    ``plan_fn`` the initial plan is pinned (the static baseline).
+    and — when feedback fired — re-plans, keeping the feedback-boosted
+    replicas as a floor. Without a ``plan_fn`` the initial plan is pinned
+    (the static baseline).
+
+    **Online prediction** (``predictor``, an
+    :class:`~repro.predict.online.OnlinePredictor`): each window's
+    observed routing streams into the predictor (``update_demand`` +
+    ``advance``, so decay tracks drift), re-plans consume the predictor's
+    FORECAST demand instead of the oracle's observed demand, and the
+    realized per-window prediction errors are returned under
+    ``"prediction_errors"`` — the real (not synthetic) error signal the
+    BO feedback set L consumes.
+
+    **Speculative pre-warming** (``prewarm``): ``"predicted"`` warms the
+    plan's replicas for every expert the forecast expects traffic on
+    (requires ``predictor``; the first window, with no forecast yet, runs
+    unwarmed), ``"oracle"`` warms from the window's true demand (the
+    perfect-foresight bound), ``None`` disables (bit-identical to the
+    pre-prewarm loop). Hits/misses/wasted GB-seconds land in each
+    window's report.
 
     NOTE on ``replan_diff`` cost deltas: a plan's ``layer_cost`` is
     always the PLANNER'S estimate at plan time (as everywhere else in
     Alg. 2 — replica floors from feedback are never re-costed); the
     realized cost of a window lives in its ``ExecutionReport``.
 
-    Returns ``{"reports", "plans", "final_plan", "replans"}``: one
-    report per window, the plan that served each window, the plan left
-    deployed, and how many windows triggered a re-plan.
+    Returns ``{"reports", "plans", "final_plan", "replans",
+    "prediction_errors"}``: one report per window, the plan that served
+    each window, the plan left deployed, how many windows triggered a
+    re-plan, and one error dict per forecasted window.
     """
+    if prewarm not in (None, "predicted", "oracle"):
+        raise ValueError(f"unknown prewarm mode {prewarm!r}")
+    if prewarm == "predicted" and predictor is None:
+        raise ValueError("prewarm='predicted' needs an online predictor")
+    from repro.predict import demand_error, prewarm_containers
     reports: List[ExecutionReport] = []
     plans: List[DeploymentPlan] = []
+    prediction_errors: List[dict] = []
     replans = 0
     cur = plan
     for w in trace.windows:
         plans.append(cur)
-        rep = sim.run(cur, w.demand, int(w.num_tokens))
+        forecast = predictor.forecast_demand(w.num_tokens) \
+            if predictor is not None else None
+        pw = None
+        if prewarm == "oracle":
+            pw = prewarm_containers(cur, w.demand)
+        elif prewarm == "predicted" and forecast is not None:
+            pw = prewarm_containers(cur, forecast)
+        rep = sim.run(cur, w.demand, int(w.num_tokens), prewarm=pw)
         reports.append(rep)
+        if predictor is not None:
+            if forecast is not None:
+                prediction_errors.append(
+                    demand_error(forecast, rep.real_demand))
+            predictor.update_demand(rep.real_demand, int(w.num_tokens))
+            predictor.advance()
         if plan_fn is None:
             continue
         adjusted, rho_case, _ = apply_failure_feedback(
             cur, rep.real_demand, profile, platform, alpha=alpha)
         if rho_case < 3:
             # cases (i)/(ii): the plan's sizing was wrong for what the
-            # window actually routed — re-plan from observed demand
-            fresh = plan_fn(rep.real_demand)
+            # window actually routed — re-plan from the online
+            # predictor's (post-update) forecast when one is running,
+            # else from the oracle's observed demand
+            replan_demand = rep.real_demand
+            if predictor is not None:
+                f = predictor.forecast_demand(w.num_tokens)
+                if f is not None:
+                    replan_demand = f
+            fresh = plan_fn(replan_demand)
             fresh.replicas = np.maximum(fresh.replicas, adjusted.replicas)
             fresh.metadata["replan_diff"] = plan_diff(cur, fresh)
             cur = fresh
@@ -196,7 +250,7 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
         else:
             cur = adjusted
     return {"reports": reports, "plans": plans, "final_plan": cur,
-            "replans": replans}
+            "replans": replans, "prediction_errors": prediction_errors}
 
 
 class ServingBackend:

@@ -190,9 +190,11 @@ class ExecutionReport:
     The field set is the union of what Alg. 2 consumes as feedback
     (billed cost, memory overruns for case (i), payload violations for
     case (ii)), what the paper's figures report (latency, throughput),
-    and the discrete-event simulator's fault breakdown (cold starts,
+    the discrete-event simulator's fault breakdown (cold starts,
     transient-failure retries, concurrency queueing, stragglers — all
-    zero on an ideal platform).
+    zero on an ideal platform), and the predictive pre-warming breakdown
+    (hits, misses, wasted keep-alive GB-seconds — all zero unless a
+    prewarmer ran).
     """
 
     billed_cost: float                 # total $ for all MoE layers
@@ -212,12 +214,22 @@ class ExecutionReport:
     retry_s: float = 0.0               # billed seconds burnt by failures
     queue_delay_s: float = 0.0         # concurrency-limit queueing (latency)
     stragglers: int = 0                # invocations that straggled
+    prewarm_hits: int = 0              # invocations served by a prewarmed
+    #                                    container (cold draw masked)
+    prewarm_misses: int = 0            # prewarmed containers never consumed
+    wasted_prewarm_gb_s: float = 0.0   # billed idle keep-alive of misses
     extras: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         """Plain-type view (lists/floats/bools) — two reports are
-        bit-identical iff their ``to_dict()`` results compare equal."""
-        return {
+        bit-identical iff their ``to_dict()`` results compare equal.
+
+        The prewarm breakdown serializes as a ``"prewarm"`` sub-dict ONLY
+        when a prewarmer actually ran (any of the three fields non-zero):
+        prewarm-off reports keep the exact pre-prewarm wire schema, so the
+        committed golden fixtures from before the feature remain valid
+        bit-for-bit."""
+        d = {
             "backend": self.backend,
             "billed_cost": float(self.billed_cost),
             "latency_s": float(self.latency_s),
@@ -238,6 +250,14 @@ class ExecutionReport:
             "queue_delay_s": float(self.queue_delay_s),
             "stragglers": int(self.stragglers),
         }
+        if self.prewarm_hits or self.prewarm_misses \
+                or self.wasted_prewarm_gb_s:
+            d["prewarm"] = {
+                "prewarm_hits": int(self.prewarm_hits),
+                "prewarm_misses": int(self.prewarm_misses),
+                "wasted_prewarm_gb_s": float(self.wasted_prewarm_gb_s),
+            }
+        return d
 
     def to_json(self, **json_kwargs) -> str:
         return json.dumps(self.to_dict(), **json_kwargs)

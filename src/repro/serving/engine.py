@@ -19,6 +19,18 @@ When the model has MoE layers, an :class:`ExpertTelemetry` collector
 captures per-layer routed-token counts during both prefill and decode
 (the ``capture=True`` model path) — the live feedback signal
 ``ServerlessMoERuntime.plan_from_telemetry`` re-plans deployment from.
+
+With an :class:`~repro.predict.online.OnlinePredictor` attached
+(``predictor=...``), every decode step runs a SPECULATIVE DISPATCH
+stage: before the step executes, the predictor's Eq. 1-2 posterior maps
+the step's input tokens (each the PREVIOUS step's output — strictly
+causal) to per-layer prewarm hints, the (layer, expert) set whose
+containers a serverless deployment would warm while the non-MoE prefix
+computes. After the step, the hints are scored against the routing that
+actually happened (hits/misses into :class:`ExpertTelemetry`) and the
+step's observations stream back into the predictor — the online
+predict -> prewarm -> measure loop of the paper's §III-B, closed at
+serving granularity.
 """
 from __future__ import annotations
 
@@ -40,7 +52,7 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, max_len: int = 256,
                  batch_size: int = 4, eos_id: Optional[int] = None,
                  collect_telemetry: bool = True, prompt_bucket: int = 8,
-                 moe_executor: str = "grouped"):
+                 moe_executor: str = "grouped", predictor=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -64,6 +76,15 @@ class ServingEngine:
                             self.cfg.vocab_size, len(self.cfg.pattern))
             if collect_telemetry and moe is not None else None)
         self._capture = self.telemetry is not None
+        # speculative dispatch: an OnlinePredictor emitting per-layer
+        # prewarm hints ahead of each decode step, learning online from
+        # the telemetry records the step produces
+        if predictor is not None and self.telemetry is None:
+            raise ValueError(
+                "a predictor needs expert telemetry (an MoE model and "
+                "collect_telemetry=True) to score and learn from")
+        self.predictor = predictor
+        self.last_prewarm_hints: Optional[np.ndarray] = None
         self._n_front = (self.cfg.frontend_tokens
                          if self.cfg.frontend == "vision_stub" else 0)
         self._enc_dec = self.cfg.is_encoder_decoder
@@ -207,9 +228,16 @@ class ServingEngine:
                     self.enc_valid[slot] = len(req.prompt)
             if self.telemetry is not None:
                 caps_h = jax.tree.map(np.asarray, caps)
+                mark = self.telemetry.num_records
                 self.telemetry.record_prefill(
                     req.prompt[None],
                     self._sliced_prefill_captures(caps_h, true_len))
+                if self.predictor is not None:
+                    # prefill feeds learning only; hints are a decode-
+                    # step concern (prefill routes are observed wholesale)
+                    self.predictor.observe_tokens(req.prompt)
+                    self.predictor.update_records(
+                        self.telemetry.records_since(mark))
             first = int(np.asarray(last_logits)[0].argmax())
             req.first_token_time = time.perf_counter()
             if req.max_new_tokens < 1:
@@ -240,6 +268,13 @@ class ServingEngine:
             return False
         in_tok = self.cur_tok.copy()
         in_pos = self.pos.copy()
+        # --- speculative dispatch: hints from the step's INPUT tokens
+        # (the previous step's outputs), emitted before routing runs
+        hints = None
+        if self.predictor is not None:
+            act_tok = in_tok[np.asarray(active, np.int64)]
+            hints = self.predictor.prewarm_hint_matrix(act_tok)
+            self.last_prewarm_hints = hints
         cross_valid = (jnp.asarray(self.enc_valid) if self._enc_dec
                        else None)
         logits, cache, caps = self._jit_decode(
@@ -248,9 +283,21 @@ class ServingEngine:
         self.kv.update(cache)
         if self.telemetry is not None:
             caps_h = jax.tree.map(np.asarray, caps)
+            demand_before = (self.telemetry.demand.copy()
+                             if hints is not None else None)
+            mark = self.telemetry.num_records
             self.telemetry.record_decode(
                 in_tok, in_pos - self._n_front, self.seqs, caps_h, active,
                 n_front=self._n_front)
+            if hints is not None:
+                # score the hints against what the step actually routed,
+                # THEN learn from the step (hints stay strictly causal)
+                self.telemetry.record_prewarm(
+                    hints, self.telemetry.demand - demand_before)
+                self.predictor.observe_tokens(
+                    in_tok[np.asarray(active, np.int64)])
+                self.predictor.update_records(
+                    self.telemetry.records_since(mark))
         nxt = np.asarray(logits).argmax(-1)
         for i in active:
             req = self.scheduler.slots[i]
@@ -269,6 +316,26 @@ class ServingEngine:
                 self._finish(req, "truncated")   # KV capacity exhausted
         self.step_count += 1
         return True
+
+    # ------------------------------------------------------------ speculation
+    def speculation_stats(self) -> Dict[str, Any]:
+        """Scoreboard of the speculative dispatch stage: how often the
+        predictor's prewarm hints covered the routing that actually
+        happened (``hit_rate`` is None before any scored decode step)."""
+        tel = self.telemetry
+        if tel is None:
+            raise ValueError("speculation stats need expert telemetry")
+        per_layer = np.divide(
+            tel.prewarm_hits_by_layer, tel.prewarm_pairs_by_layer,
+            out=np.zeros_like(tel.prewarm_hits_by_layer),
+            where=tel.prewarm_pairs_by_layer > 0)
+        return {
+            "hits": tel.prewarm_hits,
+            "misses": tel.prewarm_misses,
+            "pairs": tel.prewarm_pairs,
+            "hit_rate": tel.prewarm_hit_rate(),
+            "per_layer_hit_rate": per_layer.tolist(),
+        }
 
     # ------------------------------------------------------------------- run
     def run(self, *, max_steps: int = 256, on_step=None,

@@ -43,6 +43,13 @@ class ExpertTelemetry:
         self._records: List[LayerRecords] = []
         self._token_freq = np.zeros(vocab_size)   # pending flush buffer
         self.served_freq = np.zeros(vocab_size)   # cumulative served tokens
+        # speculative-dispatch scoreboard (engine prewarm hints vs what
+        # the step actually routed)
+        self.prewarm_hits = 0        # routed pairs covered by a hint
+        self.prewarm_misses = 0      # hinted (layer, expert) cells unused
+        self.prewarm_pairs = 0       # routed pairs scored
+        self.prewarm_hits_by_layer = np.zeros(num_layers)
+        self.prewarm_pairs_by_layer = np.zeros(num_layers)
 
     # -------------------------------------------------------------- routing
     def _ingest_routing(self, captures: Dict) -> None:
@@ -140,6 +147,44 @@ class ExpertTelemetry:
         self.served_freq += binc
         self.decode_tokens += len(act)
 
+    # ------------------------------------------------------- speculation
+    def records_since(self, mark: int) -> List[LayerRecords]:
+        """Pending records appended after ``mark`` (= ``num_records`` taken
+        before a record call) — the engine streams these into its online
+        predictor each step."""
+        return self._records[mark:]
+
+    @property
+    def num_records(self) -> int:
+        return len(self._records)
+
+    def record_prewarm(self, hints: np.ndarray,
+                       step_demand: np.ndarray) -> None:
+        """Score one decode step's speculative prewarm hints.
+
+        ``hints``: (L, E) bool — experts the engine speculatively warmed
+        before the step; ``step_demand``: (L, E) routed-pair counts the
+        step actually produced. A routed pair on a hinted expert is a
+        hit (that container was warm when the scatter arrived); a hinted
+        expert with zero routed pairs is a miss (wasted warm-up)."""
+        hints = np.asarray(hints, bool)
+        d = np.asarray(step_demand, float)
+        assert hints.shape == d.shape == self.demand.shape, \
+            (hints.shape, d.shape)
+        hit_pairs = np.where(hints, d, 0.0)
+        self.prewarm_hits += int(hit_pairs.sum())
+        self.prewarm_pairs += int(d.sum())
+        self.prewarm_misses += int((hints & (d <= 0.0)).sum())
+        self.prewarm_hits_by_layer += hit_pairs.sum(axis=1)
+        self.prewarm_pairs_by_layer += d.sum(axis=1)
+
+    def prewarm_hit_rate(self) -> Optional[float]:
+        """Fraction of routed pairs whose expert was speculatively warmed
+        (None before any scored step)."""
+        if self.prewarm_pairs == 0:
+            return None
+        return self.prewarm_hits / self.prewarm_pairs
+
     # ------------------------------------------------------------- planning
     def demand_matrix(self) -> np.ndarray:
         """Cumulative (L, E) routed-token counts observed while serving.
@@ -170,6 +215,9 @@ class ExpertTelemetry:
         self.served_freq[:] = 0.0
         self._records.clear()
         self.prefill_tokens = self.decode_tokens = 0
+        self.prewarm_hits = self.prewarm_misses = self.prewarm_pairs = 0
+        self.prewarm_hits_by_layer[:] = 0.0
+        self.prewarm_pairs_by_layer[:] = 0.0
 
     # -------------------------------------------------------------- KVTable
     def flush_to_table(self, table) -> int:

@@ -45,17 +45,27 @@ def _make_plan() -> DeploymentPlan:
 
 
 def _make_reports(plan: DeploymentPlan):
+    from repro.predict import prewarm_containers
     real = _demand(seed=3, scale=2400)     # real routing != planned
     ideal = ServerlessSimulator(PROF, SPEC, seed=7).run(
         plan, real, int(real.sum()))
-    faulted = ServerlessSimulator(
-        PROF, SPEC, seed=7,
-        faults=FaultProfile(cold_start_prob=0.5, warm_pool=2,
-                            straggler_prob=0.1, failure_prob=0.1,
-                            concurrency_limit=8)).run(
+    faults = FaultProfile(cold_start_prob=0.5, warm_pool=2,
+                          straggler_prob=0.1, failure_prob=0.1,
+                          concurrency_limit=8)
+    faulted = ServerlessSimulator(PROF, SPEC, seed=7, faults=faults).run(
         plan, real, int(real.sum()))
+    # prewarm from the PLANNED demand while the real routing shifted away
+    # from a third of the experts: the fixture pins hits (overlap), misses
+    # (stale hints on now-cold experts), and the wasted keep-alive
+    # GB-seconds in the wire dict's "prewarm" block
+    shifted = real.copy()
+    shifted[:, 1::3] = 0.0
+    prewarmed = ServerlessSimulator(PROF, SPEC, seed=7, faults=faults).run(
+        plan, shifted, int(shifted.sum()),
+        prewarm=prewarm_containers(plan, _demand(seed=0, scale=2000)))
     return {"report_simulator.json": ideal.to_dict(),
-            "report_faulted.json": faulted.to_dict()}
+            "report_faulted.json": faulted.to_dict(),
+            "report_prewarmed.json": prewarmed.to_dict()}
 
 
 def _assert_same_schema(path: str, golden, current):
@@ -145,8 +155,120 @@ def _make_routing_summary() -> dict:
     return out
 
 
+def _make_prediction_difference() -> dict:
+    """Fig. 10-style prediction-difference fixture on a PINNED trace.
+
+    Pure numpy: a deterministic Zipf token stream routed by a noisy
+    per-layer token->expert mapping, profiled into a KVTable, then scored
+    on a held-out stream — per-layer mean |real - predicted| (ours vs the
+    Lina token-only baseline) plus top-1 hit rates, for both the batch
+    and the streaming (mini-batched) predictor. MAP demand counts are
+    integer-exact, so every number here is reproducible bit-for-bit.
+    """
+    from repro.core.features import LayerRecords
+    from repro.core.table import KVTable
+    from repro.predict import (ExpertPredictor, OnlinePredictor,
+                               prediction_difference, topk_hit_rate)
+
+    L, E, V = 4, 8, 64
+    FREQ, RARE = 0, V - 1          # hot vs cold attention-context tokens
+    AMB = np.arange(V // 2, V // 2 + 16)       # ambiguous token ids
+    rng = np.random.default_rng(17)
+    mapping = rng.integers(0, E, size=(L, V))
+    # ambiguous tokens: profiling counts TIE between a high-index expert
+    # (seen in the hot context) and a low-index one (cold context) — the
+    # paper's case where only P'(f3) weighting breaks the tie correctly
+    a_map = (mapping % (E // 2)) + E // 2      # in 4..7
+    b_map = a_map - E // 2                     # in 0..3 (wins count ties)
+    zipf = (1.0 / np.arange(1, V + 1)) ** 1.2
+    zipf = zipf / zipf.sum()
+
+    table = KVTable(L, E, V)
+    online = OnlinePredictor(L, E, V, top_k=1)
+    freq_stream = rng.choice(V, size=4000, p=zipf)
+    table.observe_tokens(freq_stream)
+    online.observe_tokens(freq_stream)
+    for layer in range(L):
+        toks, routes, atts = [], [], []
+        for v in range(V):
+            if v in AMB:
+                toks += [v] * 20
+                routes += [int(a_map[layer, v])] * 10 \
+                    + [int(b_map[layer, v])] * 10
+                atts += [FREQ] * 10 + [RARE] * 10
+            else:
+                toks += [v] * 20
+                routes += [int(mapping[layer, v])] * 20
+                atts += [FREQ] * 20
+        toks, routes, atts = (np.asarray(a, np.int64)
+                              for a in (toks, routes, atts))
+        for f1, e, f3 in zip(toks.tolist(), routes.tolist(),
+                             atts.tolist()):
+            table.set_entry(layer, f1, 0, f3, e,
+                            table.get_entry(layer, f1, 0, f3, e) + 1)
+        # streaming ingestion of the same observations, 8 mini-batches
+        for chunk in np.array_split(np.arange(len(toks)), 8):
+            online.update(toks[chunk], routes[chunk], layer=layer,
+                          attention_ids=atts[chunk])
+
+    # held-out stream: ambiguous tokens realize the hot-context expert
+    # 80% of the time (the context distribution the profiling counts
+    # undercounted and P'(f3) recovers)
+    eval_toks = rng.choice(V, size=1500, p=zipf)
+    is_amb = np.isin(eval_toks, AMB)
+    hot_ctx = rng.random(1500) < 0.8
+    real = np.zeros((L, E))
+    eval_recs = []
+    for layer in range(L):
+        routes = mapping[layer, eval_toks].copy()
+        routes[is_amb & hot_ctx] = a_map[layer, eval_toks[is_amb & hot_ctx]]
+        routes[is_amb & ~hot_ctx] = b_map[layer,
+                                          eval_toks[is_amb & ~hot_ctx]]
+        np.add.at(real[layer], routes, 1.0)
+        eval_recs.append(LayerRecords(
+            layer=layer, token_id=eval_toks,
+            position=np.zeros_like(eval_toks),
+            attention_id=eval_toks, experts=routes[:, None],
+            weights=np.ones((len(eval_toks), 1))))
+
+    out = {}
+    for mode in ("full", "lina"):
+        pred = ExpertPredictor(table, mode=mode, top_k=1).fit()
+        dem = pred.predict_demand(eval_toks, mode="map")
+        name = "ours" if mode == "full" else "lina"
+        out[name] = {
+            "prediction_difference": float(
+                prediction_difference(dem, real)),
+            "per_layer": prediction_difference(
+                dem, real, per_layer=True).tolist(),
+            "top1_hit_rate": topk_hit_rate(pred, eval_recs, k=1),
+        }
+    dem = online.predict_demand(eval_toks, mode="map")
+    out["online_streaming"] = {
+        "prediction_difference": float(prediction_difference(dem, real)),
+        "per_layer": prediction_difference(dem, real,
+                                           per_layer=True).tolist(),
+        "top1_hit_rate": topk_hit_rate(online, eval_recs, k=1),
+    }
+    return out
+
+
 def test_plan_golden(regen_golden):
     _check_or_regen("plan_ods.json", _make_plan().to_dict(), regen_golden)
+
+
+def test_prediction_difference_golden(regen_golden):
+    """Fig. 10 numbers on the pinned trace: ours must beat Lina (lower
+    difference, higher hit rate), the streaming predictor must match the
+    batch path, and the committed values must not drift."""
+    current = _make_prediction_difference()
+    assert current["ours"]["prediction_difference"] \
+        < current["lina"]["prediction_difference"]
+    assert current["ours"]["top1_hit_rate"] \
+        >= current["lina"]["top1_hit_rate"]
+    assert current["online_streaming"]["top1_hit_rate"] \
+        >= 0.99 * current["ours"]["top1_hit_rate"]
+    _check_or_regen("prediction_difference.json", current, regen_golden)
 
 
 def test_routing_summary_golden(regen_golden):
@@ -162,9 +284,18 @@ def test_routing_summary_golden(regen_golden):
 
 
 @pytest.mark.parametrize("name", ["report_simulator.json",
-                                  "report_faulted.json"])
+                                  "report_faulted.json",
+                                  "report_prewarmed.json"])
 def test_report_golden(name, regen_golden):
     reports = _make_reports(_make_plan())
+    if name == "report_prewarmed.json":
+        # the prewarm block must actually be exercised by the fixture
+        blk = reports[name]["prewarm"]
+        assert blk["prewarm_hits"] > 0 and blk["prewarm_misses"] > 0
+        assert blk["wasted_prewarm_gb_s"] > 0.0
+    else:
+        assert "prewarm" not in reports[name], \
+            "prewarm-off reports must keep the v1 wire schema"
     _check_or_regen(name, reports[name], regen_golden)
 
 

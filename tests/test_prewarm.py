@@ -1,0 +1,267 @@
+"""Predictive pre-warming: simulator differential + trace acceptance.
+
+Differential guarantees (the satellite contracts):
+
+* a PERFECT-ORACLE prewarmer at zero faults reproduces the closed-form
+  billed cost exactly — hits are free, and with full coverage there are
+  no misses, hence no phantom prewarm charges;
+* prewarm-off runs (``prewarm=None``) are bit-identical to the
+  pre-prewarm engine — pinned against the committed PR-4 golden
+  fixtures, which this feature must NOT regenerate;
+* with a prewarm MATRIX the cold-start stream is hint-independent, so
+  hints can only mask cold starts (on <= off at the same seed), and
+  mispredicted containers bill exactly their keep-alive GB-seconds.
+
+ACCEPTANCE: on a bursty drift trace with cold starts enabled, the online
+predictor driving ``prewarm="predicted"`` strictly reduces both the
+simulated cold-start count and the billed GB-seconds versus the reactive
+(warm-pool-only) baseline.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.backends import run_plan_over_trace
+from repro.plan.planner import get_planner
+from repro.predict import (OnlinePredictor, PrewarmEvent, prewarm_containers,
+                           prewarm_events, prewarm_matrix, prewarm_oracle)
+from repro.traces import (bursty_arrivals, demand_trace, drift_popularity,
+                          zipf_popularity)
+
+pytestmark = pytest.mark.timeout(300)
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+FAULTS = FaultProfile(cold_start_prob=0.8, warm_pool=2)
+
+
+def _demand(L=4, E=8, seed=0, scale=400):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _plan(demand):
+    return get_planner("ods").plan(demand, PROF, SPEC, t_limit_s=1e9)
+
+
+# ---------------------------------------------------------------------------
+# differential: oracle prewarm at zero faults == closed form
+# ---------------------------------------------------------------------------
+
+def test_oracle_prewarm_zero_faults_is_the_closed_form():
+    """Perfect prediction on an ideal platform: every hint is consumed
+    (no phantom charges) and billing equals the no-prewarm closed form
+    float-for-float, while every invocation is a prewarm hit."""
+    d = _demand()
+    plan = _plan(d)
+    base = ServerlessSimulator(PROF, SPEC, seed=3).run(plan, d, int(d.sum()))
+    sim = ServerlessSimulator(PROF, SPEC, seed=3)
+    rep = sim.run(plan, d, int(d.sum()), prewarm=prewarm_oracle(plan, d))
+    assert rep.billed_cost == base.billed_cost
+    assert rep.latency_s == base.latency_s
+    np.testing.assert_array_equal(rep.layer_cost, base.layer_cost)
+    invocations = int(plan.replicas[d > 0].sum())
+    assert rep.prewarm_hits == invocations
+    assert rep.prewarm_misses == 0
+    assert rep.wasted_prewarm_gb_s == 0.0
+    assert rep.cold_starts == 0
+    # the event stream marks every invocation as prewarm-served
+    assert len(sim.last_events) == invocations
+    assert all(ev.prewarmed for ev in sim.last_events)
+
+
+def test_prewarm_off_report_keeps_the_v1_wire_schema():
+    """``prewarm=None`` serializes without the prewarm block — the exact
+    pre-prewarm wire dict, so the committed PR-4 fixtures stay valid."""
+    d = _demand()
+    rep = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        _plan(d), d, int(d.sum()))
+    assert "prewarm" not in rep.to_dict()
+    assert rep.prewarm_hits == rep.prewarm_misses == 0
+    assert rep.wasted_prewarm_gb_s == 0.0
+
+
+def test_prewarm_off_bit_identical_to_committed_golden():
+    """The faulted golden fixture predates pre-warming; a prewarm-off run
+    must still reproduce it byte-for-byte (same construction as
+    test_golden_regression, asserted here as the explicit prewarm-off
+    differential)."""
+    rng_demand = _demand(seed=0, scale=2000)
+    plan = get_planner("ods").plan(rng_demand, PROF, SPEC, t_limit_s=1e9)
+    real = _demand(seed=3, scale=2400)
+    rep = ServerlessSimulator(
+        PROF, SPEC, seed=7,
+        faults=FaultProfile(cold_start_prob=0.5, warm_pool=2,
+                            straggler_prob=0.1, failure_prob=0.1,
+                            concurrency_limit=8)).run(
+        plan, real, int(real.sum()))
+    golden = json.loads((GOLDEN_DIR / "report_faulted.json").read_text())
+    assert rep.to_dict() == golden
+
+
+def test_hints_only_mask_cold_starts_never_create_them():
+    """Same seed, zero-hint matrix vs oracle hints: the cold stream is
+    identical, so prewarmed cold count <= unwarmed, strictly lower when
+    any hit masks a cold draw — and billed cost drops with it."""
+    d = _demand()
+    plan = _plan(d)
+    off = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        plan, d, int(d.sum()), prewarm=np.zeros_like(plan.replicas))
+    on = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        plan, d, int(d.sum()), prewarm=prewarm_oracle(plan, d))
+    assert off.prewarm_hits == 0 and off.cold_starts > 0
+    assert on.cold_starts == 0                 # oracle masks every draw
+    assert on.cold_starts < off.cold_starts
+    assert on.billed_cost < off.billed_cost
+    assert on.latency_s <= off.latency_s
+
+
+def test_mispredicted_prewarm_bills_exactly_its_keepalive():
+    """Hinting experts the routing never touches converts the whole hint
+    set into misses billed at keep-alive GB-seconds — and nothing else
+    changes versus the unwarmed run."""
+    d = _demand()
+    real = d.copy()
+    real[:, ::2] = 0.0                         # half the experts go cold
+    plan = _plan(d)
+    pw = prewarm_containers(plan, d)           # hints from the stale forecast
+    base = ServerlessSimulator(PROF, SPEC, seed=3).run(
+        plan, real, int(real.sum()))
+    rep = ServerlessSimulator(PROF, SPEC, seed=3).run(
+        plan, real, int(real.sum()), prewarm=pw)
+    assert rep.prewarm_misses == int(pw[real <= 0].sum())
+    expected_waste = float(
+        (pw * (real <= 0) * plan.mem_mb).sum()) / 1024.0 \
+        * SPEC.t_prewarm_keepalive_s
+    np.testing.assert_allclose(rep.wasted_prewarm_gb_s, expected_waste,
+                               rtol=1e-12)
+    np.testing.assert_allclose(
+        rep.billed_cost,
+        base.billed_cost + expected_waste * SPEC.price_per_gb_s,
+        rtol=1e-12)
+    d_rep = rep.to_dict()
+    assert d_rep["prewarm"]["prewarm_misses"] == rep.prewarm_misses
+
+
+def test_prewarm_events_round_trip_and_drive_the_simulator():
+    """PrewarmEvent lists and (L, E) matrices are interchangeable inputs."""
+    d = _demand()
+    plan = _plan(d)
+    mat = prewarm_oracle(plan, d)
+    events = prewarm_events(mat, plan.mem_mb)
+    assert all(isinstance(ev, PrewarmEvent) and ev.containers > 0
+               for ev in events)
+    np.testing.assert_array_equal(
+        prewarm_matrix(events, *mat.shape), mat)
+    by_mat = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        plan, d, int(d.sum()), prewarm=mat)
+    by_ev = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        plan, d, int(d.sum()), prewarm=list(events))
+    assert by_mat.to_dict() == by_ev.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: predictive prewarming beats the reactive baseline
+# ---------------------------------------------------------------------------
+
+def _drift_trace(steps=8, tokens_per_request=100):
+    pop = zipf_popularity(PROF.num_moe_layers, PROF.experts_per_layer,
+                          seed=0)
+    arr = np.maximum(bursty_arrivals(1.0, steps, burst_mult=8.0, seed=1), 1)
+    return demand_trace(arr, drift_popularity(pop, steps, drift=0.3, seed=2),
+                        tokens_per_request=tokens_per_request)
+
+
+def test_predictive_prewarm_beats_reactive_baseline_on_drift_trace():
+    """ACCEPTANCE: cold starts AND billed GB-seconds strictly drop with
+    prediction on, and the realized per-window prediction errors are
+    surfaced for the BO feedback loop."""
+    trace = _drift_trace()
+    plan = _plan(trace.windows[0].demand)
+    baseline = run_plan_over_trace(
+        plan, trace,
+        ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS), PROF, SPEC)
+    predictor = OnlinePredictor(PROF.num_moe_layers,
+                                PROF.experts_per_layer, 16, decay=0.7)
+    predicted = run_plan_over_trace(
+        plan, trace,
+        ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS), PROF, SPEC,
+        predictor=predictor, prewarm="predicted")
+
+    cold_base = sum(r.cold_starts for r in baseline["reports"])
+    cold_pred = sum(r.cold_starts for r in predicted["reports"])
+    cost_base = sum(r.billed_cost for r in baseline["reports"])
+    cost_pred = sum(r.billed_cost for r in predicted["reports"])
+    assert cold_pred < cold_base
+    assert cost_pred < cost_base
+    assert sum(r.prewarm_hits for r in predicted["reports"]) > 0
+    # the first window has no forecast; every later window is scored
+    errs = predicted["prediction_errors"]
+    assert len(errs) == len(trace) - 1
+    assert all(np.isfinite(e["mae"]) and e["rel_l1"] >= 0 for e in errs)
+    # baseline results carry no prewarm artifacts
+    assert all(r.prewarm_hits == 0 and r.wasted_prewarm_gb_s == 0.0
+               for r in baseline["reports"])
+
+
+def test_oracle_prewarm_bounds_the_predicted_prewarmer():
+    """Perfect foresight is the lower envelope: oracle cold starts <=
+    predicted cold starts on the same trace and seed."""
+    trace = _drift_trace()
+    plan = _plan(trace.windows[0].demand)
+    predictor = OnlinePredictor(PROF.num_moe_layers,
+                                PROF.experts_per_layer, 16, decay=0.7)
+    predicted = run_plan_over_trace(
+        plan, trace,
+        ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS), PROF, SPEC,
+        predictor=predictor, prewarm="predicted")
+    oracle = run_plan_over_trace(
+        plan, trace,
+        ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS), PROF, SPEC,
+        prewarm="oracle")
+    assert sum(r.cold_starts for r in oracle["reports"]) \
+        <= sum(r.cold_starts for r in predicted["reports"])
+    assert all(r.prewarm_misses == 0 for r in oracle["reports"])
+
+
+def test_predictor_forecast_feeds_replanning():
+    """With a predictor in the loop, feedback re-plans consume the online
+    forecast (demand the planner sees == predictor's forecast, not the
+    oracle's observed window)."""
+    pop = zipf_popularity(PROF.num_moe_layers, PROF.experts_per_layer,
+                          seed=0)
+    arr = np.maximum(bursty_arrivals(1.0, 6, burst_mult=8.0, seed=1), 1)
+    arr[3] = 8                                 # guaranteed burst window
+    trace = demand_trace(arr, drift_popularity(pop, 6, drift=0.35, seed=2),
+                         tokens_per_request=200)
+    seen = []
+
+    def plan_fn(demand):
+        seen.append(np.asarray(demand, float).copy())
+        return _plan(demand)
+
+    predictor = OnlinePredictor(PROF.num_moe_layers,
+                                PROF.experts_per_layer, 16, decay=0.7)
+    spec = PlatformSpec(payload_mb=0.4)        # binding payload: forces replans
+    out = run_plan_over_trace(
+        _plan(trace.windows[0].demand), trace,
+        ServerlessSimulator(PROF, spec, seed=7, faults=FAULTS), PROF, spec,
+        plan_fn=plan_fn, predictor=predictor, prewarm="predicted")
+    assert out["replans"] >= 1 and len(seen) == out["replans"]
+    # re-plan demand is the predictor's scaled aggregate, which never
+    # equals any single observed window bit-for-bit once >= 2 windows mixed
+    window_demands = [w.demand for w in trace.windows]
+    for demand in seen[1:]:
+        assert not any(np.array_equal(demand, w) for w in window_demands)

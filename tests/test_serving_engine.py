@@ -334,3 +334,70 @@ def test_plan_from_telemetry():
     assert (policy.replicas >= 1).all()
     # the ingested table now carries the served traffic
     assert rt.table.demand_matrix().sum() >= eng.telemetry.demand.sum()
+
+
+# ------------------------------------------------------ speculative dispatch
+def test_speculative_dispatch_emits_and_scores_prewarm_hints(gpt2_moe):
+    """With an OnlinePredictor attached, every decode step emits per-layer
+    prewarm hints BEFORE routing runs, scores them against the realized
+    routing, and streams the step's observations back into the predictor."""
+    from repro.predict import OnlinePredictor, uniform_hit_rate
+
+    cfg, model, params = gpt2_moe
+    E = cfg.moe.num_experts
+    pred = OnlinePredictor(cfg.num_layers, E, cfg.vocab_size,
+                           top_k=cfg.moe.top_k, decay=0.99)
+    eng = ServingEngine(model, params, max_len=32, batch_size=2,
+                        predictor=pred)
+    for p in _prompts(cfg, [5, 7, 4], seed=3):
+        eng.submit(p, max_new_tokens=6)
+    eng.run()
+    tel = eng.telemetry
+    stats = eng.speculation_stats()
+    assert stats["pairs"] > 0
+    assert stats["hits"] + 0 <= stats["pairs"]
+    assert stats["hit_rate"] is not None and 0.0 <= stats["hit_rate"] <= 1.0
+    assert len(stats["per_layer_hit_rate"]) == cfg.num_layers
+    # hints were emitted with the model's geometry
+    assert eng.last_prewarm_hints is not None
+    assert eng.last_prewarm_hints.shape == (cfg.num_layers, E)
+    assert eng.last_prewarm_hints.dtype == bool
+    # the predictor learned online from both prefill and decode records
+    assert pred.updates > 0 and pred.num_statistics > 0
+    # reset clears the scoreboard
+    tel.reset()
+    assert tel.prewarm_pairs == 0 and tel.prewarm_hit_rate() is None
+
+
+def test_speculation_learns_toward_routing(gpt2_moe):
+    """Served traffic trains the predictor: after serving, its MAP demand
+    on the served stream must beat the uniform prior's hit rate against
+    the telemetry's realized routing."""
+    from repro.predict import OnlinePredictor, topk_hit_rate, uniform_hit_rate
+
+    cfg, model, params = gpt2_moe
+    E = cfg.moe.num_experts
+    pred = OnlinePredictor(cfg.num_layers, E, cfg.vocab_size,
+                           top_k=cfg.moe.top_k)
+    eng = ServingEngine(model, params, max_len=32, batch_size=2,
+                        predictor=pred)
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=6), max_new_tokens=6)
+    eng.run()
+    recs = eng.telemetry._records
+    assert recs, "telemetry must retain records for calibration"
+    rate = topk_hit_rate(pred, recs, k=cfg.moe.top_k)
+    # the predictor SAW these records (in-sample): it must beat uniform
+    assert rate > uniform_hit_rate(E, cfg.moe.top_k)
+
+
+def test_predictor_without_telemetry_is_rejected(gpt2_moe):
+    from repro.predict import OnlinePredictor
+
+    cfg, model, params = gpt2_moe
+    pred = OnlinePredictor(cfg.num_layers, cfg.moe.num_experts,
+                           cfg.vocab_size)
+    with pytest.raises(ValueError, match="telemetry"):
+        ServingEngine(model, params, max_len=32, batch_size=1,
+                      collect_telemetry=False, predictor=pred)
