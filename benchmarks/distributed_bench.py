@@ -1,0 +1,139 @@
+"""Real multi-process scatter-gather vs the Eq. 3-11 closed forms.
+
+Runs a plan through :class:`~repro.dist.DistributedBackend` on BOTH
+transports and compares, per MoE layer, the measured wave makespan
+against the closed-form prediction the planner optimized
+(``predicted_rep_max_s``: the Eq. 6 head/block/tail decomposition of the
+slowest replica, scaled to model seconds):
+
+* ``dist_inline_L*`` — the zero-latency oracle; rel. error pins at ~0.
+* ``dist_process_L*`` — real spawn-context workers under time-dilated
+  emulation (``time_scale`` wall seconds per model second); rel. error
+  is the IPC + sleep-granularity overhead the calibrated tolerance in
+  ``tests/test_distributed_backend.py`` (``GB_S_TOL``) budgets for.
+
+Each row's ``derived`` field reports ``rel_err`` (measured vs predicted
+makespan) and ``overlap`` — worker-utilization overlap efficiency,
+``busy_sum / (makespan * workers)``: how much of the wave's wall clock
+the fleet spent computing/holding chunks rather than idling on skew or
+gather barriers. Aggregate rows compare total billed GB-seconds.
+
+``--smoke`` (CI): 2 workers, the tiny 3x4 model, a hard ``SIGALRM``
+timeout, and ASSERTS the acceptance contract — inline exact, process
+billed cost within tolerance, all chunk outputs verified.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/run.py --only distributed_bench
+    PYTHONPATH=src:. python benchmarks/distributed_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import signal
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import ServerlessSimulator
+from repro.dist import DistributedBackend
+from repro.plan.planner import get_planner
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=3, experts_per_layer=4,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+GB_S_TOL = 0.15        # mirrors tests/test_distributed_backend.py
+SMOKE_TIMEOUT_S = 120  # hard wall-clock cap for the CI leg
+
+
+def _demand(tokens: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    d = rng.zipf(1.5, size=(PROF.num_moe_layers,
+                            PROF.experts_per_layer)).astype(float)
+    return d / d.sum(axis=1, keepdims=True) * tokens
+
+
+def _layer_rows(tag: str, rep) -> float:
+    """Emit one row per MoE layer; return the worst relative error."""
+    worst = 0.0
+    for li in rep.extras["layers"]:
+        pred = li["predicted_rep_max_s"]
+        meas = li["measured_makespan_s"]
+        if pred <= 0:
+            continue
+        rel = abs(meas - pred) / pred
+        worst = max(worst, rel)
+        workers = max(rep.extras["num_workers"], 1)
+        overlap = li["busy_sum_s"] / max(meas * workers, 1e-12)
+        emit(f"{tag}_L{li['layer']}", meas * 1e6,
+             f"rel_err={rel:.4f} overlap={overlap:.3f} "
+             f"msgs={li['chunk_msgs']} beta={li['beta']}")
+    return worst
+
+
+def _run(transport: str, tokens: int, *, workers: int,
+         time_scale: float) -> tuple:
+    demand = _demand(tokens)
+    plan = get_planner("ods").plan(demand, PROF, SPEC)
+    want = ServerlessSimulator(PROF, SPEC).run(plan, demand, tokens)
+    with DistributedBackend(PROF, SPEC, transport=transport,
+                            num_workers=workers,
+                            time_scale=time_scale) as be:
+        t0 = time.perf_counter()
+        got = be.run(plan, demand, tokens)
+        wall = time.perf_counter() - t0
+    tag = f"dist_{transport}"
+    worst = _layer_rows(tag, got)
+    cost_rel = abs(got.billed_cost - want.billed_cost) \
+        / max(want.billed_cost, 1e-12)
+    emit(f"{tag}_total", wall * 1e6,
+         f"cost_rel_err={cost_rel:.4f} worst_layer_rel={worst:.4f} "
+         f"verified={got.extras['verified_chunks']} "
+         f"mismatches={got.extras['output_mismatches']}")
+    return got, want, cost_rel
+
+
+def run(smoke: bool = False) -> None:
+    tokens = 256 if smoke else 1024
+    workers = 2 if smoke else 4
+    inline, _, inline_rel = _run("inline", tokens, workers=workers,
+                                 time_scale=0.05)
+    # time_scale stays at the calibrated 0.05 even in smoke: shrinking
+    # it further makes fixed IPC overhead dominate the tiny chunk
+    # budgets and blows the tolerance
+    proc, _, proc_rel = _run("process", tokens, workers=workers,
+                             time_scale=0.05)
+    if smoke:
+        assert inline_rel < 1e-9, \
+            f"inline transport must be exact, got rel err {inline_rel}"
+        assert proc_rel < GB_S_TOL, \
+            f"process billed-cost rel err {proc_rel} > {GB_S_TOL}"
+        for rep in (inline, proc):
+            assert rep.extras["output_mismatches"] == 0
+            assert rep.extras["verified_chunks"] > 0
+        print(f"SMOKE OK: inline exact, process rel err "
+              f"{proc_rel:.4f} < {GB_S_TOL}")
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model, 2 workers, hard timeout, asserts")
+    args = ap.parse_args()
+    if args.smoke:
+        # hard backstop: a hung worker/pipe must fail CI fast, not eat
+        # the job's budget
+        signal.signal(signal.SIGALRM, lambda *_: (_ for _ in ()).throw(
+            TimeoutError(f"smoke exceeded {SMOKE_TIMEOUT_S}s")))
+        signal.alarm(SMOKE_TIMEOUT_S)
+    run(smoke=args.smoke)
+    if args.smoke:
+        signal.alarm(0)
+
+
+if __name__ == "__main__":
+    main()

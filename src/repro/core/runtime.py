@@ -62,6 +62,7 @@ class RuntimeConfig:
     jitter: float = 0.0
     demand_mode: str = "expected"       # "map" (Eq. 2) | "expected" (ours)
     planner: str = "ods"                # registry name (repro.plan.planner)
+    backend: str = "simulator"          # registry name (repro.plan.backends)
     variant_experts: int = 0            # override expert count (Fig. 10)
     variant_top_k: int = 0              # override routing top-k (Fig. 10)
 
@@ -315,6 +316,34 @@ class ServerlessMoERuntime:
         kw.setdefault("seed", self.rc.seed)
         return ServingBackend(engine, self.profile, self.spec, **kw)
 
+    def distributed_backend(self, *, seed: Optional[int] = None,
+                            faults: Optional[FaultProfile] = None, **kw):
+        """Real multi-process execution backend
+        (:class:`repro.dist.DistributedBackend`) bound to this runtime's
+        profile/platform and ground-truth routing. Close it (or use it
+        as a context manager) to tear the worker fleet down."""
+        from repro.dist import DistributedBackend
+        return DistributedBackend(
+            self.profile, self.spec, faults=faults,
+            seed=self.rc.seed if seed is None else seed,
+            demand_fn=self.real_demand, **kw)
+
+    def make_backend(self, name: Optional[str] = None, **kw):
+        """Resolve an execution backend by registry name
+        (``"simulator"`` | ``"serving"`` | ``"distributed"``), defaulting
+        to ``RuntimeConfig.backend``. Runtime-bound defaults (profile,
+        platform, seed, ground-truth routing) are filled in; the serving
+        backend additionally needs ``engine=...``."""
+        name = name or self.rc.backend
+        if name == "simulator":
+            return self.simulator_backend(**kw)
+        if name == "serving":
+            return self.serving_backend(kw.pop("engine"), **kw)
+        if name == "distributed":
+            return self.distributed_backend(**kw)
+        from repro.plan.backends import get_backend
+        return get_backend(name, **kw)
+
     def online_predictor(self, *, decay: float = 1.0, mode: str = "full",
                          top_k: Optional[int] = None) -> OnlinePredictor:
         """A streaming :class:`~repro.predict.online.OnlinePredictor`
@@ -414,9 +443,14 @@ class ServerlessMoERuntime:
         if plan is None:
             first = trace.windows[0].demand
             plan = self.plan(np.asarray(first, float))
-        backend = self.simulator_backend(faults=faults)
+        backend = self.make_backend(faults=faults)
+        # the simulator backend contributes its event engine; a backend
+        # whose `run` IS the execution surface (repro.dist) drives the
+        # shared trace loop directly
+        sim = backend._make_sim() if hasattr(backend, "_make_sim") \
+            else backend
         out = run_plan_over_trace(
-            plan, trace, backend._make_sim(), self.profile, self.spec,
+            plan, trace, sim, self.profile, self.spec,
             plan_fn=self.plan if replan else None, alpha=alpha,
             predictor=predictor, prewarm=prewarm)
         self.last_plan = out["final_plan"]

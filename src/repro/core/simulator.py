@@ -75,6 +75,9 @@ import numpy as np
 
 from repro.core import comm
 from repro.core.costmodel import MB, CPUClusterSpec, ModelProfile, PlatformSpec
+from repro.dispatch.chunks import ChunkPlan
+from repro.dispatch.policy import (WaveState, draw_failures, draw_straggler,
+                                   draw_temperature)
 from repro.plan.schema import DeploymentPlan, ExecutionReport
 
 # Historical name: the simulator's result IS the common execution report.
@@ -113,6 +116,14 @@ class FaultProfile:
         """True when any knob can perturb the ideal-platform results."""
         return bool(self.cold_start_prob > 0.0 or self.straggler_prob > 0.0
                     or self.failure_prob > 0.0 or self.concurrency_limit > 0)
+
+    def backoff_s(self, attempt: int) -> float:
+        """Wait before re-dispatching after failed attempt ``attempt``
+        (1-based): the base backoff, doubling per attempt. This makes
+        ``FaultProfile`` a full :class:`repro.dispatch.DispatchPolicy` —
+        the same object drives the event simulator and the real
+        multi-process gateway."""
+        return self.retry_backoff_s * (2.0 ** (attempt - 1))
 
 
 @dataclass
@@ -173,9 +184,12 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
     E = t_rep.shape[0]
     res = _WaveResult(extra_billed=np.zeros(E), extra_latency=0.0)
     busy: List[float] = []       # end times of running invocations
-    warm_left = faults.warm_pool
-    pre_left = None if prewarmed is None \
-        else np.asarray(prewarmed, np.int64).copy()
+    # fault DECISIONS come from the shared dispatch-policy draws (one
+    # definition across this simulator and the repro.dist gateway); the
+    # draw order per invocation — temperature, straggler, failures —
+    # and every billing float below are the historical ones, so the
+    # golden-pinned fault streams replay bit-for-bit
+    state = WaveState.start(faults, prewarmed)
     makespan = 0.0
     base_makespan = 0.0
     limit = faults.concurrency_limit
@@ -188,26 +202,10 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
             start = 0.0
             if limit and len(busy) >= limit:
                 start = heapq.heappop(busy)
-            cold = False
-            pre_hit = False
-            if pre_left is not None:
-                draw = rng.random() if faults.cold_start_prob > 0.0 else 1.0
-                if pre_left[expert] > 0:
-                    pre_left[expert] -= 1
-                    pre_hit = True
-                    res.prewarm_hits += 1
-                elif warm_left > 0:
-                    warm_left -= 1
-                elif draw < faults.cold_start_prob:
-                    cold = True
-            elif faults.cold_start_prob > 0.0:
-                if warm_left > 0:
-                    warm_left -= 1
-                elif rng.random() < faults.cold_start_prob:
-                    cold = True
-            straggled = bool(
-                faults.straggler_prob > 0.0
-                and rng.random() < faults.straggler_prob)
+            cold, pre_hit = draw_temperature(faults, rng, state, expert)
+            if pre_hit:
+                res.prewarm_hits += 1
+            straggled = draw_straggler(faults, rng)
             # cold init is paid exactly once, on the very first attempt
             # (failed or not), and attributed to cold_start_s only —
             # retry_s carries just the head-phase re-runs, so the
@@ -215,20 +213,17 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
             cold_billed = cold_extra_s if cold else 0.0
             t = start
             extra_billed = 0.0
+            n_fail = draw_failures(faults, rng)
             attempts = 1
-            if faults.failure_prob > 0.0:
-                while (attempts <= faults.max_retries
-                       and rng.random() < faults.failure_prob):
-                    # transient failure: detected after the head phase,
-                    # billed, then retried after exponential backoff
-                    fail_s = head_s + (cold_billed
-                                       if attempts == 1 else 0.0)
-                    extra_billed += fail_s
-                    res.retries += 1
-                    res.retry_s += head_s
-                    t += fail_s + faults.retry_backoff_s \
-                        * (2.0 ** (attempts - 1))
-                    attempts += 1
+            for k in range(1, n_fail + 1):
+                # transient failure: detected after the head phase,
+                # billed, then retried after exponential backoff
+                fail_s = head_s + (cold_billed if k == 1 else 0.0)
+                extra_billed += fail_s
+                res.retries += 1
+                res.retry_s += head_s
+                t += fail_s + faults.backoff_s(k)
+                attempts += 1
             final = dur
             if attempts == 1:
                 # the successful attempt is the first: it pays cold init
@@ -254,7 +249,7 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
                 extra_billed_s=extra_billed, end_s=end,
                 prewarmed=pre_hit))
     res.extra_latency = makespan - base_makespan
-    res.prewarm_leftover = pre_left
+    res.prewarm_leftover = state.pre_left
     return res
 
 
@@ -294,9 +289,10 @@ class ServerlessSimulator:
         real_demand = np.asarray(real_demand, float)
         L, E = real_demand.shape
         pw = self._prewarm_matrix(prewarm, L, E)
-        # single source of truth for per-layer chunks: schedules shorter
-        # than the layer count fall back via full_chunk_schedule()
-        chunks = plan.full_chunk_schedule() \
+        # single source of truth for per-layer chunks: the shared
+        # ChunkPlan (full_chunk_schedule() fallback included), the same
+        # object the serving rounds and the process gateway consume
+        chunks = ChunkPlan.from_plan(plan) \
             if hasattr(plan, "full_chunk_schedule") else None
         layer_cost = np.zeros(L)
         layer_lat = np.zeros(L)
@@ -313,7 +309,7 @@ class ServerlessSimulator:
 
         for e in range(L):
             a = int(plan.method[e])
-            beta = int(chunks[e]) if chunks is not None else plan.beta
+            beta = chunks.beta_for(e) if chunks is not None else plan.beta
             g = plan.replicas[e].astype(float)
             mem = plan.mem_mb[e]
             r_real = real_demand[e] / np.maximum(g, 1)

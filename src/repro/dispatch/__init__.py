@@ -1,0 +1,53 @@
+"""Transport-agnostic dispatch substrate for chunked scatter-gather.
+
+Every execution surface in this repo ultimately runs the same motion:
+split a layer's routed tokens into the plan's pipeline chunks (the
+β-minibatches of Eq. 6), scatter each chunk to the expert that owns it,
+overlap the chunk's compute with the neighbouring chunks' communication,
+and gather the results — with retries, stragglers, and timeouts riding
+along. Before this package, that logic lived three times: in the
+discrete-event simulator (``repro.core.simulator``), in the serving
+engine's dispatch rounds (``repro.serving.engine``), and in the
+expert-parallel β-chunk loops (``repro.distributed.moe_parallel``).
+
+``repro.dispatch`` is the single home for the transport-agnostic parts:
+
+* :class:`ChunkPlan` — the per-layer chunk schedule, derived from a
+  :class:`~repro.plan.schema.DeploymentPlan` via its
+  ``full_chunk_schedule`` fallback; one source of truth for "how many
+  minibatches does this layer's scatter-gather run".
+* :class:`DispatchPolicy` — the shared retry/straggler/timeout policy
+  protocol. :class:`repro.core.simulator.FaultProfile` is one
+  implementation; the event simulator and the real process runtime draw
+  faults through the same functions (:func:`draw_temperature`,
+  :func:`draw_straggler`, :func:`draw_failures`) so fault *semantics*
+  are identical across backends.
+* :class:`Transport` — scatter/compute/gather over an abstract message
+  channel with async overlap. :class:`InlineTransport` is the
+  zero-latency in-process reference; ``repro.dist.ProcessTransport``
+  runs the same protocol over real worker processes.
+* :class:`ChunkedDispatcher` — the generic scatter/compute/gather engine
+  (async dispatch, pipelined chunk streaming, exponential-backoff
+  retries, worker-death recovery, concurrency capping) every transport
+  plugs into.
+* :class:`RoundAccumulator` — segmentation of a served-token stream into
+  scatter-gather dispatch rounds (the serving engine's round loop).
+"""
+from repro.dispatch.chunks import ChunkPlan, chunk_count
+from repro.dispatch.engine import (ChunkedDispatcher, Invocation,
+                                   WaveOutcome)
+from repro.dispatch.policy import (DispatchPolicy, WaveState,
+                                   draw_failures, draw_straggler,
+                                   draw_temperature)
+from repro.dispatch.rounds import RoundAccumulator
+from repro.dispatch.transport import (InlineTransport, Transport,
+                                      chunk_output, make_payload)
+
+__all__ = [
+    "ChunkPlan", "chunk_count",
+    "DispatchPolicy", "WaveState",
+    "draw_temperature", "draw_straggler", "draw_failures",
+    "Transport", "InlineTransport", "chunk_output", "make_payload",
+    "ChunkedDispatcher", "Invocation", "WaveOutcome",
+    "RoundAccumulator",
+]

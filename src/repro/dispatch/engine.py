@@ -1,0 +1,271 @@
+"""The generic chunked scatter/compute/gather engine.
+
+:class:`ChunkedDispatcher` executes one layer's *invocation wave* — every
+(expert, replica) invocation of a MoE layer, each decomposed into the
+:class:`~repro.dispatch.chunks.ChunkPlan`'s β-minibatch chunks — over an
+abstract :class:`~repro.dispatch.transport.Transport`:
+
+* **async dispatch** — every invocation's chunks are written to its
+  worker immediately; workers stream results back as they finish, so a
+  chunk's return transfer overlaps the next chunk's compute (the a=1
+  pipelining of Fig. 8a realized over real channels);
+* **retries with exponential backoff** — a transiently failed attempt
+  (``fail`` flag, or a worker death, or a timeout) re-dispatches after
+  ``policy.backoff_s(attempt)`` (scaled), up to ``max_retries`` extra
+  attempts;
+* **worker-death recovery** — ``("dead", w)`` fails every in-flight
+  attempt on that worker, restarts it, and re-dispatches;
+* **timeouts** — an attempt in flight longer than ``timeout_s`` real
+  seconds is presumed lost: its worker is restarted and the attempt
+  retried;
+* **concurrency capping** — at most ``policy.concurrency_limit``
+  invocations in flight (0 = unlimited), the per-account limit of the
+  fault model applied to a real gateway.
+
+The dispatcher is deliberately policy-mechanical: WHICH attempts fail,
+straggle, or run cold is decided upstream (drawn through
+``repro.dispatch.policy`` by the simulator or the distributed backend)
+and arrives pre-baked in each :class:`Invocation`'s chunk targets, so
+fault semantics stay identical across the simulated and real paths.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.dispatch.policy import DispatchPolicy
+from repro.dispatch.transport import Transport, make_payload
+
+
+@dataclass
+class Invocation:
+    """One (layer, expert, replica) serverless invocation, pre-chunked.
+
+    All ``*_s`` targets are WALL seconds (platform-model durations
+    already multiplied by the gateway's time scale). ``chunk_targets``
+    describe the successful attempt; ``fail_targets`` (one per planned
+    transient failure) describe the head-phase busy of each failing
+    attempt; ``die_attempt`` marks the attempt on which the worker is
+    killed mid-chunk (0 = never).
+    """
+
+    inv_id: int
+    layer: int
+    expert: int
+    replica: int
+    worker: int
+    chunk_targets: List[float]
+    chunk_rows: List[int]
+    scheduled_minibatches: int
+    fail_targets: List[float] = field(default_factory=list)
+    die_attempt: int = 0
+    d_pay: int = 8
+
+    @property
+    def n_fail(self) -> int:
+        return len(self.fail_targets)
+
+
+@dataclass
+class _InvState:
+    inv: Invocation
+    attempt: int = 1
+    done: bool = False
+    busy_s: float = 0.0            # measured busy across all attempts
+    backoff_s: float = 0.0         # virtual backoff waited (scaled)
+    lost_attempts: int = 0         # attempts that died with the worker
+    retries: int = 0
+    dispatch_wall: float = 0.0
+    ready_wall: float = 0.0
+    end_wall: float = 0.0
+
+
+@dataclass
+class WaveOutcome:
+    """What one wave measured, keyed for the backend's accounting."""
+
+    busy_s: Dict[int, float]               # inv_id -> measured busy
+    attempts: Dict[int, int]               # inv_id -> total attempts
+    lost_attempts: Dict[int, int]          # inv_id -> worker-death losses
+    retries: int                           # failed attempts re-dispatched
+    queue_delay_s: float                   # concurrency-gate wall wait
+    makespan_s: float                      # wave wall (or virtual) span
+    chunk_msgs: int                        # chunk messages dispatched
+    outputs: Dict[Tuple[int, int], object]  # (inv_id, chunk_id) -> y
+    timeouts: int = 0
+
+
+class ChunkedDispatcher:
+    """Drives invocation waves over a transport under a policy."""
+
+    def __init__(self, transport: Transport, policy: DispatchPolicy, *,
+                 time_scale: float = 1.0, timeout_s: float = 15.0,
+                 poll_s: float = 0.02):
+        self.transport = transport
+        self.policy = policy
+        self.time_scale = float(time_scale)
+        self.timeout_s = float(timeout_s)
+        self.poll_s = float(poll_s)
+
+    # ---------------------------------------------------------- dispatch
+    def _dispatch(self, st: _InvState, now: float) -> int:
+        """Send one attempt's chunk messages; returns messages sent."""
+        inv = st.inv
+        st.dispatch_wall = now
+        flags: Dict[str, bool]
+        if inv.die_attempt and st.attempt == inv.die_attempt:
+            # real worker-kill: the worker exits mid-chunk; recovery runs
+            # through the death path, not a polite NACK
+            target = (inv.fail_targets[0] if inv.fail_targets
+                      else inv.chunk_targets[0])
+            self.transport.send(inv.worker, (
+                "chunk", inv.inv_id, st.attempt, 0, 1, inv.layer,
+                inv.expert, target, {"die": True}, None))
+            return 1
+        if st.attempt <= inv.n_fail:
+            target = inv.fail_targets[st.attempt - 1]
+            self.transport.send(inv.worker, (
+                "chunk", inv.inv_id, st.attempt, 0, 1, inv.layer,
+                inv.expert, target, {"fail": True}, None))
+            return 1
+        n = len(inv.chunk_targets)
+        for k, target in enumerate(inv.chunk_targets):
+            rows = inv.chunk_rows[k]
+            x = (make_payload(inv.layer, inv.expert, inv.replica, k,
+                              rows, inv.d_pay) if rows > 0 else None)
+            self.transport.send(inv.worker, (
+                "chunk", inv.inv_id, st.attempt, k, n, inv.layer,
+                inv.expert, target, {}, x))
+        return n
+
+    def _schedule_retry(self, st: _InvState, retry_heap: list,
+                        now: float, *, lost: bool) -> None:
+        po = self.policy
+        if st.attempt > po.max_retries + 1:
+            raise RuntimeError(
+                f"invocation {st.inv.inv_id} (layer {st.inv.layer}, "
+                f"expert {st.inv.expert}) exhausted "
+                f"{po.max_retries} retries without completing")
+        wait = po.backoff_s(st.attempt) * self.time_scale
+        st.backoff_s += wait
+        st.retries += 1
+        if lost:
+            st.lost_attempts += 1
+        st.attempt += 1
+        # non-realtime transports account backoff virtually (it lands in
+        # the virtual makespan) instead of sleeping through it
+        due = now + wait if self.transport.realtime else now
+        heapq.heappush(retry_heap, (due, st.inv.inv_id))
+
+    # --------------------------------------------------------------- run
+    def run_wave(self, invocations: List[Invocation]) -> WaveOutcome:
+        tr, po = self.transport, self.policy
+        states = {inv.inv_id: _InvState(inv) for inv in invocations}
+        wall0 = time.perf_counter()
+        ready: List[int] = [inv.inv_id for inv in invocations]
+        for iid in ready:
+            states[iid].ready_wall = wall0
+        retry_heap: List[Tuple[float, int]] = []   # (due_wall, inv_id)
+        inflight: Dict[int, _InvState] = {}
+        limit = int(po.concurrency_limit or 0)
+        outputs: Dict[Tuple[int, int], object] = {}
+        chunk_msgs = 0
+        retries = 0
+        timeouts = 0
+        queue_delay = 0.0
+        remaining = len(states)
+
+        while remaining > 0:
+            now = time.perf_counter()
+            # retries whose backoff elapsed become ready again
+            while retry_heap and retry_heap[0][0] <= now:
+                _, iid = heapq.heappop(retry_heap)
+                states[iid].ready_wall = now
+                ready.append(iid)
+            # dispatch as many ready invocations as the gate allows
+            while ready and (not limit or len(inflight) < limit):
+                iid = ready.pop(0)
+                st = states[iid]
+                if st.done:
+                    continue
+                if limit:
+                    queue_delay += now - st.ready_wall
+                chunk_msgs += self._dispatch(st, now)
+                inflight[iid] = st
+            if remaining == 0:
+                break
+            # wait for worker traffic (bounded by the next retry due time)
+            timeout = self.poll_s
+            if retry_heap:
+                timeout = min(timeout,
+                              max(retry_heap[0][0] - now, 0.0))
+            msgs = tr.poll(timeout)
+            now = time.perf_counter()
+            for msg in msgs:
+                kind = msg[0]
+                if kind == "out":
+                    _, _, inv_id, attempt, chunk_id, y, _meas = msg
+                    st = states.get(inv_id)
+                    if st is not None and attempt == st.attempt:
+                        outputs[(inv_id, chunk_id)] = y
+                elif kind == "done":
+                    _, _, inv_id, attempt, ok, measured = msg
+                    st = states.get(inv_id)
+                    if st is None or st.done or attempt != st.attempt:
+                        continue               # stale attempt: ignore
+                    st.busy_s += float(measured)
+                    inflight.pop(inv_id, None)
+                    if ok:
+                        st.done = True
+                        st.end_wall = now
+                        remaining -= 1
+                    else:
+                        retries += 1
+                        self._schedule_retry(st, retry_heap, now,
+                                             lost=False)
+                elif kind == "dead":
+                    _, worker = msg
+                    for iid, st in list(inflight.items()):
+                        if st.inv.worker == worker:
+                            inflight.pop(iid)
+                            retries += 1
+                            self._schedule_retry(st, retry_heap, now,
+                                                 lost=True)
+                    tr.restart(worker)
+                elif kind == "pong":
+                    pass
+            # hung-attempt safety net: restart workers holding attempts
+            # older than the timeout (only meaningful on real transports)
+            if tr.realtime and inflight:
+                now = time.perf_counter()
+                overdue = [st for st in inflight.values()
+                           if now - st.dispatch_wall > self.timeout_s]
+                for st in overdue:
+                    inflight.pop(st.inv.inv_id, None)
+                    timeouts += 1
+                    retries += 1
+                    tr.restart(st.inv.worker)
+                    self._schedule_retry(st, retry_heap, now, lost=True)
+
+        if tr.realtime:
+            makespan = max((st.end_wall for st in states.values()),
+                           default=wall0) - wall0
+        else:
+            # virtual span: an invocation ends after its busy time plus
+            # the backoffs it waited through; the wave spans the slowest
+            makespan = max((st.busy_s + st.backoff_s
+                            for st in states.values()), default=0.0)
+        return WaveOutcome(
+            busy_s={i: st.busy_s for i, st in states.items()},
+            attempts={i: st.attempt for i, st in states.items()},
+            lost_attempts={i: st.lost_attempts
+                           for i, st in states.items()},
+            retries=retries,
+            queue_delay_s=queue_delay,
+            makespan_s=float(max(makespan, 0.0)),
+            chunk_msgs=chunk_msgs,
+            outputs=outputs,
+            timeouts=timeouts,
+        )

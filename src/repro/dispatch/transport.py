@@ -1,0 +1,153 @@
+"""The transport seam of the dispatch substrate.
+
+A :class:`Transport` moves chunk messages between the gateway (the
+:class:`~repro.dispatch.engine.ChunkedDispatcher`) and a fleet of expert
+*workers*, and surfaces worker death. The wire protocol is deliberately
+tiny — plain tuples, numpy payloads — so the same gateway drives an
+in-process loopback (:class:`InlineTransport`, the exact-timing oracle)
+and real worker processes (``repro.dist.ProcessTransport``) unchanged.
+
+Gateway -> worker messages::
+
+    ("chunk", inv_id, attempt, chunk_id, n_chunks, layer, expert,
+     target_s, flags, x)        # one scatter chunk; flags: {fail, die}
+    ("ping", token)             # liveness / warmup barrier
+    ("exit",)                   # orderly shutdown
+
+Worker -> gateway messages::
+
+    ("out",  worker, inv_id, attempt, chunk_id, y, measured_s)
+    ("done", worker, inv_id, attempt, ok, measured_total_s)
+    ("pong", worker, token)
+    ("dead", worker)            # synthesized by the transport on death
+
+``target_s`` is the chunk's emulated service time in WALL seconds (the
+platform-model duration already multiplied by the gateway's time scale);
+a worker computes the chunk's real output, then holds the invocation
+until the target elapses, and reports what it measured. A ``fail`` flag
+makes the attempt transiently fail after its head phase (the
+:class:`~repro.dispatch.policy.DispatchPolicy` failure semantics); a
+``die`` flag makes a process worker exit mid-chunk (real worker-kill
+fault injection — meaningless for the inline loopback, which treats it
+as a failure).
+
+The chunk *compute* is a real (tiny) numpy GEMM keyed by (layer,
+expert) — :func:`chunk_output` — so a gather that lost, reordered, or
+double-applied chunks is detectable by the gateway, not just slow.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+# --------------------------------------------------------------- payloads
+
+_WEIGHT_CACHE: Dict[Tuple[int, int, int], np.ndarray] = {}
+
+
+def _expert_weight(layer: int, expert: int, d_pay: int) -> np.ndarray:
+    key = (int(layer), int(expert), int(d_pay))
+    if key not in _WEIGHT_CACHE:
+        rng = np.random.default_rng([1009 * key[0] + key[1], d_pay])
+        _WEIGHT_CACHE[key] = rng.standard_normal(
+            (d_pay, d_pay)).astype(np.float32) / np.sqrt(d_pay)
+    return _WEIGHT_CACHE[key]
+
+
+def make_payload(layer: int, expert: int, replica: int, chunk_id: int,
+                 rows: int, d_pay: int) -> np.ndarray:
+    """Deterministic scatter payload for one chunk (so the gateway can
+    regenerate it to verify the gathered output)."""
+    rng = np.random.default_rng(
+        [int(layer), int(expert), int(replica), int(chunk_id)])
+    return rng.standard_normal((int(rows), int(d_pay))).astype(np.float32)
+
+
+def chunk_output(layer: int, expert: int, x: np.ndarray) -> np.ndarray:
+    """The expert 'FFN' a worker applies to a scatter chunk: a seeded
+    per-(layer, expert) GEMM + nonlinearity. Deterministic, so gathers
+    are verifiable end-to-end."""
+    w = _expert_weight(layer, expert, x.shape[-1])
+    return np.tanh(x @ w)
+
+
+# -------------------------------------------------------------- transport
+
+@runtime_checkable
+class Transport(Protocol):
+    """Anything that can move chunk messages to workers and back."""
+
+    num_workers: int
+    realtime: bool      # True when measured wall-clock is meaningful
+
+    def send(self, worker: int, msg: tuple) -> None:
+        ...
+
+    def poll(self, timeout_s: float) -> List[tuple]:
+        """Collect worker->gateway messages; returns possibly-empty list
+        after at most ``timeout_s`` seconds. Worker death surfaces as
+        ``("dead", worker)`` exactly once per death."""
+        ...
+
+    def restart(self, worker: int) -> None:
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+class InlineTransport:
+    """Zero-latency in-process loopback: the exact-timing oracle.
+
+    Chunks execute synchronously at ``send`` time and report
+    ``measured_s == target_s`` exactly — no sleep, no IPC — so a
+    gateway driving this transport reproduces the platform model's
+    closed-form times to float precision. Used by the differential
+    tests as the reference the real process transport is calibrated
+    against, and by ``DistributedBackend(transport="inline")`` for
+    instant plan walk-throughs.
+    """
+
+    realtime = False
+
+    def __init__(self, num_workers: int = 1):
+        self.num_workers = int(num_workers)
+        self._outbox: List[tuple] = []
+        self._busy: Dict[Tuple[int, int], float] = {}   # (inv, attempt)
+        self.closed = False
+
+    def send(self, worker: int, msg: tuple) -> None:
+        kind = msg[0]
+        if kind == "ping":
+            self._outbox.append(("pong", worker, msg[1]))
+            return
+        if kind == "exit":
+            return
+        assert kind == "chunk", kind
+        (_, inv_id, attempt, chunk_id, n_chunks, layer, expert,
+         target_s, flags, x) = msg
+        fail = bool(flags.get("fail") or flags.get("die"))
+        y = chunk_output(layer, expert, x) if x is not None else None
+        key = (inv_id, attempt)
+        total = self._busy.get(key, 0.0) + float(target_s)
+        self._busy[key] = total
+        self._outbox.append(("out", worker, inv_id, attempt, chunk_id,
+                             y, float(target_s)))
+        if fail or chunk_id == n_chunks - 1:
+            # a failing attempt is a single head-phase chunk; a clean
+            # attempt completes on its last chunk
+            self._busy.pop(key, None)
+            self._outbox.append(("done", worker, inv_id, attempt,
+                                 not fail, total))
+
+    def poll(self, timeout_s: float) -> List[tuple]:
+        out, self._outbox = self._outbox, []
+        return out
+
+    def restart(self, worker: int) -> None:    # no processes to restart
+        pass
+
+    def close(self) -> None:
+        self.closed = True
+        self._outbox = []

@@ -1,0 +1,17 @@
+"""Real multi-process plan execution (``DistributedBackend``).
+
+``repro.dist`` turns the dispatch substrate (:mod:`repro.dispatch`)
+into a running system: expert workers as separate spawn-context
+processes (:mod:`repro.dist.worker`), a pipe transport that multiplexes
+them and surfaces death (:class:`ProcessTransport`), and a gateway
+backend (:class:`DistributedBackend`) that executes a deployment plan's
+chunked scatter-gather for real — async dispatch, overlapped
+compute/communication, worker-kill fault injection, exponential-backoff
+retries — and returns the same :class:`~repro.plan.schema.ExecutionReport`
+the simulator does, calibrated against the Eq. 3-11 closed forms by
+time-dilated emulation.
+"""
+from repro.dist.backend import DistributedBackend
+from repro.dist.transport import ProcessTransport
+
+__all__ = ["DistributedBackend", "ProcessTransport"]

@@ -1,0 +1,452 @@
+"""DistributedBackend: a deployment plan executed over real processes.
+
+The third :class:`~repro.plan.backends.ExecutionBackend`: where
+``SimulatorBackend`` *computes* what the plan's chunked scatter-gather
+would cost and ``ServingBackend`` measures routing but still bills
+analytically, this backend **runs the scatter-gather for real** — every
+(layer, expert, replica) invocation becomes chunk messages dispatched
+asynchronously to expert worker processes, each chunk carrying a real
+(tiny) numpy payload the worker GEMMs and streams back while its
+neighbours are still computing (overlapped compute/communication), with
+worker-kill fault injection and exponential-backoff retries handled by
+the shared :class:`~repro.dispatch.engine.ChunkedDispatcher`.
+
+**Time-dilated hardware-in-the-loop emulation.** Real serverless waves
+take seconds-to-minutes; tests cannot. The gateway computes each chunk's
+platform-model duration from the SAME Eq. 3-11 closed forms the
+simulator bills (head/block/tail decomposition of ``t_rep``, Eq. 6),
+multiplies by ``time_scale``, and the worker holds each chunk for that
+wall budget after computing its payload — so billed GB-seconds derive
+from MEASURED worker busy time (scaled back to model seconds), yet
+remain directly comparable to the simulator's closed forms. On the
+:class:`~repro.dispatch.transport.InlineTransport` loopback the
+measurement equals the target exactly (the oracle the differential
+tests pin at ~1e-6); on :class:`~repro.dist.transport.ProcessTransport`
+sleep granularity and IPC overhead land inside the documented
+calibrated tolerance (see ``tests/test_distributed_backend.py``:
+``GB_S_TOL``).
+
+Fault semantics are the simulator's, not a reimplementation: cold /
+straggler / failure decisions are drawn through
+``repro.dispatch.policy`` with the same draw discipline, using an
+independent stream (``[seed, 0xD157]``), and attempts lost to real
+worker deaths bill their head phase exactly as the
+:class:`~repro.core.simulator.FaultProfile` failure path does.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import comm
+from repro.core.costmodel import MB, ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile
+from repro.dispatch import (ChunkedDispatcher, ChunkPlan, Invocation,
+                            InlineTransport, Transport, WaveState,
+                            chunk_output, draw_failures, draw_straggler,
+                            draw_temperature, make_payload)
+from repro.plan.schema import DeploymentPlan, ExecutionReport, Workload
+
+
+class DistributedBackend:
+    """Executes plans over a worker fleet; same report surface as the
+    simulator, so ``run_plan_over_trace``, prewarming, and BO feedback
+    work unmodified.
+
+    ``transport``: ``"process"`` (real spawn-context worker processes),
+    ``"inline"`` (zero-latency in-process oracle), or any
+    :class:`~repro.dispatch.transport.Transport` instance.
+    ``time_scale`` maps model seconds to wall seconds on realtime
+    transports. ``kill_plan`` is a list of ``(layer, expert, replica)``
+    triples whose first attempt is killed mid-chunk (on the process
+    transport: a genuine ``os._exit``; inline: a transient failure).
+    """
+
+    name = "distributed"
+
+    def __init__(self, profile: ModelProfile, platform: PlatformSpec, *,
+                 faults: Optional[FaultProfile] = None, seed: int = 0,
+                 num_workers: int = 2, transport="inline",
+                 time_scale: float = 0.05, verify_outputs: bool = True,
+                 d_pay: int = 8, max_msgs_per_inv: int = 6,
+                 max_payload_rows: int = 32, timeout_s: float = 15.0,
+                 demand_fn: Optional[Callable[[np.ndarray], np.ndarray]]
+                 = None):
+        self.profile = profile
+        self.platform = platform
+        self.faults = faults if faults is not None else FaultProfile()
+        self.seed = int(seed)
+        self.num_workers = int(num_workers)
+        self.time_scale = float(time_scale)
+        self.verify_outputs = bool(verify_outputs)
+        self.d_pay = int(d_pay)
+        self.max_msgs_per_inv = max(int(max_msgs_per_inv), 1)
+        self.max_payload_rows = int(max_payload_rows)
+        self.timeout_s = float(timeout_s)
+        self.demand_fn = demand_fn
+        self._transport_spec = transport
+        self._transport: Optional[Transport] = None
+        # independent fault stream (mirrors the simulator's [seed, 0xFA17]
+        # discipline with its own tag so the two backends never couple)
+        self._fault_rng = np.random.default_rng([self.seed, 0xD157])
+
+    # ------------------------------------------------------------ transport
+    def _ensure_transport(self) -> Transport:
+        if self._transport is None:
+            spec = self._transport_spec
+            if spec == "inline":
+                self._transport = InlineTransport(self.num_workers)
+            elif spec == "process":
+                from repro.dist.transport import ProcessTransport
+                self._transport = ProcessTransport(self.num_workers)
+            elif isinstance(spec, Transport):
+                self._transport = spec
+            else:
+                raise ValueError(f"unknown transport {spec!r}")
+        return self._transport
+
+    @property
+    def transport(self) -> Transport:
+        return self._ensure_transport()
+
+    def close(self) -> None:
+        if self._transport is not None:
+            self._transport.close()
+            self._transport = None
+
+    def __enter__(self) -> "DistributedBackend":
+        self._ensure_transport()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------- wave building
+    def _build_invocations(self, layer: int, eff_a: int, beta: int,
+                           t_rep: np.ndarray, g: np.ndarray,
+                           r_real: np.ndarray, mem: np.ndarray,
+                           head_s: float, cold_extra_s: float,
+                           state: WaveState, chunks: ChunkPlan,
+                           kill: set, inv_id0: int, scale: float
+                           ) -> Tuple[List[Invocation], List[dict]]:
+        """Draw this wave's faults and decompose each invocation's
+        ``t_rep`` into chunk targets summing (to the ulp) to the closed
+        form: ``[t_h + t_blk, t_blk, ..., t_blk + t_tail]`` for the
+        pipelined method, one chunk otherwise. Minibatches beyond
+        ``max_msgs_per_inv`` coalesce into balanced message groups —
+        the β-pipeline's overlap structure survives, the IPC message
+        count stays bounded (scheduled vs dispatched both reported)."""
+        prof, spec, faults = self.profile, self.platform, self.faults
+        rng = self._fault_rng
+        bs = spec.bw_storage_mb_s * MB
+        tdl = spec.t_storage_access_s
+        t_cal = comm.t_cal_per_token(prof.u_ref_s, mem, spec)
+        d_in, d_o = prof.token_in_bytes, prof.token_out_bytes
+        invs: List[Invocation] = []
+        metas: List[dict] = []
+        E = t_rep.shape[0]
+        inv_id = inv_id0
+        for expert in range(E):
+            dur = float(t_rep[expert])
+            if dur <= 0.0:
+                continue
+            if eff_a == 1:
+                n_mb = int(chunks.minibatches(layer, r_real)[expert])
+                t_blk = tdl + max(beta * (d_in / bs + float(t_cal[expert])),
+                                  beta * d_o / bs)
+                t_tail = tdl + beta * d_o / bs
+            else:
+                n_mb, t_blk, t_tail = 1, 0.0, 0.0
+            for replica in range(int(g[expert])):
+                cold, pre_hit = draw_temperature(faults, rng, state, expert)
+                straggled = draw_straggler(faults, rng)
+                n_fail = draw_failures(faults, rng)
+                cold_billed = cold_extra_s if cold else 0.0
+                # --- success-attempt chunk targets ---------------------
+                if eff_a == 1:
+                    n_msgs = min(n_mb, self.max_msgs_per_inv)
+                    per, rem = divmod(n_mb, n_msgs)
+                    groups = [per + (1 if k < rem else 0)
+                              for k in range(n_msgs)]
+                    targets = [cnt * t_blk for cnt in groups]
+                    targets[0] += head_s
+                    targets[-1] += t_tail
+                else:
+                    targets = [dur]
+                # pin the float sum to the closed-form t_rep exactly
+                targets[-1] += dur - sum(targets)
+                targets[-1] = max(targets[-1], 0.0)
+                if straggled:
+                    targets[-1] += dur * (faults.straggler_slowdown - 1.0)
+                # --- failing attempts ---------------------------------
+                fail_targets = [head_s] * n_fail
+                die_attempt = 0
+                if (layer, expert, replica) in kill:
+                    # injected worker kill replaces drawn failures for
+                    # this invocation: attempt 1 dies mid-head
+                    fail_targets = [head_s]
+                    die_attempt = 1
+                if fail_targets:
+                    fail_targets[0] += cold_billed
+                else:
+                    targets[0] += cold_billed
+                rows = min(int(np.ceil(r_real[expert])),
+                           self.max_payload_rows)
+                n_ch = len(targets)
+                chunk_rows = [rows // n_ch + (1 if k < rows % n_ch else 0)
+                              for k in range(n_ch)]
+                invs.append(Invocation(
+                    inv_id=inv_id, layer=layer, expert=expert,
+                    replica=replica, worker=inv_id % self.num_workers,
+                    # targets ship in WALL seconds: model -> wall here,
+                    # measured busy converts back (/scale) at billing
+                    chunk_targets=[t * scale for t in targets],
+                    chunk_rows=chunk_rows,
+                    scheduled_minibatches=n_mb,
+                    fail_targets=[t * scale for t in fail_targets],
+                    die_attempt=die_attempt,
+                    d_pay=self.d_pay))
+                metas.append(dict(
+                    inv_id=inv_id, expert=expert, replica=replica,
+                    dur=dur, cold=cold, pre_hit=pre_hit,
+                    straggled=straggled, cold_billed=cold_billed,
+                    die=die_attempt > 0))
+                inv_id += 1
+        return invs, metas
+
+    # --------------------------------------------------------------- run
+    def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
+            num_tokens: int, *, prewarm=None,
+            kill_plan: Optional[Sequence[Tuple[int, int, int]]] = None
+            ) -> ExecutionReport:
+        """Execute the plan's chunked scatter-gather for real; same
+        signature and accounting surface as ``ServerlessSimulator.run``."""
+        from repro.core.simulator import ServerlessSimulator
+        prof, spec, faults = self.profile, self.platform, self.faults
+        tr = self._ensure_transport()
+        scale = self.time_scale if tr.realtime else 1.0
+        disp = ChunkedDispatcher(tr, faults, time_scale=scale,
+                                 timeout_s=self.timeout_s)
+        real_demand = np.asarray(real_demand, float)
+        L, E = real_demand.shape
+        pw = ServerlessSimulator._prewarm_matrix(prewarm, L, E)
+        kill = set(map(tuple, kill_plan)) if kill_plan else set()
+        chunks = ChunkPlan.from_plan(plan)
+        layer_cost = np.zeros(L)
+        layer_lat = np.zeros(L)
+        overrun = np.zeros((L, E), bool)
+        payload_bad = np.zeros((L, E), bool)
+        min_mem = np.zeros((L, E))
+        head_s = comm.head_time(prof, spec)
+        cold_extra_s = max(spec.t_cold_start_s - spec.t_warm_start_s, 0.0)
+        breakdown = dict(cold_starts=0, cold_start_s=0.0, retries=0,
+                         retry_s=0.0, queue_delay_s=0.0, stragglers=0,
+                         prewarm_hits=0, prewarm_misses=0,
+                         wasted_prewarm_gb_s=0.0)
+        layers_info: List[dict] = []
+        mismatches = 0
+        verified = 0
+        inv_id0 = 0
+
+        for e in range(L):
+            a = int(plan.method[e])
+            beta = chunks.beta_for(e)
+            g = plan.replicas[e].astype(float)
+            mem = plan.mem_mb[e]
+            r_real = real_demand[e] / np.maximum(g, 1)
+            min_mem[e] = comm.memory_required_mb(r_real, prof)
+            overrun[e] = (min_mem[e] > mem) & (real_demand[e] > 0)
+            if a == 3:
+                payload_bad[e] = (r_real * prof.token_in_bytes
+                                  > spec.payload_bytes)
+            eff_a = a
+            if payload_bad[e].any():
+                eff_a = 2            # platform rejects oversized payloads
+            times = comm.layer_times(eff_a, r_real, g, mem, beta,
+                                     prof, spec)
+            t_total = times.t_total.copy()
+            t_lat = times.t_latency
+            base_makespan = float(np.max(times.t_rep, initial=0.0))
+
+            # ---- the real wave: draw faults, dispatch, measure --------
+            state = WaveState.start(faults, pw[e] if pw is not None
+                                    else None)
+            invs, metas = self._build_invocations(
+                e, eff_a, beta, times.t_rep, g, r_real, mem, head_s,
+                cold_extra_s, state, chunks, kill, inv_id0, scale)
+            inv_id0 += len(invs)
+            wasted_gb_s = 0.0
+            if invs:
+                out = disp.run_wave(invs)
+                for m in metas:
+                    iid = m["inv_id"]
+                    busy = out.busy_s[iid] / scale
+                    lost = out.lost_attempts.get(iid, 0)
+                    # measured extras, plus the FaultProfile head billing
+                    # for attempts that died with their worker
+                    extra = (busy - m["dur"]) + lost * head_s
+                    if lost and m["die"] and m["cold_billed"] > 0.0:
+                        extra += m["cold_billed"]   # cold paid on attempt 1
+                    t_total[m["expert"]] += max(extra, 0.0)
+                    n_retries = out.attempts[iid] - 1
+                    breakdown["retries"] += n_retries
+                    breakdown["retry_s"] += n_retries * head_s
+                    if m["cold"]:
+                        breakdown["cold_starts"] += 1
+                        breakdown["cold_start_s"] += m["cold_billed"]
+                    if m["straggled"]:
+                        breakdown["stragglers"] += 1
+                    if m["pre_hit"]:
+                        breakdown["prewarm_hits"] += 1
+                makespan = out.makespan_s / scale
+                t_lat += max(makespan - base_makespan, 0.0)
+                breakdown["queue_delay_s"] += out.queue_delay_s / scale
+                if self.verify_outputs:
+                    v, mm = self._verify(invs, out.outputs)
+                    verified += v
+                    mismatches += mm
+                layers_info.append(dict(
+                    layer=e, method=a, eff_method=eff_a, beta=beta,
+                    invocations=len(invs),
+                    scheduled_minibatches=int(sum(
+                        i.scheduled_minibatches for i in invs)),
+                    chunk_msgs=out.chunk_msgs,
+                    predicted_rep_max_s=base_makespan,
+                    predicted_latency_s=float(times.t_latency),
+                    measured_makespan_s=float(makespan),
+                    busy_sum_s=float(sum(out.busy_s.values()) / scale),
+                    retries=out.retries, timeouts=out.timeouts))
+            else:
+                layers_info.append(dict(
+                    layer=e, method=a, eff_method=eff_a, beta=beta,
+                    invocations=0, scheduled_minibatches=0, chunk_msgs=0,
+                    predicted_rep_max_s=0.0, predicted_latency_s=0.0,
+                    measured_makespan_s=0.0, busy_sum_s=0.0,
+                    retries=0, timeouts=0))
+            if pw is not None:
+                leftover = state.pre_left
+                breakdown["prewarm_misses"] += int(leftover.sum())
+                wasted_gb_s = float((leftover * mem).sum()) / 1024.0 \
+                    * spec.t_prewarm_keepalive_s
+                breakdown["wasted_prewarm_gb_s"] += wasted_gb_s
+
+            # ---- analytic penalties, identical to the simulator -------
+            if overrun[e].any():
+                retry = overrun[e]
+                penalty = (comm.head_time(prof, spec)
+                           + 2 * spec.t_storage_access_s
+                           + r_real * (prof.token_in_bytes
+                                       + prof.token_out_bytes)
+                           / (spec.bw_storage_mb_s * MB))
+                t_total = t_total + np.where(retry, g * penalty, 0.0)
+                t_lat += float(np.max(np.where(retry, penalty, 0.0)))
+            if payload_bad[e].any():
+                t_lat += spec.t_warm_start_s
+            layer_cost[e] = comm.layer_billed_cost(
+                comm.LayerTimes(times.t_rep, t_total, t_lat,
+                                times.feasible),
+                mem, spec) + wasted_gb_s * spec.price_per_gb_s
+            layer_lat[e] = t_lat
+
+        total_lat = (prof.t_head_s + prof.t_tail_s
+                     + layer_lat.sum() + L * prof.t_nonmoe_s)
+        rep = ExecutionReport(
+            billed_cost=float(layer_cost.sum()),
+            latency_s=float(total_lat),
+            throughput_tps=num_tokens / max(total_lat, 1e-9),
+            layer_cost=layer_cost,
+            layer_latency=layer_lat,
+            mem_overrun=overrun,
+            payload_violation=payload_bad,
+            real_demand=real_demand,
+            min_mem_required_mb=min_mem,
+            backend=self.name,
+            num_tokens=int(num_tokens),
+            cold_starts=int(breakdown["cold_starts"]),
+            cold_start_s=float(breakdown["cold_start_s"]),
+            retries=int(breakdown["retries"]),
+            retry_s=float(breakdown["retry_s"]),
+            queue_delay_s=float(breakdown["queue_delay_s"]),
+            stragglers=int(breakdown["stragglers"]),
+            prewarm_hits=int(breakdown["prewarm_hits"]),
+            prewarm_misses=int(breakdown["prewarm_misses"]),
+            wasted_prewarm_gb_s=float(breakdown["wasted_prewarm_gb_s"]),
+        )
+        rep.extras = {
+            "transport": type(tr).__name__,
+            "num_workers": tr.num_workers,
+            "time_scale": self.time_scale if tr.realtime else None,
+            "layers": layers_info,
+            "verified_chunks": verified,
+            "output_mismatches": mismatches,
+            "scheduled_minibatches": int(sum(
+                li["scheduled_minibatches"] for li in layers_info)),
+            "chunk_msgs": int(sum(li["chunk_msgs"]
+                                  for li in layers_info)),
+        }
+        if mismatches:
+            raise RuntimeError(
+                f"gather verification failed: {mismatches} chunk outputs "
+                "did not match the expected expert GEMM")
+        return rep
+
+    def _verify(self, invs: List[Invocation], outputs) -> Tuple[int, int]:
+        """Regenerate every gathered chunk's expected GEMM output and
+        compare — a gather that lost, reordered, or double-applied
+        chunks fails loudly, not just slowly."""
+        ok = bad = 0
+        for inv in invs:
+            for k, rows in enumerate(inv.chunk_rows):
+                if rows <= 0:
+                    continue
+                y = outputs.get((inv.inv_id, k))
+                if y is None:
+                    bad += 1
+                    continue
+                x = make_payload(inv.layer, inv.expert, inv.replica, k,
+                                 rows, inv.d_pay)
+                want = chunk_output(inv.layer, inv.expert, x)
+                if y.shape == want.shape and np.allclose(y, want,
+                                                         atol=1e-5):
+                    ok += 1
+                else:
+                    bad += 1
+        return ok, bad
+
+    # -------------------------------------------- ExecutionBackend surface
+    def _batch_demand(self, workload: Workload,
+                      batch: np.ndarray) -> np.ndarray:
+        if workload.real_demand is not None:
+            share = np.asarray(batch).size / max(workload.num_tokens, 1)
+            return np.asarray(workload.real_demand, float) * share
+        if self.demand_fn is None:
+            raise ValueError(
+                "DistributedBackend needs workload.real_demand or a "
+                "demand_fn to derive ground-truth routing")
+        return self.demand_fn(batch)
+
+    def execute_batches(self, plan: DeploymentPlan,
+                        workload: Workload) -> List[ExecutionReport]:
+        return [self.run(plan, self._batch_demand(workload, b),
+                         int(np.asarray(b).size))
+                for b in workload.batches]
+
+    def execute(self, plan: DeploymentPlan,
+                workload: Workload) -> ExecutionReport:
+        from repro.plan.backends import _merge_reports
+        return _merge_reports(self.execute_batches(plan, workload),
+                              backend=self.name)
+
+    def execute_trace(self, plan: DeploymentPlan, trace, *,
+                      predictor=None,
+                      prewarm: Optional[str] = None
+                      ) -> List[ExecutionReport]:
+        """Window-by-window over a :class:`repro.traces.Trace`: the
+        backend itself is the ``sim`` (same ``run`` signature), so the
+        shared trace-feedback loop drives real processes unmodified."""
+        from repro.plan.backends import run_plan_over_trace
+        return run_plan_over_trace(plan, trace, self,
+                                   self.profile, self.platform,
+                                   predictor=predictor,
+                                   prewarm=prewarm)["reports"]

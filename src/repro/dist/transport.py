@@ -1,0 +1,162 @@
+"""ProcessTransport: the dispatch wire protocol over real worker processes.
+
+One duplex :func:`multiprocessing.Pipe` per worker, workers launched
+with the **spawn** context (children re-import only the numpy-only
+``repro.dist.worker`` graph — no JAX state is forked, and spawn
+propagates ``sys.path`` so the namespace package resolves in the child).
+``poll`` multiplexes every live pipe through
+:func:`multiprocessing.connection.wait`; a dropped pipe (worker death —
+injected via the ``die`` flag or :meth:`kill_worker`) surfaces as a
+single ``("dead", worker)`` message, after which the slot stays dead
+until :meth:`restart` respawns it.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import time
+from multiprocessing.connection import wait as _conn_wait
+from typing import Dict, List, Optional
+
+from repro.dist.worker import worker_main
+
+_CTX = mp.get_context("spawn")
+
+
+class ProcessTransport:
+    """Real worker-process fleet behind the :class:`Transport` protocol."""
+
+    realtime = True
+
+    def __init__(self, num_workers: int = 2, *, warmup: bool = True,
+                 spawn_timeout_s: float = 30.0):
+        self.num_workers = int(num_workers)
+        self.spawn_timeout_s = float(spawn_timeout_s)
+        self._procs: List[Optional[mp.Process]] = [None] * self.num_workers
+        self._conns: List[Optional[object]] = [None] * self.num_workers
+        self._dead_reported: List[bool] = [False] * self.num_workers
+        self.closed = False
+        self.respawns = 0
+        for w in range(self.num_workers):
+            self._spawn(w)
+        if warmup:
+            self._warmup()
+
+    # ----------------------------------------------------------- lifecycle
+    def _spawn(self, worker: int) -> None:
+        parent, child = _CTX.Pipe(duplex=True)
+        proc = _CTX.Process(target=worker_main, args=(worker, child),
+                            daemon=True, name=f"repro-dist-w{worker}")
+        proc.start()
+        child.close()                      # the child's end lives there
+        self._procs[worker] = proc
+        self._conns[worker] = parent
+        self._dead_reported[worker] = False
+
+    def _warmup(self) -> None:
+        """Ping every worker and wait for pongs: spawn/import cost is
+        paid HERE, not inside the first timed wave."""
+        pending = set(range(self.num_workers))
+        for w in pending:
+            self._conns[w].send(("ping", 0))
+        deadline = time.perf_counter() + self.spawn_timeout_s
+        while pending and time.perf_counter() < deadline:
+            for msg in self.poll(0.1):
+                if msg[0] == "pong":
+                    pending.discard(msg[1])
+        if pending:
+            raise RuntimeError(
+                f"workers {sorted(pending)} failed to start within "
+                f"{self.spawn_timeout_s}s")
+
+    def pids(self) -> List[Optional[int]]:
+        """Live worker PIDs (None for dead slots) — teardown assertions."""
+        return [p.pid if p is not None and p.is_alive() else None
+                for p in self._procs]
+
+    # ------------------------------------------------------------ protocol
+    def send(self, worker: int, msg: tuple) -> None:
+        conn = self._conns[worker]
+        if conn is None:
+            return
+        try:
+            conn.send(msg)
+        except (BrokenPipeError, OSError):
+            pass          # death is reported (once) by the next poll
+
+    def poll(self, timeout_s: float) -> List[tuple]:
+        out: List[tuple] = []
+        conns = {id(c): w for w, c in enumerate(self._conns)
+                 if c is not None}
+        live = [c for c in self._conns if c is not None]
+        if not live:
+            time.sleep(min(timeout_s, 0.01))
+            return out
+        for conn in _conn_wait(live, timeout=max(timeout_s, 0.0)):
+            w = conns[id(conn)]
+            try:
+                while True:
+                    out.append(conn.recv())
+                    if not conn.poll(0):
+                        break
+            except (EOFError, OSError):
+                out.extend(self._mark_dead(w))
+        # processes that died without closing the pipe cleanly
+        for w, proc in enumerate(self._procs):
+            if (proc is not None and not proc.is_alive()
+                    and not self._dead_reported[w]):
+                out.extend(self._mark_dead(w))
+        return out
+
+    def _mark_dead(self, worker: int) -> List[tuple]:
+        if self._dead_reported[worker]:
+            return []
+        self._dead_reported[worker] = True
+        conn = self._conns[worker]
+        if conn is not None:
+            conn.close()
+        self._conns[worker] = None
+        return [("dead", worker)]
+
+    def restart(self, worker: int) -> None:
+        proc = self._procs[worker]
+        if proc is not None:
+            if proc.is_alive():
+                proc.terminate()
+            proc.join(timeout=5.0)
+        conn = self._conns[worker]
+        if conn is not None:
+            conn.close()
+        self.respawns += 1
+        self._spawn(worker)
+
+    # ------------------------------------------------------ fault injection
+    def kill_worker(self, worker: int) -> None:
+        """SIGKILL a worker from outside (test hook for ungraceful death;
+        the in-band path is the ``die`` chunk flag)."""
+        proc = self._procs[worker]
+        if proc is not None and proc.is_alive():
+            os.kill(proc.pid, signal.SIGKILL)
+            proc.join(timeout=5.0)
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        for w, conn in enumerate(self._conns):
+            if conn is not None:
+                try:
+                    conn.send(("exit",))
+                except (BrokenPipeError, OSError):
+                    pass
+        for proc in self._procs:
+            if proc is not None:
+                proc.join(timeout=2.0)
+                if proc.is_alive():
+                    proc.terminate()
+                    proc.join(timeout=2.0)
+        for conn in self._conns:
+            if conn is not None:
+                conn.close()
+        self._conns = [None] * self.num_workers

@@ -1,0 +1,113 @@
+"""Expert worker process: one serverless "function instance" fleet slot.
+
+Spawn-safe and dependency-light ON PURPOSE: this module imports numpy
+and the (numpy-only) ``repro.dispatch.transport`` payload helpers, never
+JAX — a spawned child re-imports only this module's graph, so worker
+start stays cheap and free of accelerator runtime state.
+
+A worker speaks the :mod:`repro.dispatch.transport` wire protocol over a
+``multiprocessing`` duplex pipe. Each invocation *attempt* is handled by
+its own thread so concurrent invocations of the wave genuinely overlap
+(the per-worker loop is sleep-dominated — time-dilated emulation — so
+threads are nearly free and the GIL is irrelevant). Within one attempt,
+chunks execute strictly in order: compute the chunk's real expert GEMM,
+then hold the invocation until the chunk's ``target_s`` wall budget
+elapses, then stream the result back — download/compute of chunk t
+overlapping the gateway-side gather of chunk t-1, exactly the a=1
+pipeline the platform model times.
+
+Fault hooks: a ``fail`` flag completes the chunk then reports
+``ok=False`` (a transient failure the gateway retries with backoff); a
+``die`` flag hard-exits the process mid-chunk (``os._exit``), modeling a
+worker kill — the gateway sees the pipe drop, not a polite NACK.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import Dict, Tuple
+
+from repro.dispatch.transport import chunk_output
+
+
+class _Attempt:
+    """One invocation attempt: a chunk queue drained by its own thread."""
+
+    def __init__(self, worker_id: int, conn, send_lock, inv_id: int,
+                 attempt: int):
+        self.worker_id = worker_id
+        self.conn = conn
+        self.send_lock = send_lock
+        self.inv_id = inv_id
+        self.attempt = attempt
+        self.chunks: "queue.Queue[tuple]" = queue.Queue()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _send(self, msg: tuple) -> None:
+        with self.send_lock:
+            try:
+                self.conn.send(msg)
+            except (BrokenPipeError, OSError):
+                pass                      # gateway gone: nothing to report
+
+    def _run(self) -> None:
+        total = 0.0
+        while True:
+            (chunk_id, n_chunks, layer, expert, target_s, flags, x) \
+                = self.chunks.get()
+            t0 = time.perf_counter()
+            y = chunk_output(layer, expert, x) if x is not None else None
+            if flags.get("die"):
+                # worker-kill fault injection: die mid-chunk, taking the
+                # whole process (and every other attempt on it) down
+                os._exit(17)
+            hold = target_s - (time.perf_counter() - t0)
+            if hold > 0:
+                time.sleep(hold)
+            measured = time.perf_counter() - t0
+            total += measured
+            self._send(("out", self.worker_id, self.inv_id, self.attempt,
+                        chunk_id, y, measured))
+            if flags.get("fail"):
+                self._send(("done", self.worker_id, self.inv_id,
+                            self.attempt, False, total))
+                return
+            if chunk_id == n_chunks - 1:
+                self._send(("done", self.worker_id, self.inv_id,
+                            self.attempt, True, total))
+                return
+
+
+def worker_main(worker_id: int, conn) -> None:
+    """Worker process entry point: demultiplex chunk messages onto
+    per-attempt threads until ``("exit",)`` or the pipe drops."""
+    send_lock = threading.Lock()
+    attempts: Dict[Tuple[int, int], _Attempt] = {}
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        kind = msg[0]
+        if kind == "exit":
+            break
+        if kind == "ping":
+            with send_lock:
+                conn.send(("pong", worker_id, msg[1]))
+            continue
+        assert kind == "chunk", kind
+        (_, inv_id, attempt, chunk_id, n_chunks, layer, expert,
+         target_s, flags, x) = msg
+        key = (inv_id, attempt)
+        if key not in attempts:
+            attempts[key] = _Attempt(worker_id, conn, send_lock,
+                                     inv_id, attempt)
+        attempts[key].chunks.put(
+            (chunk_id, n_chunks, layer, expert, target_s, flags, x))
+        # completed attempts are pruned lazily; the dict stays tiny
+        attempts = {k: a for k, a in attempts.items()
+                    if a.thread.is_alive() or k == key}
+    conn.close()

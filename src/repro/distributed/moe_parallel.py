@@ -31,6 +31,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, MoEConfig
+from repro.dispatch.chunks import chunk_count
 from repro.models.common import Params
 from repro.models.mlp import mlp_forward
 from repro.models.moe import (build_dispatch, build_grouped_dispatch,
@@ -51,21 +52,11 @@ def _shard_map(f, mesh, in_specs, out_specs):
               check_rep=False)
 
 
-def _chunk_count(capacity: int, d_model: int, beta: int,
-                 max_chunk_bytes: Optional[int], model_size: int,
-                 e_local: int, itemsize: int = 2) -> int:
-    """beta, raised if a chunk would exceed the payload-cap analogue."""
-    beta = max(1, min(beta, capacity))
-    if max_chunk_bytes:
-        while beta < capacity:
-            chunk_c = -(-capacity // beta)
-            msg = model_size * e_local * chunk_c * d_model * itemsize
-            if msg <= max_chunk_bytes:
-                break
-            beta *= 2
-    while capacity % beta != 0:      # chunks must tile the capacity axis
-        beta += 1
-    return min(beta, capacity)
+# β-chunk sizing now lives in the transport-agnostic dispatch substrate
+# (repro.dispatch.chunks) so the shard_map loops here and the process
+# gateway size their chunks identically; the old private name stays as
+# an alias for downstream callers.
+_chunk_count = chunk_count
 
 
 def expert_parallel_moe(

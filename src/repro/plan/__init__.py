@@ -18,6 +18,7 @@ __all__ = [
     "RandomPlanner", "BOPlanner",
     "register_planner", "get_planner", "available_planners",
     "ExecutionBackend", "SimulatorBackend", "ServingBackend",
+    "register_backend", "get_backend", "available_backends",
     "run_plan_over_trace",
 ]
 
@@ -40,11 +41,16 @@ _LOCATIONS = {
     "ExecutionBackend": "repro.plan.backends",
     "SimulatorBackend": "repro.plan.backends",
     "ServingBackend": "repro.plan.backends",
+    "register_backend": "repro.plan.backends",
+    "get_backend": "repro.plan.backends",
+    "available_backends": "repro.plan.backends",
 }
 
 if TYPE_CHECKING:   # pragma: no cover — static-analysis-only eager imports
     from repro.plan.backends import (ExecutionBackend,  # noqa: F401
-                                     ServingBackend, SimulatorBackend)
+                                     ServingBackend, SimulatorBackend,
+                                     available_backends, get_backend,
+                                     register_backend)
     from repro.plan.planner import (BOPlanner, FixedMethodPlanner,  # noqa: F401
                                     LambdaMLPlanner, ODSPlanner, Planner,
                                     RandomPlanner, available_planners,

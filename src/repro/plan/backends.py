@@ -2,7 +2,7 @@
 
 An :class:`ExecutionBackend` executes a plan against a workload and
 returns the common :class:`~repro.plan.schema.ExecutionReport` the BO
-loop (Alg. 2) and the paper's figures consume. Two implementations:
+loop (Alg. 2) and the paper's figures consume. Three implementations:
 
 * :class:`SimulatorBackend` — wraps :class:`ServerlessSimulator`: bills
   the plan at the workload's REAL routed-token counts, flags memory
@@ -16,8 +16,13 @@ loop (Alg. 2) and the paper's figures consume. Two implementations:
   schedule, and the measured routing is billed under the plan's
   per-layer comm methods — live traffic follows the planned comm design
   instead of an offline estimate.
+* ``repro.dist.DistributedBackend`` (registered as ``"distributed"``,
+  resolved lazily) — real multi-process execution of the plan's chunked
+  scatter-gather over the :mod:`repro.dispatch` substrate, calibrated
+  against the simulator's Eq. 3-11 closed forms.
 
-Both backends also consume :mod:`repro.traces` traffic:
+Backends resolve by name through :func:`get_backend` (mirroring the
+planner registry). The simulator/serving backends also consume :mod:`repro.traces` traffic:
 ``SimulatorBackend.execute_trace`` bills a plan window-by-window over a
 demand :class:`~repro.traces.Trace` (drift, bursts), and
 ``ServingBackend.execute_requests`` serves a timed arrival schedule of
@@ -29,7 +34,7 @@ same two-method surface and plug into the identical runtime seam.
 from __future__ import annotations
 
 import time
-from typing import (Callable, List, Optional, Protocol, Sequence,
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
                     runtime_checkable)
 
 import numpy as np
@@ -37,6 +42,7 @@ import numpy as np
 from repro.core.costmodel import ModelProfile, PlatformSpec
 from repro.core.deployment import apply_failure_feedback
 from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.dispatch import ChunkPlan
 from repro.plan.schema import (DeploymentPlan, ExecutionReport, Workload,
                                plan_diff)
 
@@ -52,11 +58,26 @@ class ExecutionBackend(Protocol):
         ...
 
 
+def _carried_prewarm(r: ExecutionReport) -> bool:
+    """Whether a report's (conditional) prewarm block would serialize —
+    the same any-field-nonzero predicate ``ExecutionReport.to_dict``
+    uses to emit the ``"prewarm"`` sub-dict."""
+    return bool(getattr(r, "prewarm_hits", 0)
+                or getattr(r, "prewarm_misses", 0)
+                or getattr(r, "wasted_prewarm_gb_s", 0.0))
+
+
 def _merge_reports(reports: List[ExecutionReport], *,
                    backend: str) -> ExecutionReport:
     assert reports, "cannot merge zero reports"
     total_lat = float(sum(r.latency_s for r in reports))
     n_tok = int(sum(r.num_tokens for r in reports))
+    # the prewarm block is CONDITIONAL: a report only carries it when a
+    # prewarmer actually ran. Merge over the carrying subset (reports
+    # without the attributes — duck-typed or pre-prewarm-era objects —
+    # contribute zeros instead of raising), and record the subset size so
+    # a mixed prewarm-on/off merge stays distinguishable from all-on
+    prewarm_batches = sum(1 for r in reports if _carried_prewarm(r))
     return ExecutionReport(
         billed_cost=float(sum(r.billed_cost for r in reports)),
         latency_s=total_lat,
@@ -76,11 +97,14 @@ def _merge_reports(reports: List[ExecutionReport], *,
         retry_s=float(sum(r.retry_s for r in reports)),
         queue_delay_s=float(sum(r.queue_delay_s for r in reports)),
         stragglers=int(sum(r.stragglers for r in reports)),
-        prewarm_hits=int(sum(r.prewarm_hits for r in reports)),
-        prewarm_misses=int(sum(r.prewarm_misses for r in reports)),
-        wasted_prewarm_gb_s=float(sum(r.wasted_prewarm_gb_s
-                                      for r in reports)),
-        extras={"num_batches": len(reports)},
+        prewarm_hits=int(sum(getattr(r, "prewarm_hits", 0)
+                             for r in reports)),
+        prewarm_misses=int(sum(getattr(r, "prewarm_misses", 0)
+                               for r in reports)),
+        wasted_prewarm_gb_s=float(sum(getattr(r, "wasted_prewarm_gb_s",
+                                              0.0) for r in reports)),
+        extras={"num_batches": len(reports),
+                "prewarm_batches": prewarm_batches},
     )
 
 
@@ -314,7 +338,7 @@ class ServingBackend:
         t0 = time.perf_counter()
 
         # --- serve, segmented into the plan's scatter-gather rounds ------
-        chunk_tokens = int(plan.full_chunk_schedule().max())
+        chunk_tokens = ChunkPlan.from_plan(plan).round_tokens()
         rounds: List[dict] = []
         steps = 0
 
@@ -349,3 +373,44 @@ class ServingBackend:
             "chunk_tokens": chunk_tokens,
         }
         return rep
+
+
+# --------------------------------------------------------------- registry
+# Mirrors the planner registry (repro.plan.planner): backends resolve by
+# name so configs/CLIs say "simulator" | "serving" | "distributed" and the
+# runtime seam stays string-driven.
+
+_BACKENDS: Dict[str, Callable[..., ExecutionBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Optional[Callable[..., ExecutionBackend]]
+                     = None):
+    """Register a backend factory; usable as a decorator."""
+    def _register(f):
+        _BACKENDS[name] = f
+        return f
+    return _register(factory) if factory is not None else _register
+
+
+def get_backend(name: str, **kwargs) -> ExecutionBackend:
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"available: {available_backends()}")
+    return _BACKENDS[name](**kwargs)
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_BACKENDS))
+
+
+def _distributed_backend(**kwargs) -> ExecutionBackend:
+    # lazy: the process runtime lives in repro.dist; importing it here at
+    # module load would be a needless cost for simulator-only consumers
+    from repro.dist import DistributedBackend
+    return DistributedBackend(**kwargs)
+
+
+register_backend("simulator", SimulatorBackend)
+register_backend("serving", ServingBackend)
+register_backend("distributed", _distributed_backend)

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dispatch.rounds import RoundAccumulator
 from repro.models import Model
 from repro.models.frontends import stub_frontend_embeddings
 from repro.serving.kv_slots import SlotKVCache
@@ -371,18 +372,13 @@ class ServingEngine:
         if round_tokens and self.telemetry is None:
             raise ValueError("round_tokens requires expert telemetry")
         mark = len(self._finished)
-        round_start = (self.telemetry.total_tokens
-                       if self.telemetry is not None else 0)
-        round_steps = 0
-
-        def _close_round():
-            nonlocal round_start, round_steps
-            info = {"steps": round_steps,
-                    "tokens": int(self.telemetry.total_tokens - round_start)}
-            if on_round is not None:
-                on_round(self, info)
-            round_start = self.telemetry.total_tokens
-            round_steps = 0
+        # round segmentation lives in the shared dispatch substrate so
+        # every execution surface splits token streams identically
+        rounds = RoundAccumulator(
+            round_tokens,
+            start_tokens=(self.telemetry.total_tokens
+                          if self.telemetry is not None else 0),
+            on_round=on_round)
 
         queue_arr = sorted(arrivals, key=lambda r: r.arrival_step) \
             if arrivals else []
@@ -417,14 +413,15 @@ class ServingEngine:
                 continue
             steps += 1
             clock += 1
-            round_steps += 1
+            rounds.record_step()
             if on_step is not None:
                 on_step(self, steps)
-            if round_tokens and \
-                    self.telemetry.total_tokens - round_start >= round_tokens:
-                _close_round()
-        if round_tokens and self.telemetry.total_tokens > round_start:
-            _close_round()     # final partial round
+            if rounds.due(self.telemetry.total_tokens
+                          if self.telemetry is not None else 0):
+                rounds.close(self.telemetry.total_tokens, self)
+        if rounds.pending(self.telemetry.total_tokens
+                          if self.telemetry is not None else 0):
+            rounds.close(self.telemetry.total_tokens, self)  # final partial
         # arrivals the budget never reached: queue them (not dropped) so
         # the next run() serves them
         while arr_i < len(queue_arr):

@@ -1,0 +1,222 @@
+"""Unit tests of the transport-agnostic dispatch substrate.
+
+The substrate (``repro.dispatch``) is the single home for chunked
+scatter-gather mechanics: the per-layer :class:`ChunkPlan`, the shared
+fault-policy draws, the serving round segmentation, and the generic
+:class:`ChunkedDispatcher` driving the zero-latency inline transport.
+These tests pin (a) that the substrate's math matches the original
+in-place implementations it was extracted from, and (b) the dispatcher's
+retry/backoff/measurement semantics the process backend builds on.
+"""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile
+from repro.dispatch import (ChunkedDispatcher, ChunkPlan, DispatchPolicy,
+                            InlineTransport, Invocation, RoundAccumulator,
+                            WaveState, chunk_count, chunk_output,
+                            draw_failures, draw_straggler, draw_temperature,
+                            make_payload)
+from repro.distributed.moe_parallel import _chunk_count
+from repro.plan import ODSPlanner
+
+PROF = ModelProfile(num_moe_layers=4, experts_per_layer=8,
+                    expert_param_bytes=28e6, token_in_bytes=3072.0,
+                    token_out_bytes=3072.0, u_ref_s=2e-4,
+                    intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+SPEC = PlatformSpec()
+
+
+def _demand(L=4, E=8, tokens=512, seed=0):
+    rng = np.random.default_rng(seed)
+    d = rng.zipf(1.5, size=(L, E)).astype(float)
+    return d / d.sum(axis=1, keepdims=True) * tokens
+
+
+# ------------------------------------------------------------- ChunkPlan
+
+def test_chunkplan_matches_full_chunk_schedule():
+    plan = ODSPlanner().plan(_demand(), PROF, SPEC)
+    cp = ChunkPlan.from_plan(plan)
+    np.testing.assert_array_equal(cp.schedule, plan.full_chunk_schedule())
+    np.testing.assert_array_equal(cp.method, plan.method)
+    assert cp.round_tokens() == int(plan.full_chunk_schedule().max())
+    for e in range(cp.num_layers):
+        assert cp.beta_for(e) == plan.chunk_for_layer(e)
+
+
+def test_chunkplan_short_schedule_falls_back():
+    plan = ODSPlanner().plan(_demand(), PROF, SPEC)
+    plan.chunk_schedule = plan.chunk_schedule[:2]   # truncated JSON
+    cp = ChunkPlan.from_plan(plan)
+    assert cp.schedule.shape[0] == plan.num_layers
+    np.testing.assert_array_equal(cp.schedule, plan.full_chunk_schedule())
+
+
+def test_chunkplan_minibatch_math():
+    cp = ChunkPlan(schedule=np.array([8, 1, 4]),
+                   method=np.array([1, 2, 1]))
+    r = np.array([17.0, 17.0, 0.0])
+    # method 1: ceil(r / beta); method 2: one shot; r=0: never invoked
+    np.testing.assert_array_equal(cp.minibatches(0, r), [3, 3, 0])
+    np.testing.assert_array_equal(cp.minibatches(1, r), [1, 1, 0])
+    g = np.array([2.0, 1.0, 5.0])
+    assert cp.wave_minibatches(0, r, g) == 3 * 2 + 3 * 1
+    assert cp.round_tokens() == 8
+
+
+def test_chunk_count_alias_is_the_substrate_function():
+    # moe_parallel's beta-chunk loops and the gateway size chunks through
+    # the SAME function — the old private name is a pure alias
+    assert _chunk_count is chunk_count
+    assert chunk_count(64, 16, 8, None, 1, 1) == 8
+    # payload cap forces beta up; result must tile the capacity axis
+    beta = chunk_count(64, 16, 2, 4 * 1024, 1, 4, itemsize=2)
+    assert 64 % beta == 0 and beta >= 2
+
+
+# ---------------------------------------------------------------- policy
+
+def test_fault_profile_is_a_dispatch_policy():
+    assert isinstance(FaultProfile(), DispatchPolicy)
+
+
+def test_backoff_is_exponential():
+    f = FaultProfile(retry_backoff_s=0.05)
+    assert f.backoff_s(1) == 0.05
+    assert f.backoff_s(2) == 0.1
+    assert f.backoff_s(3) == 0.2
+
+
+def test_draws_consume_the_historical_rng_stream():
+    """The extracted draw functions must consume rng.random() calls in
+    the exact order/count of the simulator's historical inline code, so
+    golden-pinned fault streams replay bit-for-bit."""
+    faults = FaultProfile(cold_start_prob=0.5, warm_pool=1,
+                          straggler_prob=0.3, failure_prob=0.4,
+                          max_retries=3)
+    rng_a = np.random.default_rng(7)
+    rng_b = np.random.default_rng(7)
+    state = WaveState.start(faults, None)
+    warm_left = faults.warm_pool
+    for expert in range(6):
+        cold_a, _ = draw_temperature(faults, rng_a, state, expert)
+        strag_a = draw_straggler(faults, rng_a)
+        nf_a = draw_failures(faults, rng_a)
+        # --- historical inline replica -----------------------------
+        cold_b = False
+        if warm_left > 0:
+            warm_left -= 1
+        elif rng_b.random() < faults.cold_start_prob:
+            cold_b = True
+        strag_b = rng_b.random() < faults.straggler_prob
+        nf_b, attempts = 0, 1
+        while attempts <= faults.max_retries \
+                and rng_b.random() < faults.failure_prob:
+            nf_b += 1
+            attempts += 1
+        assert (cold_a, strag_a, nf_a) == (cold_b, strag_b, nf_b)
+    assert rng_a.bit_generator.state == rng_b.bit_generator.state
+
+
+def test_prewarm_hits_mask_cold_draws():
+    faults = FaultProfile(cold_start_prob=1.0)
+    rng = np.random.default_rng(0)
+    state = WaveState.start(faults, np.array([2, 0]))
+    # expert 0: two prewarm hits, then cold; expert 1: cold immediately
+    assert draw_temperature(faults, rng, state, 0) == (False, True)
+    assert draw_temperature(faults, rng, state, 0) == (False, True)
+    assert draw_temperature(faults, rng, state, 0) == (True, False)
+    assert draw_temperature(faults, rng, state, 1) == (True, False)
+
+
+# ---------------------------------------------------------------- rounds
+
+def test_round_accumulator_segments_like_the_engine():
+    closed = []
+    acc = RoundAccumulator(5, start_tokens=10,
+                           on_round=lambda src, info: closed.append(info))
+    total = 10
+    for _ in range(7):           # 2 tokens per step
+        acc.record_step()
+        total += 2
+        if acc.due(total):
+            acc.close(total, None)
+    assert acc.pending(total)
+    acc.close(total, None)       # final partial round
+    assert [c["tokens"] for c in closed] == [6, 6, 2]
+    assert [c["steps"] for c in closed] == [3, 3, 1]
+    assert sum(c["tokens"] for c in closed) == total - 10
+
+
+def test_round_accumulator_disabled():
+    acc = RoundAccumulator(0)
+    acc.record_step()
+    assert not acc.due(100) and not acc.pending(100)
+
+
+# ------------------------------------------------------------ dispatcher
+
+def _inv(inv_id=0, targets=(0.1, 0.2), rows=(4, 4), **kw):
+    return Invocation(inv_id=inv_id, layer=0, expert=inv_id, replica=0,
+                      worker=0, chunk_targets=list(targets),
+                      chunk_rows=list(rows),
+                      scheduled_minibatches=len(targets), **kw)
+
+
+def test_inline_wave_measures_targets_exactly():
+    disp = ChunkedDispatcher(InlineTransport(2), FaultProfile())
+    out = disp.run_wave([_inv(0, (0.1, 0.2, 0.3), (4, 4, 4)),
+                         _inv(1, (0.5,), (2,))])
+    assert out.busy_s[0] == pytest.approx(0.6, abs=1e-12)
+    assert out.busy_s[1] == 0.5
+    assert out.makespan_s == pytest.approx(0.6, abs=1e-12)
+    assert out.chunk_msgs == 4 and out.retries == 0
+    # every gathered chunk is the expert GEMM of its payload
+    for (iid, k), y in out.outputs.items():
+        inv = [_inv(0, (0.1, 0.2, 0.3), (4, 4, 4)),
+               _inv(1, (0.5,), (2,))][iid]
+        x = make_payload(inv.layer, inv.expert, inv.replica, k,
+                         inv.chunk_rows[k], inv.d_pay)
+        np.testing.assert_allclose(y, chunk_output(inv.layer, inv.expert,
+                                                   x), atol=1e-6)
+
+
+def test_inline_wave_retries_with_virtual_backoff():
+    po = FaultProfile(failure_prob=0.5, max_retries=3,
+                      retry_backoff_s=0.05)
+    disp = ChunkedDispatcher(InlineTransport(1), po)
+    inv = _inv(0, (1.0,), (4,), fail_targets=[0.3, 0.3])
+    out = disp.run_wave([inv])
+    assert out.attempts[0] == 3 and out.retries == 2
+    # measured busy: both failing attempts + the success
+    assert out.busy_s[0] == pytest.approx(0.3 + 0.3 + 1.0, abs=1e-12)
+    # virtual makespan includes the exponential backoffs (no real sleep)
+    assert out.makespan_s == pytest.approx(1.6 + 0.05 + 0.1, abs=1e-9)
+
+
+def test_inline_die_degrades_to_transient_failure():
+    po = FaultProfile(max_retries=1)
+    disp = ChunkedDispatcher(InlineTransport(1), po)
+    out = disp.run_wave([_inv(0, (1.0,), (4,), fail_targets=[0.25],
+                              die_attempt=1)])
+    assert out.attempts[0] == 2 and out.retries == 1
+    assert out.busy_s[0] == pytest.approx(1.25, abs=1e-12)
+
+
+def test_retries_exhausted_raises():
+    po = FaultProfile(failure_prob=0.5, max_retries=1,
+                      retry_backoff_s=0.0)
+    disp = ChunkedDispatcher(InlineTransport(1), po)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        disp.run_wave([_inv(0, (1.0,), (4,),
+                            fail_targets=[0.1, 0.1, 0.1])])
+
+
+def test_concurrency_limit_still_completes():
+    po = FaultProfile(concurrency_limit=2)
+    disp = ChunkedDispatcher(InlineTransport(1), po)
+    invs = [_inv(i, (0.1,), (2,)) for i in range(7)]
+    out = disp.run_wave(invs)
+    assert all(out.busy_s[i] == pytest.approx(0.1) for i in range(7))
