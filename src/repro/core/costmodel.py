@@ -42,6 +42,21 @@ class PlatformSpec:
     # MISpredicted prewarm bills these GB-seconds for nothing (provisioned
     # concurrency pricing model). Only consulted when a prewarmer runs.
     t_prewarm_keepalive_s: float = 1.0
+    # --- expert-weight cache (repro.expcache, Remoe/MoEless model) ----
+    # an intra-container expert SWAP: fixed runtime overhead plus the
+    # weight transfer at the swap bandwidth (container-local NVMe /
+    # same-zone object store — orders of magnitude above bw_storage).
+    # Swap seconds are billed like any other busy time; the point of the
+    # cache is that t_swap_s(weights) << t_cold_start_s.
+    t_swap_fixed_s: float = 0.08
+    bw_swap_mb_s: float = 1500.0
+    # a cache-RESIDENT container that goes a whole window unused bills
+    # this much idle keep-alive per window before retiring. Deliberately
+    # a separate knob from t_prewarm_keepalive_s: prewarm keep-alive
+    # prices a one-shot speculative warm-up, cache keep-alive prices
+    # holding weights resident between windows. Only consulted when a
+    # cache model is attached to a run.
+    t_cache_keepalive_s: float = 0.5
 
     def cpu_slowdown(self, mem_mb: float) -> float:
         """Per-token compute-time multiplier at a given memory size."""
@@ -52,6 +67,12 @@ class PlatformSpec:
     def billed_cost(self, mem_mb: float, seconds: float) -> float:
         """GB-seconds * price."""
         return (mem_mb / 1024.0) * max(seconds, 0.0) * self.price_per_gb_s
+
+    def t_swap_s(self, nbytes: float) -> float:
+        """Wall-clock to swap ``nbytes`` of expert weights into an
+        already-warm container (fixed overhead + transfer)."""
+        return self.t_swap_fixed_s + max(float(nbytes), 0.0) \
+            / (self.bw_swap_mb_s * MB)
 
     @property
     def payload_bytes(self) -> float:

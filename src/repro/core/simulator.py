@@ -64,6 +64,21 @@ size) as ``wasted_prewarm_gb_s``. Two determinism contracts:
   only in their hint matrices see IDENTICAL cold draws — a hint can only
   mask a cold start, never create one (prewarm-on cold counts are
   provably <= prewarm-off-with-zero-matrix counts at the same seed).
+
+**Expert-weight caching** (``run(..., cache=...)``): a
+:class:`repro.expcache.ContainerCacheModel` replaces the binary
+warm/cold container picture with a two-level weight hierarchy — an
+invocation whose cold draw says "cold" but that finds an idle warm
+container performs a cheap intra-container SWAP of its expert weights
+(billed busy seconds, ``SwapCostModel``) instead of the cold boot;
+containers already holding the weights are residency hits; idle
+resident containers bill ``t_cache_keepalive_s`` GB-s per window and
+retire after their idle budget; deploy-time packed containers (several
+long-tail experts per container) bill one amortized boot when first
+taken. The same two determinism contracts hold: ``cache=None`` is the
+exact historical path (golden-pinned), and with a cache attached the
+cold stream draws once per invocation unconditionally, so the cache can
+only MASK cold starts, never create them.
 """
 from __future__ import annotations
 
@@ -141,6 +156,7 @@ class InvocationEvent:
     extra_billed_s: float   # billed time beyond the fault-free duration
     end_s: float            # completion time within the wave
     prewarmed: bool = False  # served by a speculatively warmed container
+    swapped: bool = False    # cold draw masked by an expert-weight swap
 
 
 @dataclass
@@ -157,6 +173,9 @@ class _WaveResult:
     stragglers: int = 0
     prewarm_hits: int = 0
     prewarm_leftover: Optional[np.ndarray] = None   # (E,) unconsumed hints
+    cache_hits: int = 0
+    cache_swaps: int = 0
+    swap_s_by_expert: Optional[np.ndarray] = None   # (E,) billed swap s
     events: List[InvocationEvent] = field(default_factory=list)
 
 
@@ -164,7 +183,8 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
                     head_s: float, cold_extra_s: float,
                     faults: FaultProfile,
                     rng: np.random.Generator,
-                    prewarmed: Optional[np.ndarray] = None) -> _WaveResult:
+                    prewarmed: Optional[np.ndarray] = None,
+                    cache_wave=None) -> _WaveResult:
     """Discrete-event simulation of one layer's invocation wave.
 
     Invocations dispatch in deterministic (expert, replica) order; a
@@ -180,9 +200,17 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
     unconditionally, so runs differing only in hints share the same
     draws; with ``prewarmed=None`` the historical draw-after-pool
     discipline is preserved bit-for-bit.
+
+    ``cache_wave`` (:class:`repro.expcache.model.CacheWave`) replaces
+    the temperature draw with the cache's access discipline: residency
+    hits and weight swaps mask cold draws (same unconditional-draw
+    contract); swap seconds bill like cold init — on the first attempt,
+    exactly once.
     """
     E = t_rep.shape[0]
     res = _WaveResult(extra_billed=np.zeros(E), extra_latency=0.0)
+    if cache_wave is not None:
+        res.swap_s_by_expert = np.zeros(E)
     busy: List[float] = []       # end times of running invocations
     # fault DECISIONS come from the shared dispatch-policy draws (one
     # definition across this simulator and the repro.dist gateway); the
@@ -202,15 +230,30 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
             start = 0.0
             if limit and len(busy) >= limit:
                 start = heapq.heappop(busy)
-            cold, pre_hit = draw_temperature(faults, rng, state, expert)
+            swap_billed = 0.0
+            swapped = False
+            if cache_wave is not None:
+                acc = cache_wave.access(expert, rng, state)
+                cold, pre_hit = acc.cold, acc.pre_hit
+                if acc.kind == "hit":
+                    res.cache_hits += 1
+                elif acc.kind == "swap":
+                    swapped = True
+                    swap_billed = acc.swap_s
+                    res.cache_swaps += 1
+                    res.swap_s_by_expert[expert] += acc.swap_s
+            else:
+                cold, pre_hit = draw_temperature(faults, rng, state,
+                                                 expert)
             if pre_hit:
                 res.prewarm_hits += 1
             straggled = draw_straggler(faults, rng)
             # cold init is paid exactly once, on the very first attempt
             # (failed or not), and attributed to cold_start_s only —
             # retry_s carries just the head-phase re-runs, so the
-            # breakdown sums reconcile with the extra billed seconds
-            cold_billed = cold_extra_s if cold else 0.0
+            # breakdown sums reconcile with the extra billed seconds.
+            # A weight swap bills the same way: once, on first attempt.
+            cold_billed = (cold_extra_s if cold else 0.0) + swap_billed
             t = start
             extra_billed = 0.0
             n_fail = draw_failures(faults, rng)
@@ -247,7 +290,7 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
                 layer=layer, expert=expert, replica=replica, start_s=start,
                 attempts=attempts, cold=cold, straggled=straggled,
                 extra_billed_s=extra_billed, end_s=end,
-                prewarmed=pre_hit))
+                prewarmed=pre_hit, swapped=swapped))
     res.extra_latency = makespan - base_makespan
     res.prewarm_leftover = state.pre_left
     return res
@@ -284,7 +327,15 @@ class ServerlessSimulator:
         return out
 
     def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
-            num_tokens: int, *, prewarm=None) -> ExecutionReport:
+            num_tokens: int, *, prewarm=None,
+            cache=None) -> ExecutionReport:
+        """Execute ``plan`` against the observed routing counts.
+
+        ``prewarm``: speculative container hints (see module docstring).
+        ``cache``: a :class:`repro.expcache.ContainerCacheModel` whose
+        resident-weight state PERSISTS across calls — pass the same
+        object window after window to model a long-lived warm fleet.
+        """
         prof, spec, faults = self.prof, self.spec, self.faults
         real_demand = np.asarray(real_demand, float)
         L, E = real_demand.shape
@@ -305,7 +356,9 @@ class ServerlessSimulator:
         breakdown = dict(cold_starts=0, cold_start_s=0.0, retries=0,
                          retry_s=0.0, queue_delay_s=0.0, stragglers=0,
                          prewarm_hits=0, prewarm_misses=0,
-                         wasted_prewarm_gb_s=0.0)
+                         wasted_prewarm_gb_s=0.0, cache_hits=0,
+                         cache_swaps=0, swap_gb_s=0.0,
+                         cache_keepalive_gb_s=0.0)
 
         for e in range(L):
             a = int(plan.method[e])
@@ -328,7 +381,16 @@ class ServerlessSimulator:
             t_total = times.t_total.copy()
             t_lat = times.t_latency
             wasted_gb_s = 0.0
-            if faults.enabled or pw is not None:
+            cache_gb_s = 0.0
+            if cache is not None:
+                # deploy-time packed containers boot once, off the
+                # critical path: one amortized cold boot per container,
+                # billed at the container's memory, no latency impact
+                for boot_mem in cache.take_pending_boots(e):
+                    breakdown["cold_starts"] += 1
+                    breakdown["cold_start_s"] += cold_extra_s
+                    cache_gb_s += boot_mem / 1024.0 * cold_extra_s
+            if faults.enabled or pw is not None or cache is not None:
                 # --- discrete-event invocation wave: faults ride as
                 # extras on top of the closed form. With every knob at
                 # zero the wave would contribute exact float zeros (the
@@ -336,12 +398,17 @@ class ServerlessSimulator:
                 # profile), so the ideal-platform hot path — every BO
                 # trial — skips the per-invocation loop entirely. A
                 # prewarm order forces the wave so hints are consumed
-                # and scored even on an otherwise ideal platform.
+                # and scored even on an otherwise ideal platform. A
+                # cache model forces it too: residency must be tracked
+                # (and keep-alive billed) even with no fault knobs on.
                 wave = _run_layer_wave(e, times.t_rep, g, head_s,
                                        cold_extra_s, faults,
                                        self._fault_rng,
                                        prewarmed=(pw[e] if pw is not None
-                                                  else None))
+                                                  else None),
+                                       cache_wave=(cache.wave(e, faults)
+                                                   if cache is not None
+                                                   else None))
                 t_total = t_total + wave.extra_billed
                 t_lat += wave.extra_latency
                 self.last_events.extend(wave.events)
@@ -360,6 +427,22 @@ class ServerlessSimulator:
                     wasted_gb_s = float((leftover * mem).sum()) / 1024.0 \
                         * spec.t_prewarm_keepalive_s
                     breakdown["wasted_prewarm_gb_s"] += wasted_gb_s
+                if cache is not None:
+                    breakdown["cache_hits"] += wave.cache_hits
+                    breakdown["cache_swaps"] += wave.cache_swaps
+                    # swap busy seconds already ride in t_total (billed
+                    # below at the expert's memory); this mirrors them
+                    # into the report breakdown
+                    breakdown["swap_gb_s"] += float(
+                        (wave.swap_s_by_expert * mem).sum()) / 1024.0
+            if cache is not None:
+                # resident containers that went the whole window unused
+                # bill idle keep-alive at their memory size; long-idle
+                # ones retire inside end_layer_window
+                ka_gb_s = sum(cache.end_layer_window(e)) / 1024.0 \
+                    * spec.t_cache_keepalive_s
+                breakdown["cache_keepalive_gb_s"] += ka_gb_s
+                cache_gb_s += ka_gb_s
             if overrun[e].any():
                 # overrun functions crash + retry with spilled buffers:
                 # extra head time and 2x storage traffic on retried experts
@@ -379,7 +462,8 @@ class ServerlessSimulator:
                 t_total = np.maximum(t_total, 0.0)
             layer_cost[e] = comm.layer_billed_cost(
                 comm.LayerTimes(times.t_rep, t_total, t_lat, times.feasible),
-                mem, spec) + wasted_gb_s * spec.price_per_gb_s
+                mem, spec) + wasted_gb_s * spec.price_per_gb_s \
+                + cache_gb_s * spec.price_per_gb_s
             layer_lat[e] = t_lat
 
         total_lat = (prof.t_head_s + prof.t_tail_s
@@ -405,6 +489,12 @@ class ServerlessSimulator:
             prewarm_hits=int(breakdown["prewarm_hits"]),
             prewarm_misses=int(breakdown["prewarm_misses"]),
             wasted_prewarm_gb_s=float(breakdown["wasted_prewarm_gb_s"]),
+            cache_hits=int(breakdown["cache_hits"]),
+            cache_swaps=int(breakdown["cache_swaps"]),
+            swap_gb_s=float(breakdown["swap_gb_s"]),
+            packed_experts=(int(cache.packed_expert_count())
+                            if cache is not None else 0),
+            cache_keepalive_gb_s=float(breakdown["cache_keepalive_gb_s"]),
         )
 
 

@@ -128,7 +128,8 @@ class DistributedBackend:
                            r_real: np.ndarray, mem: np.ndarray,
                            head_s: float, cold_extra_s: float,
                            state: WaveState, chunks: ChunkPlan,
-                           kill: set, inv_id0: int, scale: float
+                           kill: set, inv_id0: int, scale: float,
+                           cache_wave=None
                            ) -> Tuple[List[Invocation], List[dict]]:
         """Draw this wave's faults and decompose each invocation's
         ``t_rep`` into chunk targets summing (to the ulp) to the closed
@@ -159,10 +160,22 @@ class DistributedBackend:
             else:
                 n_mb, t_blk, t_tail = 1, 0.0, 0.0
             for replica in range(int(g[expert])):
-                cold, pre_hit = draw_temperature(faults, rng, state, expert)
+                swap_s, kind = 0.0, ""
+                if cache_wave is not None:
+                    # the cache's access discipline replaces the bare
+                    # temperature draw (same unconditional-draw contract
+                    # as the simulator): residency hits and weight swaps
+                    # mask cold draws; a swap's seconds ride in the
+                    # success attempt's first chunk target below
+                    acc = cache_wave.access(expert, rng, state)
+                    cold, pre_hit = acc.cold, acc.pre_hit
+                    swap_s, kind = acc.swap_s, acc.kind
+                else:
+                    cold, pre_hit = draw_temperature(faults, rng, state,
+                                                     expert)
                 straggled = draw_straggler(faults, rng)
                 n_fail = draw_failures(faults, rng)
-                cold_billed = cold_extra_s if cold else 0.0
+                cold_billed = (cold_extra_s if cold else 0.0) + swap_s
                 # --- success-attempt chunk targets ---------------------
                 if eff_a == 1:
                     n_msgs = min(n_mb, self.max_msgs_per_inv)
@@ -211,17 +224,21 @@ class DistributedBackend:
                     inv_id=inv_id, expert=expert, replica=replica,
                     dur=dur, cold=cold, pre_hit=pre_hit,
                     straggled=straggled, cold_billed=cold_billed,
-                    die=die_attempt > 0))
+                    die=die_attempt > 0, hit=(kind == "hit"),
+                    swap=(kind == "swap"), swap_s=swap_s))
                 inv_id += 1
         return invs, metas
 
     # --------------------------------------------------------------- run
     def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
-            num_tokens: int, *, prewarm=None,
+            num_tokens: int, *, prewarm=None, cache=None,
             kill_plan: Optional[Sequence[Tuple[int, int, int]]] = None
             ) -> ExecutionReport:
         """Execute the plan's chunked scatter-gather for real; same
-        signature and accounting surface as ``ServerlessSimulator.run``."""
+        signature and accounting surface as ``ServerlessSimulator.run``
+        (``cache``: a :class:`repro.expcache.ContainerCacheModel` —
+        workers' containers hold resident expert sets; swap counts and
+        GB-seconds land in the report's conditional cache block)."""
         from repro.core.simulator import ServerlessSimulator
         prof, spec, faults = self.profile, self.platform, self.faults
         tr = self._ensure_transport()
@@ -243,7 +260,9 @@ class DistributedBackend:
         breakdown = dict(cold_starts=0, cold_start_s=0.0, retries=0,
                          retry_s=0.0, queue_delay_s=0.0, stragglers=0,
                          prewarm_hits=0, prewarm_misses=0,
-                         wasted_prewarm_gb_s=0.0)
+                         wasted_prewarm_gb_s=0.0, cache_hits=0,
+                         cache_swaps=0, swap_gb_s=0.0,
+                         cache_keepalive_gb_s=0.0)
         layers_info: List[dict] = []
         mismatches = 0
         verified = 0
@@ -272,9 +291,19 @@ class DistributedBackend:
             # ---- the real wave: draw faults, dispatch, measure --------
             state = WaveState.start(faults, pw[e] if pw is not None
                                     else None)
+            cache_gb_s = 0.0
+            if cache is not None:
+                # deploy-time packed containers: one amortized boot per
+                # container, off the critical path (same as simulator)
+                for boot_mem in cache.take_pending_boots(e):
+                    breakdown["cold_starts"] += 1
+                    breakdown["cold_start_s"] += cold_extra_s
+                    cache_gb_s += boot_mem / 1024.0 * cold_extra_s
             invs, metas = self._build_invocations(
                 e, eff_a, beta, times.t_rep, g, r_real, mem, head_s,
-                cold_extra_s, state, chunks, kill, inv_id0, scale)
+                cold_extra_s, state, chunks, kill, inv_id0, scale,
+                cache_wave=(cache.wave(e, faults) if cache is not None
+                            else None))
             inv_id0 += len(invs)
             wasted_gb_s = 0.0
             if invs:
@@ -299,6 +328,12 @@ class DistributedBackend:
                         breakdown["stragglers"] += 1
                     if m["pre_hit"]:
                         breakdown["prewarm_hits"] += 1
+                    if m["hit"]:
+                        breakdown["cache_hits"] += 1
+                    if m["swap"]:
+                        breakdown["cache_swaps"] += 1
+                        breakdown["swap_gb_s"] += m["swap_s"] \
+                            * float(mem[m["expert"]]) / 1024.0
                 makespan = out.makespan_s / scale
                 t_lat += max(makespan - base_makespan, 0.0)
                 breakdown["queue_delay_s"] += out.queue_delay_s / scale
@@ -330,6 +365,11 @@ class DistributedBackend:
                 wasted_gb_s = float((leftover * mem).sum()) / 1024.0 \
                     * spec.t_prewarm_keepalive_s
                 breakdown["wasted_prewarm_gb_s"] += wasted_gb_s
+            if cache is not None:
+                ka_gb_s = sum(cache.end_layer_window(e)) / 1024.0 \
+                    * spec.t_cache_keepalive_s
+                breakdown["cache_keepalive_gb_s"] += ka_gb_s
+                cache_gb_s += ka_gb_s
 
             # ---- analytic penalties, identical to the simulator -------
             if overrun[e].any():
@@ -346,7 +386,8 @@ class DistributedBackend:
             layer_cost[e] = comm.layer_billed_cost(
                 comm.LayerTimes(times.t_rep, t_total, t_lat,
                                 times.feasible),
-                mem, spec) + wasted_gb_s * spec.price_per_gb_s
+                mem, spec) + wasted_gb_s * spec.price_per_gb_s \
+                + cache_gb_s * spec.price_per_gb_s
             layer_lat[e] = t_lat
 
         total_lat = (prof.t_head_s + prof.t_tail_s
@@ -372,6 +413,12 @@ class DistributedBackend:
             prewarm_hits=int(breakdown["prewarm_hits"]),
             prewarm_misses=int(breakdown["prewarm_misses"]),
             wasted_prewarm_gb_s=float(breakdown["wasted_prewarm_gb_s"]),
+            cache_hits=int(breakdown["cache_hits"]),
+            cache_swaps=int(breakdown["cache_swaps"]),
+            swap_gb_s=float(breakdown["swap_gb_s"]),
+            packed_experts=(int(cache.packed_expert_count())
+                            if cache is not None else 0),
+            cache_keepalive_gb_s=float(breakdown["cache_keepalive_gb_s"]),
         )
         rep.extras = {
             "transport": type(tr).__name__,
@@ -440,8 +487,8 @@ class DistributedBackend:
 
     def execute_trace(self, plan: DeploymentPlan, trace, *,
                       predictor=None,
-                      prewarm: Optional[str] = None
-                      ) -> List[ExecutionReport]:
+                      prewarm: Optional[str] = None,
+                      cache=None) -> List[ExecutionReport]:
         """Window-by-window over a :class:`repro.traces.Trace`: the
         backend itself is the ``sim`` (same ``run`` signature), so the
         shared trace-feedback loop drives real processes unmodified."""
@@ -449,4 +496,5 @@ class DistributedBackend:
         return run_plan_over_trace(plan, trace, self,
                                    self.profile, self.platform,
                                    predictor=predictor,
-                                   prewarm=prewarm)["reports"]
+                                   prewarm=prewarm,
+                                   cache=cache)["reports"]

@@ -1,0 +1,33 @@
+"""Container-resident expert-weight caching, swaps, and packing.
+
+The two-level weight hierarchy inside warm containers (Remoe,
+arXiv:2512.18674; MoEless, arXiv:2603.06350): containers HOLD expert
+weights between invocations, a non-resident expert swaps in cheaply
+instead of cold-booting, low-traffic experts pack several-per-container,
+and the :class:`~repro.predict.online.OnlinePredictor`'s forecasts
+drive eviction and packing. Wired through the event simulator
+(``run(..., cache=...)``), the distributed backend, the planner
+registry (``"ods-cached"``) and the serving engine's speculative
+dispatch stage — with ``cache=None`` everywhere bit-identical to the
+cache-less code paths.
+"""
+from .config import CacheConfig
+from .model import CacheAccess, CacheWave, Container, ContainerCacheModel
+from .packing import PackedContainer, PackingPlan
+from .policy import EvictionPolicy, LRUPolicy, PredictorPolicy, make_policy
+from .swap import SwapCostModel
+
+__all__ = [
+    "CacheAccess",
+    "CacheConfig",
+    "CacheWave",
+    "Container",
+    "ContainerCacheModel",
+    "EvictionPolicy",
+    "LRUPolicy",
+    "PackedContainer",
+    "PackingPlan",
+    "PredictorPolicy",
+    "SwapCostModel",
+    "make_policy",
+]

@@ -1,0 +1,73 @@
+"""Cache configuration: the knobs the planner searches over.
+
+``CacheConfig`` is a plain, JSON-roundtrippable value object so the
+chosen configuration can ride in ``DeploymentPlan.metadata["cache"]``
+(the plan schema's free-form metadata dict) and be rebuilt on the
+execution side with :meth:`from_dict`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+from repro.core.costmodel import MB
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Knobs of the container-resident expert-weight cache.
+
+    ``weight_frac``
+        Fraction of a container's memory size usable for resident expert
+        weights (the rest is activations / runtime / KV scratch). A
+        container's byte capacity is ``mem_mb * MB * weight_frac``.
+    ``packing_degree``
+        Maximum co-resident experts per container (MoEless-style
+        packing). ``1`` disables packing: a swap then REPLACES the
+        resident expert instead of adding one.
+    ``pack_threshold_frac``
+        Experts whose share of a layer's demand is below this fraction
+        count as long-tail and are eligible for deploy-time packing.
+    ``seed_packing``
+        Boot the packed long-tail containers once at deploy time (one
+        cold boot amortized over all co-residents) instead of letting
+        them fault in lazily.
+    ``max_idle_windows``
+        A resident container that goes this many consecutive windows
+        unused is retired (stops billing keep-alive).
+    ``policy``
+        Eviction/admission policy name: ``"lru"`` or ``"predictor"``.
+    """
+
+    policy: str = "predictor"
+    weight_frac: float = 0.7
+    packing_degree: int = 1
+    pack_threshold_frac: float = 0.08
+    seed_packing: bool = True
+    max_idle_windows: int = 2
+
+    def __post_init__(self):
+        assert 0.0 < self.weight_frac <= 1.0, self.weight_frac
+        assert self.packing_degree >= 1, self.packing_degree
+        assert 0.0 <= self.pack_threshold_frac <= 1.0
+        assert self.max_idle_windows >= 0
+        assert self.policy in ("lru", "predictor"), self.policy
+
+    def capacity_bytes(self, mem_mb: float) -> float:
+        """Weight-resident byte capacity of a container of ``mem_mb``."""
+        return max(float(mem_mb), 0.0) * MB * self.weight_frac
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(policy=self.policy, weight_frac=self.weight_frac,
+                    packing_degree=self.packing_degree,
+                    pack_threshold_frac=self.pack_threshold_frac,
+                    seed_packing=self.seed_packing,
+                    max_idle_windows=self.max_idle_windows)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CacheConfig":
+        known = {k: d[k] for k in (
+            "policy", "weight_frac", "packing_degree",
+            "pack_threshold_frac", "seed_packing", "max_idle_windows")
+            if k in d}
+        return cls(**known)

@@ -1,0 +1,434 @@
+"""The two-level weight hierarchy inside warm containers.
+
+:class:`ContainerCacheModel` tracks, per MoE layer, a fleet of warm
+containers and WHICH expert weights each holds resident. It replaces
+the binary warm-for-one-expert/cold picture of the base cost model with
+the Remoe/MoEless one:
+
+* an invocation landing on a container already holding its expert's
+  weights is a **residency hit** (plain warm start, nothing extra);
+* an invocation that would have gone COLD but finds any idle warm
+  container instead performs a cheap **swap** (``SwapCostModel``):
+  billed busy seconds ``t_swap_fixed_s + bytes/bw_swap``, never the
+  4.9-second cold boot;
+* containers that sit a whole window unused bill **idle keep-alive**
+  (``t_cache_keepalive_s`` GB-s) and retire after
+  ``max_idle_windows`` consecutive idle windows;
+* deploy-time **packing** seeds containers co-hosting several long-tail
+  experts (one amortized boot, one keep-alive — see ``packing.py``).
+
+Determinism contract (mirrors the simulator's prewarm mode): with a
+cache attached, the cold-start stream draws ONCE per invocation
+unconditionally, so two runs differing only in cache configuration see
+identical cold draws — residency/swaps can only MASK a cold start,
+never create one. ``cache=None`` everywhere takes the exact historical
+code path (golden-pinned bit-identity).
+
+The same model serves the serving engine's speculative dispatch stage
+(residency hints instead of wave draws) through :meth:`prefetch`,
+:meth:`serve_demand` and :meth:`residency_stats`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import MB, ModelProfile, PlatformSpec
+
+from .config import CacheConfig
+from .packing import PackingPlan
+from .policy import EvictionPolicy, make_policy
+from .swap import SwapCostModel
+
+
+@dataclass
+class Container:
+    """One warm container: which experts it holds, and when."""
+
+    cid: int
+    mem_mb: float
+    residents: Dict[int, int] = field(default_factory=dict)  # expert->tick
+    packed: bool = False          # created by the deploy-time PackingPlan
+    pending_boot: bool = False    # seeded but not yet booted (billed once)
+    used: bool = False            # claimed/touched this window
+    idle_windows: int = 0
+
+
+@dataclass(frozen=True)
+class CacheAccess:
+    """Outcome of one invocation's container-temperature decision when a
+    cache model is attached."""
+
+    kind: str          # "prewarm" | "hit" | "warm_pool" | "swap" |
+    #                    "cold" | "warm"
+    cold: bool         # pays the cold-boot delta
+    pre_hit: bool      # consumed a speculative prewarm hint
+    swap_s: float      # billed swap seconds (kind == "swap" only)
+
+
+class CacheWave:
+    """Per-(layer, wave) view: hands out containers to invocations.
+
+    A container serves at most one invocation per wave (claims), so
+    concurrent replicas of a wave cannot share one container. Claims
+    reset when the wave ends (a new ``CacheWave`` is taken per layer
+    window).
+    """
+
+    def __init__(self, model: "ContainerCacheModel", layer: int,
+                 faults=None):
+        self.model = model
+        self.layer = layer
+        self.faults = faults
+        self._claimed: set = set()
+
+    def _claim(self, c: Optional[Container]) -> None:
+        if c is not None:
+            c.used = True
+            self._claimed.add(c.cid)
+
+    def _find_resident(self, expert: int) -> Optional[Container]:
+        best = None
+        for c in self.model.layers[self.layer]:
+            if c.cid in self._claimed or expert not in c.residents:
+                continue
+            if best is None or c.residents[expert] > best.residents[expert]:
+                best = c
+        return best
+
+    def _swap_target(self, expert: int) -> Optional[Container]:
+        """An unclaimed warm container the expert could swap into:
+        enough container memory to run it, and enough weight capacity
+        once the policy evicts. Lowest policy rank = disturbed first."""
+        m = self.model
+        need_mem = float(m.mem_mb[self.layer, expert])
+        need_bytes = m.expert_nbytes(expert)
+        cands = [c for c in m.layers[self.layer]
+                 if c.cid not in self._claimed
+                 and not c.pending_boot
+                 and c.mem_mb + 1e-9 >= need_mem
+                 and need_bytes <= m.config.capacity_bytes(c.mem_mb)]
+        if not cands:
+            return None
+        return min(cands, key=lambda c: (
+            m.policy.rank_container(self.layer, c), c.cid))
+
+    def access(self, expert: int, rng: np.random.Generator,
+               state) -> CacheAccess:
+        """One invocation's temperature decision under the cache.
+
+        Mirrors :func:`repro.dispatch.policy.draw_temperature` with a
+        prewarm state present: the cold stream draws FIRST and
+        unconditionally (when ``cold_start_prob > 0``), then prewarm
+        hints, residency, the reactive warm pool, and only a draw that
+        actually says "cold" reaches the swap-vs-boot decision — so the
+        cache can only mask cold starts, never add them, and runs
+        differing only in cache config share one draw stream.
+        """
+        m = self.model
+        faults = self.faults
+        draw = rng.random() if faults.cold_start_prob > 0.0 else 1.0
+        if state.pre_left is not None and state.pre_left[expert] > 0:
+            # a speculatively prewarmed container: fresh, holds the
+            # expert — admit it into the resident fleet
+            state.pre_left[expert] -= 1
+            self._claim(m._admit(self.layer, expert))
+            return CacheAccess("prewarm", False, True, 0.0)
+        c = self._find_resident(expert)
+        if c is not None:
+            m._touch(c, expert)
+            self._claim(c)
+            return CacheAccess("hit", False, False, 0.0)
+        if state.warm_left > 0:
+            state.warm_left -= 1
+            self._claim(m._admit(self.layer, expert))
+            return CacheAccess("warm_pool", False, False, 0.0)
+        if draw < faults.cold_start_prob:
+            c = self._swap_target(expert)
+            if c is not None:
+                m._swap_in(c, self.layer, expert)
+                self._claim(c)
+                return CacheAccess(
+                    "swap", False, False,
+                    m.swap.swap_s(m.expert_nbytes(expert)))
+            self._claim(m._admit(self.layer, expert))
+            return CacheAccess("cold", True, False, 0.0)
+        # platform-warm start: the container it lands on joins the fleet
+        self._claim(m._admit(self.layer, expert))
+        return CacheAccess("warm", False, False, 0.0)
+
+
+class ContainerCacheModel:
+    """Per-layer fleets of warm containers with resident expert weights.
+
+    Construction: :meth:`from_plan` (fleet sized by the plan's replica
+    counts, per-expert memory from the plan, optional deploy-time
+    packing seeds) or :meth:`uniform` (serving-side / tests: one memory
+    size everywhere).
+    """
+
+    def __init__(self, num_layers: int, num_experts: int, *,
+                 mem_mb, expert_bytes, platform: PlatformSpec,
+                 config: Optional[CacheConfig] = None,
+                 max_containers=None,
+                 packing: Optional[PackingPlan] = None):
+        self.L = int(num_layers)
+        self.E = int(num_experts)
+        self.mem_mb = np.broadcast_to(
+            np.asarray(mem_mb, float), (self.L, self.E)).copy()
+        self._expert_bytes = np.broadcast_to(
+            np.asarray(expert_bytes, float), (self.E,)).copy()
+        self.spec = platform
+        self.config = config if config is not None else CacheConfig()
+        self.swap = SwapCostModel(platform)
+        self.policy: EvictionPolicy = make_policy(self.config.policy)
+        if max_containers is None:
+            max_containers = np.full(self.L, self.E, np.int64)
+        self.max_containers = np.broadcast_to(
+            np.asarray(max_containers, np.int64), (self.L,)).copy()
+        self.layers: List[List[Container]] = [[] for _ in range(self.L)]
+        self.packing = packing
+        self._tick = 0
+        self._next_cid = 0
+        # lifetime counters (the serving engine's residency_stats and
+        # the report breakdown read these)
+        self.stats = dict(hits=0, swaps=0, evictions=0, admissions=0,
+                          retired=0, seeded_boots=0, prefetch_swaps=0)
+        if packing is not None:
+            self._seed_packing(packing)
+
+    # --- construction -------------------------------------------------
+
+    @classmethod
+    def from_plan(cls, plan, prof: ModelProfile, platform: PlatformSpec,
+                  *, config: Optional[CacheConfig] = None,
+                  demand: Optional[np.ndarray] = None
+                  ) -> "ContainerCacheModel":
+        """Build the fleet for a deployment plan.
+
+        Per-layer container bound = the plan's total replicas (each
+        replica is a container) plus any packed seeds; packing uses the
+        plan's own predicted demand unless ``demand`` overrides it. If
+        the plan's metadata carries a ``"cache"`` block (stamped by the
+        cache-aware planner) and no explicit ``config`` is given, that
+        configuration is used.
+        """
+        if config is None:
+            meta = getattr(plan, "metadata", None) or {}
+            if "cache" in meta:
+                config = CacheConfig.from_dict(meta["cache"])
+            else:
+                config = CacheConfig()
+        mem = np.asarray(plan.mem_mb, float)
+        L, E = mem.shape
+        if demand is None:
+            demand = np.asarray(plan.demand, float)
+        packing = None
+        if config.packing_degree >= 2:
+            packing = PackingPlan.build(demand, mem,
+                                        prof.expert_param_bytes, config)
+        bound = np.asarray(plan.replicas, np.int64).sum(axis=1)
+        if packing is not None:
+            for c in packing.containers:
+                bound[c.layer] += 1
+        return cls(L, E, mem_mb=mem,
+                   expert_bytes=prof.expert_param_bytes,
+                   platform=platform, config=config,
+                   max_containers=np.maximum(bound, 1), packing=packing)
+
+    @classmethod
+    def uniform(cls, num_layers: int, num_experts: int, *,
+                mem_mb: float, expert_bytes: float,
+                platform: PlatformSpec,
+                config: Optional[CacheConfig] = None
+                ) -> "ContainerCacheModel":
+        return cls(num_layers, num_experts, mem_mb=mem_mb,
+                   expert_bytes=expert_bytes, platform=platform,
+                   config=config)
+
+    # --- internals ----------------------------------------------------
+
+    def expert_nbytes(self, expert: int) -> float:
+        return float(self._expert_bytes[expert])
+
+    def _next_tick(self) -> int:
+        self._tick += 1
+        return self._tick
+
+    def _new_container(self, layer: int, mem_mb: float, *,
+                       packed: bool = False,
+                       pending_boot: bool = False) -> Container:
+        c = Container(cid=self._next_cid, mem_mb=float(mem_mb),
+                      packed=packed, pending_boot=pending_boot)
+        self._next_cid += 1
+        self.layers[layer].append(c)
+        return c
+
+    def _seed_packing(self, packing: PackingPlan) -> None:
+        for pc in packing.containers:
+            boot = self.config.seed_packing
+            c = self._new_container(pc.layer, pc.mem_mb, packed=True,
+                                    pending_boot=boot)
+            for e in pc.experts:
+                c.residents[e] = self._next_tick()
+
+    def _touch(self, c: Container, expert: int) -> None:
+        c.residents[expert] = self._next_tick()
+        self.stats["hits"] += 1
+
+    def _swap_in(self, c: Container, layer: int, expert: int) -> None:
+        """Evict per policy until the expert fits capacity AND degree,
+        then make it resident."""
+        need = self.expert_nbytes(expert)
+        cap = self.config.capacity_bytes(c.mem_mb)
+        order = self.policy.eviction_order(layer, c)
+        bytes_used = sum(self.expert_nbytes(e) for e in c.residents)
+        while c.residents and (
+                bytes_used + need > cap
+                or len(c.residents) + 1 > self.config.packing_degree):
+            victim = order.pop(0)
+            bytes_used -= self.expert_nbytes(victim)
+            del c.residents[victim]
+            self.stats["evictions"] += 1
+        c.residents[expert] = self._next_tick()
+        c.used = True
+        self.stats["swaps"] += 1
+
+    def _admit(self, layer: int, expert: int) -> Optional[Container]:
+        """Register the container a fresh (cold/warm/prewarmed) start
+        landed on: it now holds the expert's weights and joins the
+        resident fleet. At the container bound, the lowest-ranked
+        unused container is repurposed; if every container is in use
+        this window, the start is transient (not tracked)."""
+        fleet = self.layers[layer]
+        mem = float(self.mem_mb[layer, expert])
+        if len(fleet) >= int(self.max_containers[layer]):
+            idle = [c for c in fleet if not c.used and not c.pending_boot]
+            if not idle:
+                return None
+            c = min(idle, key=lambda c: (
+                self.policy.rank_container(layer, c), c.cid))
+            self.stats["evictions"] += len(c.residents)
+            c.residents = {}
+            c.mem_mb = mem
+            c.packed = False
+            c.idle_windows = 0
+        else:
+            c = self._new_container(layer, mem)
+        c.residents[expert] = self._next_tick()
+        self.stats["admissions"] += 1
+        return c
+
+    # --- the simulator/backend surface --------------------------------
+
+    def update_forecast(self, forecast: Optional[np.ndarray]) -> None:
+        """Feed the predictor policy the demand forecast for the
+        upcoming window (no-op for LRU)."""
+        self.policy.set_forecast(forecast)
+
+    def wave(self, layer: int, faults) -> CacheWave:
+        """Start one layer window's invocation wave under the given
+        dispatch policy (the simulator's/backend's FaultProfile)."""
+        return CacheWave(self, layer, faults)
+
+    def take_pending_boots(self, layer: int) -> List[float]:
+        """Memory sizes (MB) of seeded packed containers that boot this
+        window — each bills one cold boot, once."""
+        out = []
+        for c in self.layers[layer]:
+            if c.pending_boot:
+                c.pending_boot = False
+                c.used = True
+                out.append(c.mem_mb)
+                self.stats["seeded_boots"] += 1
+        return out
+
+    def end_layer_window(self, layer: int) -> List[float]:
+        """Close a layer window: age idle containers, retire the
+        long-idle ones, reset per-window claims. Returns the memory
+        sizes (MB) of containers billing idle keep-alive this window."""
+        idle_mem: List[float] = []
+        keep: List[Container] = []
+        for c in self.layers[layer]:
+            if c.used:
+                c.idle_windows = 0
+                keep.append(c)
+            else:
+                c.idle_windows += 1
+                if c.idle_windows > self.config.max_idle_windows:
+                    self.stats["retired"] += 1
+                    continue               # retired: no further billing
+                idle_mem.append(c.mem_mb)
+                keep.append(c)
+            c.used = False
+        self.layers[layer] = keep
+        return idle_mem
+
+    def resident_matrix(self) -> np.ndarray:
+        """(L, E) bool: which experts are resident somewhere."""
+        out = np.zeros((self.L, self.E), bool)
+        for layer in range(self.L):
+            for c in self.layers[layer]:
+                for e in c.residents:
+                    out[layer, e] = True
+        return out
+
+    def packed_expert_count(self) -> int:
+        """Experts currently co-resident in packed containers."""
+        return sum(len(c.residents) for layer in self.layers
+                   for c in layer if c.packed)
+
+    def num_containers(self) -> int:
+        return sum(len(layer) for layer in self.layers)
+
+    # --- the serving-engine surface ------------------------------------
+
+    def prefetch(self, hints: np.ndarray) -> int:
+        """Speculative residency hints from the serving engine's
+        dispatch stage: make hinted experts resident ahead of the
+        routed tokens (swap into the policy's pick or admit a fresh
+        container). Returns the number of prefetch swaps performed."""
+        hints = np.asarray(hints)
+        n = 0
+        for layer, e in zip(*np.nonzero(hints)):
+            layer, e = int(layer), int(e)
+            if self._serve_touch(layer, e, count_hit=False) == "swap":
+                n += 1
+        self.stats["prefetch_swaps"] += n
+        return n
+
+    def serve_demand(self, demand: np.ndarray) -> None:
+        """Account one decode step's routed expert demand against
+        residency (hit / swap / boot per active (layer, expert))."""
+        demand = np.asarray(demand)
+        for layer, e in zip(*np.nonzero(demand > 0)):
+            self._serve_touch(int(layer), int(e), count_hit=True)
+
+    def _serve_touch(self, layer: int, expert: int, *,
+                     count_hit: bool) -> str:
+        for c in self.layers[layer]:
+            if expert in c.residents:
+                if count_hit:
+                    self._touch(c, expert)
+                else:
+                    c.residents[expert] = self._next_tick()
+                c.used = True
+                return "hit"
+        wave = CacheWave(self, layer)       # fresh claims: serving has
+        c = wave._swap_target(expert)       # no wave concurrency model
+        if c is not None:
+            self._swap_in(c, layer, expert)
+            return "swap"
+        self._admit(layer, expert)
+        return "boot"
+
+    def residency_stats(self) -> Dict[str, float]:
+        s = dict(self.stats)
+        s["containers"] = self.num_containers()
+        s["resident_experts"] = int(self.resident_matrix().sum())
+        s["packed_experts"] = self.packed_expert_count()
+        total = s["hits"] + s["swaps"] + s["admissions"]
+        s["hit_rate"] = s["hits"] / total if total else 0.0
+        return s

@@ -1,0 +1,124 @@
+"""Multi-expert packing: co-locate long-tail experts in one container.
+
+MoEless' observation: under Zipf routing most experts see little
+traffic, yet each still pays its own container (cold boots, keep-alive)
+in a one-expert-per-container deployment. Packing places several
+low-traffic experts' weights in ONE container — one boot, one
+keep-alive — subject to the container's weight-capacity in bytes and a
+maximum co-residency degree.
+
+The plan is built with deterministic first-fit-decreasing over the
+layer's long-tail experts (largest weights first, expert id as the
+tie-break) and validated against the hard memory invariant the property
+suite pins: no packed container ever holds more weight bytes than
+``CacheConfig.capacity_bytes`` of its memory size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from .config import CacheConfig
+
+
+@dataclass(frozen=True)
+class PackedContainer:
+    """One planned container co-hosting several experts of one layer."""
+
+    layer: int
+    experts: Tuple[int, ...]
+    mem_mb: float            # container memory: max over members' plan mem
+    bytes_used: float        # summed resident weight bytes
+    capacity_bytes: float    # weight capacity at mem_mb
+
+    @property
+    def utilization(self) -> float:
+        return self.bytes_used / max(self.capacity_bytes, 1e-12)
+
+
+@dataclass(frozen=True)
+class PackingPlan:
+    """The deploy-time packing assignment for all layers."""
+
+    containers: Tuple[PackedContainer, ...]
+    config: CacheConfig
+
+    @property
+    def num_packed_experts(self) -> int:
+        return sum(len(c.experts) for c in self.containers)
+
+    def layer_containers(self, layer: int) -> List[PackedContainer]:
+        return [c for c in self.containers if c.layer == layer]
+
+    def validate(self) -> None:
+        """Hard invariants (property-suite pinned): capacity in bytes is
+        never exceeded, degree is respected, no expert packed twice
+        within a layer, and every container packs at least 2 experts
+        (a singleton pack would just be an ordinary container)."""
+        for c in self.containers:
+            assert c.bytes_used <= c.capacity_bytes * (1 + 1e-12), \
+                (c.layer, c.experts, c.bytes_used, c.capacity_bytes)
+            assert 2 <= len(c.experts) <= self.config.packing_degree, \
+                (c.layer, c.experts)
+        for layer in {c.layer for c in self.containers}:
+            packed = [e for c in self.layer_containers(layer)
+                      for e in c.experts]
+            assert len(packed) == len(set(packed)), (layer, packed)
+
+    @classmethod
+    def build(cls, demand: np.ndarray, mem_mb: np.ndarray,
+              expert_bytes, config: CacheConfig) -> "PackingPlan":
+        """First-fit-decreasing packing of each layer's long tail.
+
+        ``demand`` (L, E) picks the long tail (share below
+        ``pack_threshold_frac`` of the layer total); ``mem_mb`` (L, E)
+        is the plan's per-expert memory (a bin's memory is the max over
+        its members, so every member could have run there);
+        ``expert_bytes`` is scalar or (E,) weight bytes per expert.
+        Bins that end up with a single expert are dropped — packing
+        only pays when a boot is shared.
+        """
+        demand = np.asarray(demand, float)
+        mem_mb = np.asarray(mem_mb, float)
+        L, E = demand.shape
+        eb = np.broadcast_to(np.asarray(expert_bytes, float), (E,))
+        out: List[PackedContainer] = []
+        if config.packing_degree < 2:
+            return cls(containers=(), config=config)
+        for layer in range(L):
+            total = float(demand[layer].sum())
+            share = demand[layer] / total if total > 0 else \
+                np.full(E, 1.0 / E)
+            tail = [e for e in range(E)
+                    if share[e] < config.pack_threshold_frac]
+            # first-fit-decreasing: big weights first so remainders fill
+            tail.sort(key=lambda e: (-eb[e], e))
+            bins: List[dict] = []
+            for e in tail:
+                placed = False
+                for b in bins:
+                    new_mem = max(b["mem"], float(mem_mb[layer, e]))
+                    if (len(b["experts"]) < config.packing_degree
+                            and b["bytes"] + eb[e]
+                            <= config.capacity_bytes(new_mem)):
+                        b["experts"].append(e)
+                        b["bytes"] += float(eb[e])
+                        b["mem"] = new_mem
+                        placed = True
+                        break
+                if not placed and eb[e] <= config.capacity_bytes(
+                        float(mem_mb[layer, e])):
+                    bins.append(dict(experts=[e], bytes=float(eb[e]),
+                                     mem=float(mem_mb[layer, e])))
+            for b in bins:
+                if len(b["experts"]) < 2:
+                    continue
+                out.append(PackedContainer(
+                    layer=layer, experts=tuple(sorted(b["experts"])),
+                    mem_mb=b["mem"], bytes_used=b["bytes"],
+                    capacity_bytes=config.capacity_bytes(b["mem"])))
+        plan = cls(containers=tuple(out), config=config)
+        plan.validate()
+        return plan

@@ -1,0 +1,100 @@
+"""Cache-aware planning: packing degree and cache sizing as Alg.-2
+search dimensions.
+
+:class:`CacheAwarePlanner` wraps any inner planner from the registry
+(default ``ods``) and grid-searches the cache configuration —
+``weight_frac`` (how much of a container's memory holds resident
+weights, i.e. the cache SIZE) x ``packing_degree`` (how many long-tail
+experts co-reside) — the way Alg. 2 searches its deployment knobs: each
+candidate is scored by actually executing the inner plan under a fresh
+:class:`~repro.expcache.model.ContainerCacheModel` on a short synthetic
+trace (repeats of the planning demand under a faulty platform), and the
+argmin configuration is stamped into ``plan.metadata["cache"]`` so the
+execution side (``ContainerCacheModel.from_plan``) picks it up without
+any side channel. Registered as ``"ods-cached"`` in the planner
+registry (lazily, mirroring the backend registry's ``"distributed"``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import ModelProfile, PlatformSpec
+
+from .config import CacheConfig
+from .model import ContainerCacheModel
+
+INF = float("inf")
+
+
+class CacheAwarePlanner:
+    """Wraps an inner planner and searches the cache dimensions.
+
+    ``eval_fn(plan, config, demand, profile, platform, seed) -> float``
+    overrides the default scorer (billed cost over ``eval_windows``
+    simulated windows under ``eval_faults``).
+    """
+
+    name = "ods-cached"
+
+    def __init__(self, inner="ods", *,
+                 weight_fracs: Sequence[float] = (0.5, 0.7, 0.9),
+                 packing_degrees: Sequence[int] = (1, 2, 4),
+                 policy: str = "predictor",
+                 eval_fn: Optional[Callable] = None,
+                 eval_faults=None, eval_windows: int = 3,
+                 **inner_kwargs):
+        if isinstance(inner, str):
+            from repro.plan.planner import get_planner
+            inner = get_planner(inner, **inner_kwargs)
+        self.inner = inner
+        self.weight_fracs = tuple(weight_fracs)
+        self.packing_degrees = tuple(packing_degrees)
+        self.policy = policy
+        self.eval_fn = eval_fn
+        self.eval_faults = eval_faults
+        self.eval_windows = int(eval_windows)
+
+    def candidates(self) -> Tuple[CacheConfig, ...]:
+        return tuple(CacheConfig(policy=self.policy, weight_frac=wf,
+                                 packing_degree=pd)
+                     for wf in self.weight_fracs
+                     for pd in self.packing_degrees)
+
+    def _score(self, plan, config: CacheConfig, demand: np.ndarray,
+               profile: ModelProfile, platform: PlatformSpec,
+               seed: int) -> float:
+        if self.eval_fn is not None:
+            return float(self.eval_fn(plan, config, demand, profile,
+                                      platform, seed))
+        from repro.core.simulator import FaultProfile, ServerlessSimulator
+        faults = self.eval_faults
+        if faults is None:
+            faults = FaultProfile(cold_start_prob=0.5, warm_pool=1)
+        sim = ServerlessSimulator(profile, platform, seed=seed,
+                                  faults=faults)
+        cache = ContainerCacheModel.from_plan(plan, profile, platform,
+                                              config=config)
+        tokens = int(max(demand.sum(), 1))
+        return float(sum(
+            sim.run(plan, demand, tokens, cache=cache).billed_cost
+            for _ in range(self.eval_windows)))
+
+    def plan(self, demand: np.ndarray, profile: ModelProfile,
+             platform: PlatformSpec, *, t_limit_s: float = INF,
+             seed: int = 0):
+        demand = np.asarray(demand, float)
+        base = self.inner.plan(demand, profile, platform,
+                               t_limit_s=t_limit_s, seed=seed)
+        scored = [(self._score(base, cfg, demand, profile, platform,
+                               seed), i, cfg)
+                  for i, cfg in enumerate(self.candidates())]
+        best_score, _, best = min(scored)
+        base.metadata["cache"] = dict(
+            best.to_dict(), score=best_score,
+            candidates=[dict(weight_frac=c.weight_frac,
+                             packing_degree=c.packing_degree,
+                             score=s) for s, _, c in scored])
+        base.planner = self.name
+        return base

@@ -1,0 +1,104 @@
+"""Eviction/admission policies for the container-resident expert cache.
+
+A policy answers two deterministic questions:
+
+* ``eviction_order(layer, container)`` — in what order should a
+  container's residents be evicted to make room (cheapest loss first)?
+* ``rank_container(layer, container)`` — when a whole container must be
+  repurposed (admission at the container bound) or chosen as a swap
+  target, how valuable is keeping it as-is (lowest rank is disturbed
+  first)?
+
+``LRUPolicy`` uses last-touch ticks only. ``PredictorPolicy`` ranks by
+the :class:`~repro.predict.online.OnlinePredictor` demand forecast for
+the upcoming window (fed in via :meth:`set_forecast` each window by the
+trace loop), falling back to LRU ticks until a forecast exists and as a
+deterministic tie-break throughout.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class EvictionPolicy(Protocol):
+    name: str
+
+    def set_forecast(self, forecast: Optional[np.ndarray]) -> None: ...
+
+    def eviction_order(self, layer: int, container) -> List[int]: ...
+
+    def rank_container(self, layer: int, container) -> float: ...
+
+
+class LRUPolicy:
+    """Least-recently-used: evict the longest-untouched resident."""
+
+    name = "lru"
+
+    def set_forecast(self, forecast) -> None:   # forecast-blind
+        pass
+
+    def eviction_order(self, layer: int, container) -> List[int]:
+        # oldest tick first; expert id breaks exact ties deterministically
+        return sorted(container.residents,
+                      key=lambda e: (container.residents[e], e))
+
+    def rank_container(self, layer: int, container) -> float:
+        # a container's recency is its freshest resident; empty
+        # containers are free to repurpose
+        if not container.residents:
+            return float("-inf")
+        return float(max(container.residents.values()))
+
+
+class PredictorPolicy:
+    """Forecast-driven: evict the expert least likely to be needed.
+
+    Ranks residents by the online predictor's demand forecast for the
+    next window (lower forecast demand = evicted earlier); container
+    rank is the summed forecast over residents. Without a forecast yet
+    (window 0, or no predictor attached) behaves exactly like LRU.
+    """
+
+    name = "predictor"
+
+    def __init__(self):
+        self._forecast: Optional[np.ndarray] = None
+        self._lru = LRUPolicy()
+
+    def set_forecast(self, forecast) -> None:
+        self._forecast = None if forecast is None \
+            else np.asarray(forecast, float)
+
+    def _demand(self, layer: int, expert: int) -> float:
+        f = self._forecast
+        if f is None or layer >= f.shape[0] or expert >= f.shape[1]:
+            return 0.0
+        return float(f[layer, expert])
+
+    def eviction_order(self, layer: int, container) -> List[int]:
+        if self._forecast is None:
+            return self._lru.eviction_order(layer, container)
+        return sorted(container.residents,
+                      key=lambda e: (self._demand(layer, e),
+                                     container.residents[e], e))
+
+    def rank_container(self, layer: int, container) -> float:
+        if self._forecast is None:
+            return self._lru.rank_container(layer, container)
+        if not container.residents:
+            return float("-inf")
+        return float(sum(self._demand(layer, e)
+                         for e in container.residents))
+
+
+def make_policy(name: str) -> EvictionPolicy:
+    if name == "lru":
+        return LRUPolicy()
+    if name == "predictor":
+        return PredictorPolicy()
+    raise KeyError(f"unknown cache policy {name!r}; "
+                   f"available: ['lru', 'predictor']")

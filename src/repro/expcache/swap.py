@@ -1,0 +1,47 @@
+"""Swap cost model: what an intra-container expert swap costs.
+
+The whole premise of the cache (Remoe): loading expert weights into an
+ALREADY WARM container is a fixed overhead plus a fast transfer —
+orders of magnitude cheaper than a cold boot, in both latency and
+billed GB-seconds. This module is the single place that prices it,
+always through :class:`~repro.core.costmodel.PlatformSpec` so billing
+stays consistent with the rest of the cost model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.costmodel import PlatformSpec
+
+
+@dataclass(frozen=True)
+class SwapCostModel:
+    """Prices swaps, idle keep-alive, and the cold boots they replace."""
+
+    spec: PlatformSpec
+
+    @property
+    def cold_extra_s(self) -> float:
+        """Billed seconds a cold boot adds over a warm start — the cost
+        a successful swap avoids."""
+        return max(self.spec.t_cold_start_s - self.spec.t_warm_start_s, 0.0)
+
+    def swap_s(self, nbytes: float) -> float:
+        """Wall-clock (== billed) seconds to swap ``nbytes`` of weights
+        into a warm container."""
+        return self.spec.t_swap_s(nbytes)
+
+    def swap_gb_s(self, nbytes: float, mem_mb: float) -> float:
+        """GB-seconds one swap bills at a container memory size."""
+        return self.swap_s(nbytes) * max(float(mem_mb), 0.0) / 1024.0
+
+    def keepalive_gb_s(self, mem_mb: float) -> float:
+        """GB-seconds one resident container bills for one idle window."""
+        return self.spec.t_cache_keepalive_s * max(float(mem_mb), 0.0) \
+            / 1024.0
+
+    def swap_speedup(self, nbytes: float) -> float:
+        """How many times cheaper a swap is than the cold boot it masks
+        (in billed seconds at equal memory). > 1 whenever caching can
+        pay off at all."""
+        return self.cold_extra_s / max(self.swap_s(nbytes), 1e-12)

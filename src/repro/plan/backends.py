@@ -67,6 +67,15 @@ def _carried_prewarm(r: ExecutionReport) -> bool:
                 or getattr(r, "wasted_prewarm_gb_s", 0.0))
 
 
+def _carried_cache(r: ExecutionReport) -> bool:
+    """Same predicate for the conditional ``"cache"`` block."""
+    return bool(getattr(r, "cache_hits", 0)
+                or getattr(r, "cache_swaps", 0)
+                or getattr(r, "swap_gb_s", 0.0)
+                or getattr(r, "packed_experts", 0)
+                or getattr(r, "cache_keepalive_gb_s", 0.0))
+
+
 def _merge_reports(reports: List[ExecutionReport], *,
                    backend: str) -> ExecutionReport:
     assert reports, "cannot merge zero reports"
@@ -78,6 +87,7 @@ def _merge_reports(reports: List[ExecutionReport], *,
     # contribute zeros instead of raising), and record the subset size so
     # a mixed prewarm-on/off merge stays distinguishable from all-on
     prewarm_batches = sum(1 for r in reports if _carried_prewarm(r))
+    cache_batches = sum(1 for r in reports if _carried_cache(r))
     return ExecutionReport(
         billed_cost=float(sum(r.billed_cost for r in reports)),
         latency_s=total_lat,
@@ -103,8 +113,23 @@ def _merge_reports(reports: List[ExecutionReport], *,
                                for r in reports)),
         wasted_prewarm_gb_s=float(sum(getattr(r, "wasted_prewarm_gb_s",
                                               0.0) for r in reports)),
+        # the cache block merges the same way (getattr-defaults so
+        # pre-cache-era / duck-typed reports contribute zeros). Counters
+        # sum; packed_experts is a GAUGE (end-of-window residency), so
+        # the merge keeps the maximum rather than a meaningless sum.
+        cache_hits=int(sum(getattr(r, "cache_hits", 0)
+                           for r in reports)),
+        cache_swaps=int(sum(getattr(r, "cache_swaps", 0)
+                            for r in reports)),
+        swap_gb_s=float(sum(getattr(r, "swap_gb_s", 0.0)
+                            for r in reports)),
+        packed_experts=int(max(getattr(r, "packed_experts", 0)
+                               for r in reports)),
+        cache_keepalive_gb_s=float(sum(getattr(r, "cache_keepalive_gb_s",
+                                               0.0) for r in reports)),
         extras={"num_batches": len(reports),
-                "prewarm_batches": prewarm_batches},
+                "prewarm_batches": prewarm_batches,
+                "cache_batches": cache_batches},
     )
 
 
@@ -166,16 +191,18 @@ class SimulatorBackend:
 
     def execute_trace(self, plan: DeploymentPlan, trace, *,
                       predictor=None,
-                      prewarm: Optional[str] = None
-                      ) -> List[ExecutionReport]:
+                      prewarm: Optional[str] = None,
+                      cache=None) -> List[ExecutionReport]:
         """Bill one plan window-by-window over a :class:`repro.traces.Trace`
         (one fresh jitter/fault stream for the whole trace, one report per
         window — the granularity re-planning loops consume). ``predictor``
-        / ``prewarm`` thread through to :func:`run_plan_over_trace`."""
+        / ``prewarm`` / ``cache`` thread through to
+        :func:`run_plan_over_trace`."""
         return run_plan_over_trace(plan, trace, self._make_sim(),
                                    self.profile, self.platform,
                                    predictor=predictor,
-                                   prewarm=prewarm)["reports"]
+                                   prewarm=prewarm,
+                                   cache=cache)["reports"]
 
 
 def run_plan_over_trace(plan: DeploymentPlan, trace,
@@ -185,7 +212,8 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
                                                    DeploymentPlan]] = None,
                         alpha: float = 2.0,
                         predictor=None,
-                        prewarm: Optional[str] = None) -> dict:
+                        prewarm: Optional[str] = None,
+                        cache=None) -> dict:
     """Drive a deployment through a demand trace window-by-window.
 
     The single implementation of the trace-feedback loop, shared by
@@ -215,6 +243,14 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
     pre-prewarm loop). Hits/misses/wasted GB-seconds land in each
     window's report.
 
+    **Expert-weight caching** (``cache``): a
+    :class:`repro.expcache.ContainerCacheModel` (resident-weight state
+    persists across the whole trace), or a policy name
+    (``"lru"``/``"predictor"``) to build one from the initial plan. The
+    predictor policy is fed each window's demand forecast before the
+    window executes, so evictions/swap targets track predicted drift.
+    ``None`` disables (bit-identical to the cache-less loop).
+
     NOTE on ``replan_diff`` cost deltas: a plan's ``layer_cost`` is
     always the PLANNER'S estimate at plan time (as everywhere else in
     Alg. 2 — replica floors from feedback are never re-costed); the
@@ -230,6 +266,10 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
     if prewarm == "predicted" and predictor is None:
         raise ValueError("prewarm='predicted' needs an online predictor")
     from repro.predict import demand_error, prewarm_containers
+    if isinstance(cache, str):
+        from repro.expcache import CacheConfig, ContainerCacheModel
+        cache = ContainerCacheModel.from_plan(
+            plan, profile, platform, config=CacheConfig(policy=cache))
     reports: List[ExecutionReport] = []
     plans: List[DeploymentPlan] = []
     prediction_errors: List[dict] = []
@@ -244,7 +284,12 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
             pw = prewarm_containers(cur, w.demand)
         elif prewarm == "predicted" and forecast is not None:
             pw = prewarm_containers(cur, forecast)
-        rep = sim.run(cur, w.demand, int(w.num_tokens), prewarm=pw)
+        if cache is not None:
+            cache.update_forecast(forecast)
+            rep = sim.run(cur, w.demand, int(w.num_tokens), prewarm=pw,
+                          cache=cache)
+        else:
+            rep = sim.run(cur, w.demand, int(w.num_tokens), prewarm=pw)
         reports.append(rep)
         if predictor is not None:
             if forecast is not None:

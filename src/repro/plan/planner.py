@@ -15,6 +15,11 @@ Every planner maps ``(demand, profile, platform)`` to a
   :class:`~repro.plan.backends.ExecutionBackend`), then plan from the
   refined predictor. Requires construction kwargs (``table``,
   ``eval_fn``); see :class:`BOPlanner`.
+* ``ods-cached`` — wraps an inner planner (default ``ods``) and
+  grid-searches the expert-weight cache dimensions (container weight
+  capacity x packing degree) by simulated execution, stamping the best
+  :class:`~repro.expcache.CacheConfig` into ``plan.metadata["cache"]``
+  (resolved lazily from :mod:`repro.expcache.planner`).
 
 New strategies register with :func:`register_planner` and become
 available to the runtime, benchmarks, and examples by name.
@@ -196,6 +201,13 @@ def available_planners() -> tuple:
     return tuple(sorted(_REGISTRY))
 
 
+def _cache_aware_planner(**kwargs) -> Planner:
+    # lazy: the expert-weight cache lives in repro.expcache; importing it
+    # here at module load would cost every planner-only consumer
+    from repro.expcache.planner import CacheAwarePlanner
+    return CacheAwarePlanner(**kwargs)
+
+
 register_planner("ods", ODSPlanner)
 for _m in comm.METHODS:
     register_planner(f"fixed-{_m}",
@@ -203,3 +215,4 @@ for _m in comm.METHODS:
 register_planner("lambdaml", LambdaMLPlanner)
 register_planner("random", RandomPlanner)
 register_planner("bo", BOPlanner)
+register_planner("ods-cached", _cache_aware_planner)

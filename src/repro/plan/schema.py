@@ -192,9 +192,11 @@ class ExecutionReport:
     case (ii)), what the paper's figures report (latency, throughput),
     the discrete-event simulator's fault breakdown (cold starts,
     transient-failure retries, concurrency queueing, stragglers — all
-    zero on an ideal platform), and the predictive pre-warming breakdown
+    zero on an ideal platform), the predictive pre-warming breakdown
     (hits, misses, wasted keep-alive GB-seconds — all zero unless a
-    prewarmer ran).
+    prewarmer ran), and the expert-weight cache breakdown (residency
+    hits, swaps, swap/keep-alive GB-seconds, packed experts — all zero
+    unless a ``repro.expcache`` model was attached to the run).
     """
 
     billed_cost: float                 # total $ for all MoE layers
@@ -218,6 +220,14 @@ class ExecutionReport:
     #                                    container (cold draw masked)
     prewarm_misses: int = 0            # prewarmed containers never consumed
     wasted_prewarm_gb_s: float = 0.0   # billed idle keep-alive of misses
+    cache_hits: int = 0                # invocations served by a container
+    #                                    already holding the expert weights
+    cache_swaps: int = 0               # cold draws masked by a weight swap
+    swap_gb_s: float = 0.0             # billed GB-seconds of those swaps
+    packed_experts: int = 0            # experts co-resident in packed
+    #                                    containers at end of run (gauge)
+    cache_keepalive_gb_s: float = 0.0  # billed idle keep-alive of resident
+    #                                    containers between windows
     extras: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -256,6 +266,19 @@ class ExecutionReport:
                 "prewarm_hits": int(self.prewarm_hits),
                 "prewarm_misses": int(self.prewarm_misses),
                 "wasted_prewarm_gb_s": float(self.wasted_prewarm_gb_s),
+            }
+        # same contract for the expert-weight cache: the "cache" block
+        # appears ONLY when a cache model actually ran, so cache-off
+        # reports (and every pre-cache golden fixture) keep the exact
+        # historical wire schema
+        if self.cache_hits or self.cache_swaps or self.swap_gb_s \
+                or self.packed_experts or self.cache_keepalive_gb_s:
+            d["cache"] = {
+                "cache_hits": int(self.cache_hits),
+                "cache_swaps": int(self.cache_swaps),
+                "swap_gb_s": float(self.swap_gb_s),
+                "packed_experts": int(self.packed_experts),
+                "cache_keepalive_gb_s": float(self.cache_keepalive_gb_s),
             }
         return d
 

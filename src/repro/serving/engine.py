@@ -53,7 +53,8 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, max_len: int = 256,
                  batch_size: int = 4, eos_id: Optional[int] = None,
                  collect_telemetry: bool = True, prompt_bucket: int = 8,
-                 moe_executor: str = "grouped", predictor=None):
+                 moe_executor: str = "grouped", predictor=None,
+                 cache=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -86,6 +87,23 @@ class ServingEngine:
                 "collect_telemetry=True) to score and learn from")
         self.predictor = predictor
         self.last_prewarm_hints: Optional[np.ndarray] = None
+        # expert-weight residency (repro.expcache): with a cache model
+        # attached, the speculative dispatch stage's prewarm hints become
+        # RESIDENCY hints — hinted experts are prefetched (swapped in)
+        # before the step, and each step's routed demand is scored
+        # against residency (hit / swap / boot) in residency_stats()
+        if cache is not None:
+            if self.telemetry is None:
+                raise ValueError(
+                    "an expert-weight cache needs expert telemetry (an "
+                    "MoE model and collect_telemetry=True) to track "
+                    "residency against routed demand")
+            if (cache.L, cache.E) != (self.cfg.num_layers,
+                                      moe.num_experts):
+                raise ValueError(
+                    f"cache geometry {(cache.L, cache.E)} != model "
+                    f"{(self.cfg.num_layers, moe.num_experts)}")
+        self.cache = cache
         self._n_front = (self.cfg.frontend_tokens
                          if self.cfg.frontend == "vision_stub" else 0)
         self._enc_dec = self.cfg.is_encoder_decoder
@@ -276,6 +294,10 @@ class ServingEngine:
             act_tok = in_tok[np.asarray(active, np.int64)]
             hints = self.predictor.prewarm_hint_matrix(act_tok)
             self.last_prewarm_hints = hints
+        if self.cache is not None and hints is not None:
+            # residency hints: swap hinted experts in BEFORE the step's
+            # routing runs, so predicted-hot experts are already warm
+            self.cache.prefetch(hints)
         cross_valid = (jnp.asarray(self.enc_valid) if self._enc_dec
                        else None)
         logits, cache, caps = self._jit_decode(
@@ -285,11 +307,16 @@ class ServingEngine:
         if self.telemetry is not None:
             caps_h = jax.tree.map(np.asarray, caps)
             demand_before = (self.telemetry.demand.copy()
-                             if hints is not None else None)
+                             if hints is not None or self.cache is not None
+                             else None)
             mark = self.telemetry.num_records
             self.telemetry.record_decode(
                 in_tok, in_pos - self._n_front, self.seqs, caps_h, active,
                 n_front=self._n_front)
+            if self.cache is not None:
+                # score the step's ACTUAL routing against residency
+                self.cache.serve_demand(
+                    self.telemetry.demand - demand_before)
             if hints is not None:
                 # score the hints against what the step actually routed,
                 # THEN learn from the step (hints stay strictly causal)
@@ -337,6 +364,15 @@ class ServingEngine:
             "hit_rate": tel.prewarm_hit_rate(),
             "per_layer_hit_rate": per_layer.tolist(),
         }
+
+    def residency_stats(self) -> Dict[str, Any]:
+        """Scoreboard of the expert-weight cache: residency hits, swaps
+        (including speculative prefetch swaps), boots, evictions, and
+        current resident/packed expert counts."""
+        if self.cache is None:
+            raise ValueError("residency stats need an expert-weight "
+                             "cache (ServingEngine(cache=...))")
+        return self.cache.residency_stats()
 
     # ------------------------------------------------------------------- run
     def run(self, *, max_steps: int = 256, on_step=None,

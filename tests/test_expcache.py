@@ -1,0 +1,547 @@
+"""Container-resident expert-weight caching: differential + acceptance.
+
+Differential guarantees (the satellite contracts):
+
+* cache-off runs (``cache=None``) are bit-identical to the committed
+  PR-4/5/6 golden fixtures — attaching the subsystem must not move a
+  single bit on the historical paths;
+* with a cache attached the cold-start stream is drawn once per
+  invocation unconditionally, so residency/swaps can only MASK cold
+  starts, never create them (cache colds <= no-cache colds, same seed);
+* a swap bills EXACTLY ``t_swap_s(bytes) * mem_gb`` busy GB-seconds and
+  adds exactly that many seconds of latency — a fraction of the cold
+  boot it replaced;
+* idle containers bill EXACTLY ``t_cache_keepalive_s`` GB-seconds per
+  window — on a knob SEPARATE from the speculative prewarm keep-alive —
+  and retire unbilled after ``max_idle_windows`` consecutive idle
+  windows.
+
+ACCEPTANCE: on a bursty Zipf-drift trace with per-window popularity
+sparsity, predictor-driven caching + packing strictly reduces the total
+billed GB-seconds versus the PR-5 prewarm-only configuration, without
+regressing the worst-window (p99) latency.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import MB, ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.expcache import (CacheConfig, ContainerCacheModel, LRUPolicy,
+                            PredictorPolicy, SwapCostModel, make_policy)
+from repro.plan.backends import _merge_reports, run_plan_over_trace
+from repro.plan.planner import get_planner
+from repro.predict import OnlinePredictor
+from repro.traces import (bursty_arrivals, demand_trace, drift_popularity,
+                          zipf_popularity)
+
+pytestmark = pytest.mark.timeout(300)
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+FAULTS = FaultProfile(cold_start_prob=0.8, warm_pool=2)
+
+# one MoE layer, two experts: every container decision is inspectable
+TINY = ModelProfile(
+    num_moe_layers=1, experts_per_layer=2,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+ALWAYS_COLD = FaultProfile(cold_start_prob=1.0, warm_pool=0)
+
+
+def _demand(L=4, E=8, seed=0, scale=400):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _plan(demand, prof=PROF, spec=SPEC):
+    return get_planner("ods").plan(demand, prof, spec, t_limit_s=1e9)
+
+
+def _tiny_plan(spec=SPEC):
+    return _plan(np.array([[40.0, 40.0]]), TINY, spec)
+
+
+# ---------------------------------------------------------------------------
+# differential: cache=None is the exact historical engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["report_simulator.json",
+                                  "report_faulted.json",
+                                  "report_prewarmed.json"])
+def test_cache_off_bit_identical_to_committed_goldens(name):
+    """Every committed report fixture (ideal PR-4, faulted PR-4, and the
+    PR-5 prewarmed run) predates the cache subsystem; an explicit
+    ``cache=None`` run must still reproduce each byte-for-byte."""
+    from repro.predict import prewarm_containers
+    plan = _plan(_demand(seed=0, scale=2000))
+    real = _demand(seed=3, scale=2400)
+    faults = FaultProfile(cold_start_prob=0.5, warm_pool=2,
+                          straggler_prob=0.1, failure_prob=0.1,
+                          concurrency_limit=8)
+    if name == "report_simulator.json":
+        rep = ServerlessSimulator(PROF, SPEC, seed=7).run(
+            plan, real, int(real.sum()), cache=None)
+    elif name == "report_faulted.json":
+        rep = ServerlessSimulator(PROF, SPEC, seed=7, faults=faults).run(
+            plan, real, int(real.sum()), cache=None)
+    else:
+        shifted = real.copy()
+        shifted[:, 1::3] = 0.0
+        rep = ServerlessSimulator(PROF, SPEC, seed=7, faults=faults).run(
+            plan, shifted, int(shifted.sum()),
+            prewarm=prewarm_containers(plan, _demand(seed=0, scale=2000)),
+            cache=None)
+    golden = json.loads((GOLDEN_DIR / name).read_text())
+    assert rep.to_dict() == golden
+
+
+def test_cache_off_report_keeps_the_v1_wire_schema():
+    """``cache=None`` serializes without the cache block — the exact
+    pre-cache wire dict, so all committed fixtures stay valid."""
+    d = _demand()
+    rep = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        _plan(d), d, int(d.sum()))
+    assert "cache" not in rep.to_dict()
+    assert rep.cache_hits == rep.cache_swaps == rep.packed_experts == 0
+    assert rep.swap_gb_s == rep.cache_keepalive_gb_s == 0.0
+
+
+def test_cache_on_ideal_platform_is_the_closed_form():
+    """With no cold starts there is nothing to mask: attaching a cache
+    to an ideal platform reproduces the closed-form billing exactly —
+    no swaps, no phantom keep-alive, identical latency."""
+    d = _demand()
+    plan = _plan(d)
+    base = ServerlessSimulator(PROF, SPEC, seed=3).run(plan, d, int(d.sum()))
+    cache = ContainerCacheModel.from_plan(plan, PROF, SPEC,
+                                          config=CacheConfig())
+    rep = ServerlessSimulator(PROF, SPEC, seed=3).run(
+        plan, d, int(d.sum()), cache=cache)
+    assert rep.billed_cost == base.billed_cost
+    assert rep.latency_s == base.latency_s
+    np.testing.assert_array_equal(rep.layer_cost, base.layer_cost)
+    assert rep.cache_swaps == 0 and rep.cold_starts == 0
+    assert rep.cache_keepalive_gb_s == 0.0
+
+
+def test_swaps_only_mask_cold_starts_never_create_them():
+    """Same seed, cache vs a zero-hint prewarm run (the two configs that
+    share the draws-once-per-invocation stream): every cached swap was a
+    cold draw the cache intercepted, and residency hits free up the warm
+    pool — so cached colds + swaps <= uncached colds, never more."""
+    d = _demand()
+    plan = _plan(d)
+    off = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        plan, d, int(d.sum()), prewarm=np.zeros_like(plan.replicas))
+    cache = ContainerCacheModel.from_plan(plan, PROF, SPEC,
+                                          config=CacheConfig())
+    on = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS).run(
+        plan, d, int(d.sum()), cache=cache)
+    assert off.cold_starts > 0
+    assert on.cold_starts + on.cache_swaps <= off.cold_starts
+    assert on.cold_starts + on.cache_swaps + on.cache_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# billing exactness: swaps, keep-alive, retirement (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_swap_bills_exactly_its_gb_seconds_and_latency():
+    """L=1/E=2, always-cold platform. Window A boots expert 0's
+    container; window B routes to expert 1, whose cold draw is served by
+    a SWAP into that container; window C finds expert 1 resident (free
+    hit). The swap bills exactly ``t_swap_s(bytes) * mem_gb``
+    GB-seconds and ``t_swap_s(bytes)`` seconds of latency on top of the
+    hit-served window — and the hit-served window equals the ideal
+    closed form bit-for-bit."""
+    plan = _tiny_plan()
+    dA, dB = np.array([[40.0, 0.0]]), np.array([[0.0, 40.0]])
+    cache = ContainerCacheModel.from_plan(plan, TINY, SPEC,
+                                          config=CacheConfig(policy="lru"))
+    sim = ServerlessSimulator(TINY, SPEC, seed=7, faults=ALWAYS_COLD)
+    rA = sim.run(plan, dA, 40, cache=cache)
+    rB = sim.run(plan, dB, 40, cache=cache)
+    rC = sim.run(plan, dB, 40, cache=cache)
+
+    assert rA.cold_starts == 1 and rA.cache_swaps == 0
+    assert rB.cold_starts == 0 and rB.cache_swaps == 1
+    assert rC.cold_starts == 0 and rC.cache_hits == 1
+
+    swap_s = SPEC.t_swap_s(TINY.expert_param_bytes)
+    assert swap_s == SPEC.t_swap_fixed_s \
+        + TINY.expert_param_bytes / (SPEC.bw_swap_mb_s * MB)
+    mem_gb = float(plan.mem_mb[0, 1]) / 1024.0
+    np.testing.assert_allclose(rB.swap_gb_s, swap_s * mem_gb, rtol=1e-12)
+    np.testing.assert_allclose(
+        rB.billed_cost - rC.billed_cost,
+        swap_s * mem_gb * SPEC.price_per_gb_s, rtol=1e-12)
+    np.testing.assert_allclose(rB.latency_s - rC.latency_s, swap_s,
+                               rtol=1e-12)
+    # swap << cold boot: the masked window is strictly cheaper AND
+    # faster than the cold boot it replaced
+    assert rB.billed_cost < rA.billed_cost
+    assert rB.latency_s < rA.latency_s
+    # the hit-served window is indistinguishable from an ideal platform
+    ideal = ServerlessSimulator(TINY, SPEC, seed=7).run(plan, dB, 40)
+    assert rC.billed_cost == ideal.billed_cost
+    d_rep = rB.to_dict()
+    assert d_rep["cache"]["cache_swaps"] == 1
+    np.testing.assert_allclose(d_rep["cache"]["swap_gb_s"], rB.swap_gb_s,
+                               rtol=1e-12)
+
+
+def _run_idle_windows(spec):
+    """Boot both experts, then leave expert 1's container idle for three
+    windows; returns the three idle-window reports and the cache."""
+    plan = _tiny_plan(spec)
+    cache = ContainerCacheModel.from_plan(plan, TINY, spec,
+                                          config=CacheConfig(policy="lru"))
+    sim = ServerlessSimulator(TINY, spec, seed=7, faults=ALWAYS_COLD)
+    dA = np.array([[40.0, 40.0]])
+    dB = np.array([[40.0, 0.0]])
+    sim.run(plan, dA, 80, cache=cache)
+    reps = [sim.run(plan, dB, 40, cache=cache) for _ in range(3)]
+    return plan, cache, reps
+
+
+def test_idle_keepalive_bills_exactly_then_retires_unbilled():
+    """An idle container bills exactly ``mem_gb * t_cache_keepalive_s``
+    per window for ``max_idle_windows`` windows, then retires WITHOUT
+    billing — bounded rent, not a perpetual lease."""
+    plan, cache, (r1, r2, r3) = _run_idle_windows(SPEC)
+    ka = float(plan.mem_mb[0, 1]) / 1024.0 * SPEC.t_cache_keepalive_s
+    np.testing.assert_allclose(r1.cache_keepalive_gb_s, ka, rtol=1e-12)
+    np.testing.assert_allclose(r2.cache_keepalive_gb_s, ka, rtol=1e-12)
+    assert r3.cache_keepalive_gb_s == 0.0            # retired, not billed
+    assert cache.stats["retired"] == 1
+    # the keep-alive GB-seconds land in billed cost at the platform rate
+    off = dataclasses.replace(SPEC, t_cache_keepalive_s=0.0)
+    _, _, (q1, _, _) = _run_idle_windows(off)
+    np.testing.assert_allclose(r1.billed_cost - q1.billed_cost,
+                               ka * SPEC.price_per_gb_s, rtol=1e-12)
+
+
+def test_cache_billing_is_independent_of_prewarm_keepalive():
+    """Satellite contract: the cache's swap/keep-alive billing rides its
+    OWN platform knobs (``t_swap_fixed_s``/``bw_swap_mb_s``/
+    ``t_cache_keepalive_s``) — moving the speculative prewarm keep-alive
+    knob must not move a single cached bit."""
+    bumped = dataclasses.replace(SPEC, t_prewarm_keepalive_s=123.0)
+    _, _, reps_a = _run_idle_windows(SPEC)
+    _, _, reps_b = _run_idle_windows(bumped)
+    for a, b in zip(reps_a, reps_b):
+        assert a.to_dict() == b.to_dict()
+    # and the swap-time formula itself only reads the swap knobs
+    fast = dataclasses.replace(SPEC, t_swap_fixed_s=0.01,
+                               bw_swap_mb_s=3000.0)
+    assert fast.t_swap_s(30e6) == 0.01 + 30e6 / (3000.0 * MB)
+    assert SwapCostModel(SPEC).swap_speedup(TINY.expert_param_bytes) > 10.0
+
+
+# ---------------------------------------------------------------------------
+# eviction policies
+# ---------------------------------------------------------------------------
+
+def test_predictor_policy_evicts_lowest_forecast_first():
+    from repro.expcache.model import Container
+    c = Container(cid=0, mem_mb=512.0, residents={0: 5, 1: 9, 2: 1})
+    lru = make_policy("lru")
+    assert isinstance(lru, LRUPolicy)
+    assert lru.eviction_order(0, c) == [2, 0, 1]      # oldest tick first
+    pred = make_policy("predictor")
+    assert isinstance(pred, PredictorPolicy)
+    # no forecast yet: falls back to LRU order
+    assert pred.eviction_order(0, c) == [2, 0, 1]
+    forecast = np.zeros((1, 3))
+    forecast[0] = [50.0, 0.0, 9.0]
+    pred.set_forecast(forecast)
+    assert pred.eviction_order(0, c) == [1, 2, 0]     # coldest future first
+    # rank: a container full of predicted-hot experts is disturbed last
+    hot = Container(cid=1, mem_mb=512.0, residents={0: 2})
+    cold = Container(cid=2, mem_mb=512.0, residents={1: 8})
+    assert pred.rank_container(0, cold) < pred.rank_container(0, hot)
+    with pytest.raises(KeyError, match="lru"):
+        make_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# report schema + merging (satellite 1)
+# ---------------------------------------------------------------------------
+
+def _report(cost=1.0, tokens=10, cache=False, prewarm=False):
+    from repro.plan.schema import ExecutionReport
+    L, E = 2, 3
+    rep = ExecutionReport(
+        billed_cost=cost, latency_s=1.0, throughput_tps=tokens,
+        layer_cost=np.full(L, cost / L), layer_latency=np.ones(L),
+        mem_overrun=np.zeros((L, E), bool),
+        payload_violation=np.zeros((L, E), bool),
+        real_demand=np.ones((L, E)), min_mem_required_mb=np.ones((L, E)),
+        backend="simulator", num_tokens=tokens)
+    if prewarm:
+        rep.prewarm_hits = 3
+    if cache:
+        rep.cache_hits = 4
+        rep.cache_swaps = 2
+        rep.swap_gb_s = 0.5
+        rep.packed_experts = 3
+        rep.cache_keepalive_gb_s = 0.125
+    return rep
+
+
+def test_merge_reports_mixed_cache_subset():
+    """Merging reports where only SOME carry the conditional cache block
+    must sum counters over the carrying subset, take the MAX of the
+    packed-expert gauge, and record how many batches carried it."""
+    reports = [_report(cache=True), _report(cache=False),
+               _report(cache=True)]
+    reports[2].packed_experts = 5
+    merged = _merge_reports(reports, backend="simulator")
+    assert merged.cache_hits == 8
+    assert merged.cache_swaps == 4
+    assert merged.swap_gb_s == pytest.approx(1.0)
+    assert merged.cache_keepalive_gb_s == pytest.approx(0.25)
+    assert merged.packed_experts == 5          # gauge: max, not sum
+    assert merged.extras["cache_batches"] == 2
+    assert merged.to_dict()["cache"]["cache_hits"] == 8
+
+
+def test_merge_reports_attrless_legacy_objects():
+    """Pre-cache-era reports (attributes deleted to emulate old wire
+    objects) contribute zeros instead of AttributeError."""
+    new = _report(cache=True)
+    old = _report(cache=False)
+    for f in ("cache_hits", "cache_swaps", "swap_gb_s", "packed_experts",
+              "cache_keepalive_gb_s"):
+        delattr(old, f)
+    merged = _merge_reports([new, old], backend="simulator")
+    assert merged.cache_hits == 4
+    assert merged.extras["cache_batches"] == 1
+
+
+def test_merge_reports_all_off_keeps_legacy_schema():
+    merged = _merge_reports([_report(), _report()], backend="simulator")
+    assert merged.cache_hits == 0
+    assert merged.extras["cache_batches"] == 0
+    assert "cache" not in merged.to_dict()
+    # the cache block coexists with (and does not perturb) prewarm's
+    both = _merge_reports([_report(cache=True, prewarm=True)],
+                          backend="simulator")
+    d = both.to_dict()
+    assert d["prewarm"]["prewarm_hits"] == 3
+    assert d["cache"]["cache_swaps"] == 2
+
+
+# ---------------------------------------------------------------------------
+# distributed backend: same cache semantics over the dispatch substrate
+# ---------------------------------------------------------------------------
+
+def test_distributed_backend_matches_simulator_cache_accounting():
+    """The inline-transport distributed backend shares the cache model's
+    draw discipline: identical hits, swaps, swap GB-seconds, keep-alive
+    and packed-expert gauge, window by window."""
+    from repro.dist.backend import DistributedBackend
+    rng = np.random.default_rng(0)
+    demands = [rng.integers(0, 40, size=(4, 8)).astype(float)
+               for _ in range(3)]
+    plan = _plan(demands[0])
+    cfg = CacheConfig(packing_degree=2, pack_threshold_frac=0.2)
+
+    sim = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS)
+    cs = ContainerCacheModel.from_plan(plan, PROF, SPEC, config=cfg)
+    be = DistributedBackend(PROF, SPEC, seed=7, faults=FAULTS,
+                            transport="inline")
+    cd = ContainerCacheModel.from_plan(plan, PROF, SPEC, config=cfg)
+    for d in demands:
+        a = sim.run(plan, d, 64, cache=cs)
+        b = be.run(plan, d, 64, cache=cd)
+        assert a.cache_hits == b.cache_hits
+        assert a.cache_swaps == b.cache_swaps
+        np.testing.assert_allclose(a.swap_gb_s, b.swap_gb_s, rtol=1e-9)
+        np.testing.assert_allclose(a.cache_keepalive_gb_s,
+                                   b.cache_keepalive_gb_s, rtol=1e-9)
+        assert a.packed_experts == b.packed_experts
+
+
+def test_distributed_backend_cache_off_is_bit_identical():
+    from repro.dist.backend import DistributedBackend
+    d = _demand()
+    plan = _plan(d)
+    a = DistributedBackend(PROF, SPEC, seed=7, faults=FAULTS,
+                           transport="inline").run(plan, d, 64)
+    b = DistributedBackend(PROF, SPEC, seed=7, faults=FAULTS,
+                           transport="inline").run(plan, d, 64, cache=None)
+    assert a.to_dict() == b.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: caching + packing beats the prewarm-only configuration
+# ---------------------------------------------------------------------------
+
+def _sparse_drift_trace(steps=10, tokens_per_request=100, keep=4):
+    """Bursty Zipf-drift trace where each window routes to only the
+    top-``keep`` experts per layer: experts flicker in and out of the
+    active set under drift — recurring work for a prewarmer (keep-alive
+    on forecast misses, cold boots on re-entrants) that a persistent
+    residency cache serves with hits and cheap swaps."""
+    pop = zipf_popularity(PROF.num_moe_layers, PROF.experts_per_layer,
+                          seed=0)
+    pops = []
+    for p in drift_popularity(pop, steps, drift=0.35, seed=2):
+        q = p.copy()
+        for layer in range(q.shape[0]):
+            order = np.argsort(q[layer])[::-1]
+            q[layer, order[keep:]] = 0.0
+            q[layer] /= q[layer].sum()
+        pops.append(q)
+    arr = np.maximum(bursty_arrivals(1.0, steps, burst_mult=8.0, seed=1), 1)
+    return demand_trace(arr, pops, tokens_per_request=tokens_per_request)
+
+
+def _cache_vs_prewarm(seed=7):
+    trace = _sparse_drift_trace()
+    plan = _plan(trace.windows[0].demand)
+
+    def run(with_cache):
+        pred = OnlinePredictor(PROF.num_moe_layers, PROF.experts_per_layer,
+                               16, decay=0.7)
+        sim = ServerlessSimulator(PROF, SPEC, seed=seed, faults=FAULTS)
+        if with_cache:
+            cache = ContainerCacheModel.from_plan(
+                plan, PROF, SPEC,
+                config=CacheConfig(policy="predictor", packing_degree=2,
+                                   pack_threshold_frac=0.12))
+            return run_plan_over_trace(plan, trace, sim, PROF, SPEC,
+                                       predictor=pred, cache=cache)
+        return run_plan_over_trace(plan, trace, sim, PROF, SPEC,
+                                   predictor=pred, prewarm="predicted")
+    return run(False), run(True)
+
+
+def test_predictive_cache_beats_prewarm_only_on_drift_trace():
+    """ACCEPTANCE: on the sparse drift trace, predictor-driven caching +
+    packing strictly reduces the total billed GB-seconds versus the
+    PR-5 prewarm-only configuration, and the worst-window (p99) latency
+    does not regress — residency hits mask the cold starts that stall
+    the prewarmer's unlucky windows."""
+    base, cached = _cache_vs_prewarm()
+    cost_base = sum(r.billed_cost for r in base["reports"])
+    cost_cache = sum(r.billed_cost for r in cached["reports"])
+    assert cost_cache < cost_base
+    lat_base = np.array([r.latency_s for r in base["reports"]])
+    lat_cache = np.array([r.latency_s for r in cached["reports"]])
+    assert np.percentile(lat_cache, 99) <= np.percentile(lat_base, 99)
+    # the win comes from the subsystem actually working, not noise:
+    # residency hits, swaps, and packed co-residents all fired
+    assert sum(r.cache_hits for r in cached["reports"]) > 0
+    assert sum(r.cache_swaps for r in cached["reports"]) > 0
+    assert max(r.packed_experts for r in cached["reports"]) > 0
+    # while the prewarm-only baseline pays recurring forecast-miss rent
+    assert sum(r.wasted_prewarm_gb_s for r in base["reports"]) > 0.0
+    assert all(r.cache_hits == 0 and r.swap_gb_s == 0.0
+               for r in base["reports"])
+
+
+# ---------------------------------------------------------------------------
+# planner integration: cache knobs as Alg.-2 search dimensions
+# ---------------------------------------------------------------------------
+
+def test_ods_cached_planner_stamps_searched_config():
+    """``ods-cached`` grid-searches (weight_frac x packing_degree) by
+    simulated execution and stamps the argmin config + the full score
+    table into ``plan.metadata["cache"]`` — which ``from_plan`` then
+    picks up with no side channel."""
+    d = _demand(scale=200)
+    planner = get_planner("ods-cached", weight_fracs=(0.5, 0.9),
+                          packing_degrees=(1, 2), eval_windows=1)
+    plan = planner.plan(d, PROF, SPEC, t_limit_s=1e9, seed=3)
+    assert plan.planner == "ods-cached"
+    meta = plan.metadata["cache"]
+    assert meta["weight_frac"] in (0.5, 0.9)
+    assert meta["packing_degree"] in (1, 2)
+    assert len(meta["candidates"]) == 4
+    scores = [c["score"] for c in meta["candidates"]]
+    assert all(np.isfinite(s) for s in scores)
+    assert meta["score"] == min(scores)
+    # the stamped config survives the plan's JSON wire format and
+    # configures the execution-side cache
+    from repro.plan.schema import DeploymentPlan
+    wire = DeploymentPlan.from_json(plan.to_json())
+    cache = ContainerCacheModel.from_plan(wire, PROF, SPEC)
+    assert cache.config.weight_frac == meta["weight_frac"]
+    assert cache.config.packing_degree == meta["packing_degree"]
+    # an inner-planner mix-in is untouched apart from the metadata
+    inner = get_planner("ods").plan(d, PROF, SPEC, t_limit_s=1e9, seed=3)
+    np.testing.assert_array_equal(plan.method, inner.method)
+    np.testing.assert_array_equal(plan.replicas, inner.replicas)
+
+
+# ---------------------------------------------------------------------------
+# serving engine: prewarm hints become residency hints
+# ---------------------------------------------------------------------------
+
+def _serving_cache(cfg):
+    return ContainerCacheModel.uniform(
+        cfg.num_layers, cfg.moe.num_experts, mem_mb=512.0,
+        expert_bytes=1e6, platform=SPEC,
+        config=CacheConfig(policy="predictor", packing_degree=2))
+
+
+def test_serving_engine_tracks_residency():
+    import jax
+    from conftest import tiny_model
+    from repro.serving import ServingEngine
+
+    cfg, model = tiny_model("gpt2-moe")
+    params = model.init_params(jax.random.PRNGKey(0))
+    pred = OnlinePredictor(cfg.num_layers, cfg.moe.num_experts,
+                           cfg.vocab_size, top_k=cfg.moe.top_k)
+    cache = _serving_cache(cfg)
+    eng = ServingEngine(model, params, max_len=32, batch_size=2,
+                        predictor=pred, cache=cache)
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=6),
+                   max_new_tokens=5)
+    eng.run()
+    stats = eng.residency_stats()
+    # every routed (layer, expert) was scored against residency
+    assert stats["hits"] + stats["swaps"] + stats["admissions"] > 0
+    assert stats["hits"] > 0                  # steady decode re-touches
+    assert 0.0 <= stats["hit_rate"] <= 1.0
+    assert stats["resident_experts"] > 0
+    assert stats["containers"] > 0
+    # the speculative prewarm scoreboard still works alongside
+    assert eng.speculation_stats()["pairs"] > 0
+
+
+def test_serving_engine_cache_guardrails():
+    import jax
+    from conftest import tiny_model
+    from repro.serving import ServingEngine
+
+    cfg, model = tiny_model("gpt2-moe")
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="telemetry"):
+        ServingEngine(model, params, max_len=32, batch_size=1,
+                      collect_telemetry=False, cache=_serving_cache(cfg))
+    wrong = ContainerCacheModel.uniform(
+        cfg.num_layers + 1, cfg.moe.num_experts, mem_mb=512.0,
+        expert_bytes=1e6, platform=SPEC)
+    with pytest.raises(ValueError, match="geometry"):
+        ServingEngine(model, params, max_len=32, batch_size=1, cache=wrong)
+    eng = ServingEngine(model, params, max_len=32, batch_size=1)
+    with pytest.raises(ValueError, match="cache"):
+        eng.residency_stats()

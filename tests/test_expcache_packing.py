@@ -1,0 +1,170 @@
+"""Property suite for the multi-expert packing plan.
+
+The hard invariant (satellite contract): under ANY random expert sizes,
+container memories, demand skews, and cache knobs, first-fit-decreasing
+never builds a container whose resident weight bytes exceed its
+``CacheConfig.capacity_bytes`` — and respects the co-residency degree,
+packs no expert twice per layer, and keeps only bins that actually
+amortize a boot (>= 2 experts).
+
+``hypothesis`` is an optional dev dependency; when missing the ``@given``
+cases skip (see conftest) and the deterministic cases still run.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.expcache import CacheConfig, ContainerCacheModel, PackingPlan
+
+from repro.core.costmodel import MB, ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.planner import get_planner
+
+pytestmark = pytest.mark.timeout(300)
+
+
+def _check_invariants(plan: PackingPlan, expert_bytes, config: CacheConfig):
+    plan.validate()
+    eb = np.asarray(expert_bytes, float)
+    for c in plan.containers:
+        # recomputed from scratch, not trusting the stored bytes_used
+        total = float(eb[list(c.experts)].sum()) if eb.ndim else \
+            float(eb) * len(c.experts)
+        assert total <= config.capacity_bytes(c.mem_mb) * (1 + 1e-12)
+        assert len(c.experts) >= 2
+        assert len(c.experts) <= config.packing_degree
+        assert 0.0 <= c.utilization <= 1.0 + 1e-12
+
+
+@given(
+    data=st.data(),
+    L=st.integers(min_value=1, max_value=4),
+    E=st.integers(min_value=2, max_value=12),
+    degree=st.integers(min_value=1, max_value=6),
+    weight_frac=st.floats(min_value=0.05, max_value=1.0),
+    threshold=st.floats(min_value=0.0, max_value=1.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_packing_never_exceeds_container_memory(data, L, E, degree,
+                                                weight_frac, threshold):
+    """Random expert sizes / memories / demand: the packed bytes fit the
+    capacity at the bin's memory size, always."""
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    demand = rng.gamma(0.5, 100.0, size=(L, E))
+    demand[rng.random((L, E)) < 0.3] = 0.0      # sparse tails
+    mem_mb = rng.uniform(64.0, 2048.0, size=(L, E))
+    expert_bytes = rng.uniform(1e6, 400e6, size=E)
+    config = CacheConfig(packing_degree=degree, weight_frac=weight_frac,
+                         pack_threshold_frac=threshold)
+    plan = PackingPlan.build(demand, mem_mb, expert_bytes, config)
+    _check_invariants(plan, expert_bytes, config)
+    # every packed bin's memory is the max over its members: each member
+    # could have run in that container under the deployment plan
+    for c in plan.containers:
+        assert c.mem_mb + 1e-9 >= mem_mb[c.layer, list(c.experts)].max()
+
+
+@given(scale=st.floats(min_value=1.0, max_value=1e4),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_packing_is_scale_invariant_in_demand(scale, seed):
+    """Packing depends on demand SHARES, not magnitudes: scaling the
+    demand matrix leaves the plan unchanged."""
+    rng = np.random.default_rng(seed)
+    demand = rng.gamma(0.5, 100.0, size=(2, 8))
+    mem = rng.uniform(128.0, 1024.0, size=(2, 8))
+    eb = rng.uniform(1e6, 60e6, size=8)
+    config = CacheConfig(packing_degree=4, pack_threshold_frac=0.1)
+    a = PackingPlan.build(demand, mem, eb, config)
+    b = PackingPlan.build(demand * scale, mem, eb, config)
+    assert a.containers == b.containers
+
+
+def test_degree_one_disables_packing():
+    demand = np.ones((2, 8))
+    plan = PackingPlan.build(demand, np.full((2, 8), 512.0), 28e6,
+                             CacheConfig(packing_degree=1))
+    assert plan.containers == ()
+    assert plan.num_packed_experts == 0
+
+
+def test_uniform_demand_has_no_tail_to_pack():
+    """With 8 equal experts each share is 0.125 — above the default
+    threshold, so nothing qualifies as long-tail."""
+    demand = np.full((2, 8), 50.0)
+    plan = PackingPlan.build(
+        demand, np.full((2, 8), 512.0), 28e6,
+        CacheConfig(packing_degree=4, pack_threshold_frac=0.08))
+    assert plan.containers == ()
+
+
+def test_zipf_tail_packs_and_respects_degree():
+    """A strong Zipf skew leaves most experts under the threshold; they
+    pack into few bins, none exceeding the degree, every bin >= 2."""
+    E = 8
+    zipf = (1.0 / np.arange(1, E + 1)) ** 2.0
+    demand = np.tile(100.0 * zipf / zipf.sum(), (2, 1))
+    config = CacheConfig(packing_degree=3, pack_threshold_frac=0.1,
+                         weight_frac=0.9)
+    plan = PackingPlan.build(demand, np.full((2, E), 512.0), 28e6, config)
+    assert plan.num_packed_experts > 0
+    _check_invariants(plan, np.full(E, 28e6), config)
+    per_layer = {layer: plan.layer_containers(layer) for layer in (0, 1)}
+    assert all(cs for cs in per_layer.values())
+
+
+def test_oversized_experts_are_left_unpacked():
+    """Experts whose weights exceed even a solo container's capacity
+    can't be packed at all — the plan stays empty rather than invalid."""
+    demand = np.tile([[100.0, 1.0, 1.0, 1.0]], (1, 1))
+    plan = PackingPlan.build(
+        demand, np.full((1, 4), 128.0), 500e6,     # 500MB >> 0.7 * 128MB
+        CacheConfig(packing_degree=4, pack_threshold_frac=0.2))
+    assert plan.containers == ()
+
+
+def test_capacity_binds_bin_membership():
+    """weight_frac small enough that only two experts fit per bin: the
+    four tail experts split across two bins instead of one."""
+    E = 5
+    demand = np.array([[1000.0, 1.0, 1.0, 1.0, 1.0]])
+    mem = np.full((1, E), 512.0)
+    eb = np.full(E, 100e6)
+    # capacity 512MB * frac: pick frac so 2*eb fits but 3*eb does not
+    frac = 2.5 * 100e6 / (512.0 * MB)
+    plan = PackingPlan.build(
+        demand, mem, eb, CacheConfig(packing_degree=4,
+                                     pack_threshold_frac=0.05,
+                                     weight_frac=frac))
+    sizes = sorted(len(c.experts) for c in plan.containers)
+    assert sizes == [2, 2]
+
+
+def test_packed_expert_gauge_lands_in_the_report():
+    """The simulator report's ``packed_experts`` gauge equals the cache
+    model's live count of packed co-residents."""
+    SPEC = PlatformSpec()
+    PROF = ModelProfile(
+        num_moe_layers=2, experts_per_layer=8,
+        expert_param_bytes=28e6, token_in_bytes=3072.0,
+        token_out_bytes=3072.0, u_ref_s=2e-4, intermediate_bytes=4e6,
+        nonmoe_param_bytes=9e6)
+    E = 8
+    zipf = (1.0 / np.arange(1, E + 1)) ** 2.0
+    demand = np.tile(400.0 * zipf / zipf.sum() * E, (2, 1))
+    plan = get_planner("ods").plan(demand, PROF, SPEC, t_limit_s=1e9)
+    cache = ContainerCacheModel.from_plan(
+        plan, PROF, SPEC,
+        config=CacheConfig(packing_degree=3, pack_threshold_frac=0.1))
+    assert cache.packing is not None
+    assert cache.packing.num_packed_experts > 0
+    rep = ServerlessSimulator(
+        PROF, SPEC, seed=7,
+        faults=FaultProfile(cold_start_prob=0.8, warm_pool=2)).run(
+        plan, demand, int(demand.sum()), cache=cache)
+    assert rep.packed_experts == cache.packed_expert_count()
+    assert rep.packed_experts > 0
+    # each seeded packed container booted exactly once
+    assert cache.stats["seeded_boots"] == len(cache.packing.containers)
