@@ -1,0 +1,149 @@
+"""Incremental vs full re-planning over a layer-sparse drifting trace.
+
+Drives the trace control loop twice over the SAME bursty Zipf trace
+whose popularity drift is LAYER-SPARSE (each window only a couple of
+layers shift while the rest hold still) — the fleet regime where
+re-running the full Alg. 1 per-method grid on every re-plan wastes
+almost all of its work on layers whose deployment rows are still right:
+
+* **full** — the historical loop: every feedback re-plan re-solves all
+  ``L`` layers for every comm method (including method 1's global beta
+  search);
+* **incremental** — :class:`~repro.plan.incremental.IncrementalODSPlanner`
+  with drift threshold ``delta``: only layers whose demand moved more
+  than ``delta`` (relative L1) are re-solved; unshifted layers splice
+  their cached rows, and the loop itself skips re-plans when no layer
+  drifted.
+
+Rows report the mean per-re-plan planning wall-clock, total billed
+GB-seconds, and re-plan counts per configuration. Results land
+machine-readable in ``BENCH_replan.json``. ``--smoke`` (CI) additionally
+ASSERTS the acceptance contract: incremental re-planning cuts the mean
+per-window planning wall-clock by >= 3x while the final billed
+GB-seconds stay within 2% of full re-planning.
+
+Pure numpy (no JAX model) so the suite runs in seconds.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/run.py --only replan_bench
+    PYTHONPATH=src:. python benchmarks/replan_bench.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.backends import run_plan_over_trace
+from repro.plan.incremental import IncrementalODSPlanner
+from repro.plan.planner import get_planner
+from repro.predict import OnlinePredictor
+from repro.traces import bursty_arrivals, demand_trace, drift_popularity, \
+    zipf_popularity
+
+# fleet-scale layer count: full re-plans pay L x (methods x beta grid)
+PROF = ModelProfile(
+    num_moe_layers=16, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+# binding payload cap (the paper-regime scaling, see common.py) so the
+# Alg. 2 feedback cases actually fire and force re-plans
+SPEC = PlatformSpec(payload_mb=0.4)
+
+FAULTS = FaultProfile(cold_start_prob=0.8, warm_pool=2)
+
+DELTA = 0.02
+
+# the volatile minority: only these layers' popularity drifts; the other
+# 14 layers' routing holds still (re-solving them is pure waste)
+VOLATILE = (3, 11)
+
+
+def _layer_sparse_trace(steps: int):
+    """Bursty trace where only the ``VOLATILE`` layers take drift steps;
+    every other layer keeps its Zipf popularity for the whole trace."""
+    pop = zipf_popularity(PROF.num_moe_layers, PROF.experts_per_layer,
+                          seed=0)
+    pops = []
+    for nxt in drift_popularity(pop, steps, drift=0.5, seed=2):
+        cur = pop.copy()
+        for layer in VOLATILE:
+            cur[layer] = nxt[layer]
+        pops.append(cur)
+    arr = np.maximum(bursty_arrivals(1.0, steps, burst_mult=8.0, seed=1), 1)
+    arr[2::4] = 8                              # periodic guaranteed bursts
+    return demand_trace(arr, pops, tokens_per_request=200)
+
+
+def _run(trace, planner, *, delta=None):
+    predictor = OnlinePredictor(PROF.num_moe_layers,
+                                PROF.experts_per_layer, 16, decay=0.7)
+    plan = planner.plan(trace.windows[0].demand, PROF, SPEC, t_limit_s=1e9)
+    sim = ServerlessSimulator(PROF, SPEC, seed=7, faults=FAULTS)
+    out = run_plan_over_trace(
+        plan, trace, sim, PROF, SPEC,
+        plan_fn=lambda d, **kw: planner.plan(d, PROF, SPEC, t_limit_s=1e9,
+                                             **kw),
+        predictor=predictor, prewarm="predicted", delta=delta)
+    reps = out["reports"]
+    planning = np.asarray(out["planning_s"], float)
+    n = len(trace)
+    return {
+        "cost": float(sum(r.billed_cost for r in reps)),
+        "replans": int(out["replans"]),
+        "replans_skipped": int(out["replans_skipped"]),
+        "planning_total_s": float(planning.sum()),
+        "planning_mean_s": float(planning.sum() / n),
+        "planning_max_s": float(planning.max()),
+    }
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_replan.json") -> None:
+    steps = 12 if smoke else 32
+    trace = _layer_sparse_trace(steps)
+
+    full = _run(trace, get_planner("ods"))
+    emit("replan_full", full["planning_mean_s"] * 1e6,
+         f"cost=${full['cost']:.6f} replans={full['replans']} "
+         f"plan_total={full['planning_total_s'] * 1e3:.1f}ms")
+
+    inc = _run(trace, IncrementalODSPlanner(delta=DELTA), delta=DELTA)
+    emit("replan_incremental", inc["planning_mean_s"] * 1e6,
+         f"cost=${inc['cost']:.6f} replans={inc['replans']} "
+         f"skipped={inc['replans_skipped']} "
+         f"plan_total={inc['planning_total_s'] * 1e3:.1f}ms")
+
+    speedup = full["planning_mean_s"] / max(inc["planning_mean_s"], 1e-12)
+    parity = abs(inc["cost"] - full["cost"]) / full["cost"]
+    results = {"full": full, "incremental": inc, "delta": DELTA,
+               "windows": steps, "planning_speedup": speedup,
+               "gb_s_gap_frac": parity}
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    emit("replan_speedup", 0.0,
+         f"planning {speedup:.1f}x faster, billed gap "
+         f"{100 * parity:.2f}% -> {out_path}")
+
+    if smoke:
+        # acceptance contract: incremental re-planning cuts mean
+        # per-window planning wall-clock >= 3x at <= 2% billed parity
+        assert full["replans"] >= 2, full["replans"]
+        assert speedup >= 3.0, speedup
+        assert parity <= 0.02, parity
+        print("replan_smoke,0.0,ok")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scales for CI + acceptance asserts")
+    ap.add_argument("--out", default="BENCH_replan.json",
+                    help="machine-readable results path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out_path=args.out)

@@ -53,6 +53,13 @@ class BOResult:
     costs: List[float]
     iterations: int
     converged: bool
+    # warm-start carry-over (defaults keep pre-warm-start constructors
+    # valid): the feedback-limited token range L accumulated over the
+    # run, the per-dimension epsilon vector at termination, and how many
+    # of ``history``'s trials were inherited from a resumed result
+    limit_tokens: Optional[np.ndarray] = None
+    final_eps: Optional[np.ndarray] = None
+    seeded_trials: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -77,8 +84,29 @@ class GPSurrogate:
         X = np.asarray(X, float)
         y = np.asarray(y, float)
         self._ymean = y.mean()
-        K = self._kernel(X, X) + self.noise * np.eye(len(X))
-        self._alpha = np.linalg.solve(K, y - self._ymean)
+        K = self._kernel(X, X)
+        resid = y - self._ymean
+        # Cholesky with escalating jitter: near-duplicate trial vectors
+        # (routine once warm-starting replays a prior window's history)
+        # make the raw RBF kernel numerically singular, and a plain
+        # np.linalg.solve dies with LinAlgError. The RBF kernel is PSD,
+        # so K + jitter*I is PD for any jitter > 0 — escalate until the
+        # factorization goes through.
+        eye = np.eye(len(K))
+        jitter = max(self.noise, 1e-12)
+        for _ in range(8):
+            try:
+                L = np.linalg.cholesky(K + jitter * eye)
+                break
+            except np.linalg.LinAlgError:
+                jitter *= 10.0
+        else:        # pathological K: fall back to the least-squares fit
+            self._alpha = np.linalg.lstsq(K + jitter * eye, resid,
+                                          rcond=None)[0]
+            self._X = X
+            return self
+        self._alpha = np.linalg.solve(
+            L.T, np.linalg.solve(L, resid))
         self._X = X
         return self
 
@@ -222,17 +250,91 @@ class BOOptimizer:
         return z, v
 
     # ------------------------------------------------------------------- run
-    def run(self) -> BOResult:
-        z, v = self._init_variables()
-        history: List[Trial] = []
+    def run(self, resume_from: Optional[BOResult] = None, *,
+            warm_start: Optional[Sequence[Trial]] = None,
+            max_seed_trials: int = 32,
+            eps_resume_floor: float = 0.05) -> BOResult:
+        """One Alg. 2 search; optionally warm-started.
+
+        ``resume_from`` (a prior :class:`BOResult`, e.g. the previous
+        accounting window's search) seeds the GP surrogate and proposal
+        ranking with the prior trial history, restores the
+        feedback-limited token range L, carries the partially-decayed
+        per-dimension epsilon schedule forward (floored at
+        ``eps_resume_floor`` so exploration never fully dies across
+        windows), and starts from the prior best table/cost — a
+        warm-started run can therefore never END with a higher
+        ``best_cost`` than its seed. ``warm_start`` alternatively seeds
+        raw :class:`Trial` history without the epsilon/L carry-over.
+        Only the ``max_seed_trials`` most recent seed trials are kept
+        (plus the seed's best trial) so the O(n^3) GP fit stays bounded
+        across long re-planning sequences. Convergence is judged on the
+        running best INCLUDING the seed, so a window whose traffic
+        barely moved converges after ``lam + 1`` trials instead of
+        re-exploring from scratch.
+        """
+        seed_trials: List[Trial] = []
+        if resume_from is not None and warm_start is not None:
+            raise ValueError("pass resume_from or warm_start, not both")
+        if resume_from is not None:
+            seed_trials = list(resume_from.history)
+        elif warm_start is not None:
+            seed_trials = list(warm_start)
+        for t in seed_trials:
+            if len(t.keys) != self.Q or len(t.values) != self.Q:
+                raise ValueError(
+                    f"warm-start trial has Q={len(t.keys)} dims, "
+                    f"optimizer has Q={self.Q}")
+        if len(seed_trials) > max_seed_trials:
+            best_seed = min(seed_trials, key=lambda t: t.cost)
+            tail = seed_trials[-max_seed_trials:]
+            if best_seed not in tail:
+                tail = [best_seed] + tail[1:]
+            seed_trials = tail
+
+        history: List[Trial] = list(seed_trials)
         costs: List[float] = []
         best_cost = np.inf
         best_table = self.base_table.copy()
         limit_tokens = np.zeros(0, np.int64)
+        eps0 = self.eps0
         converged = False
+        if resume_from is not None:
+            best_cost = float(resume_from.best_cost)
+            best_table = resume_from.best_table.copy()
+            if resume_from.limit_tokens is not None:
+                limit_tokens = np.asarray(resume_from.limit_tokens,
+                                          np.int64).copy()
+            if resume_from.final_eps is not None \
+                    and len(resume_from.final_eps) == self.Q:
+                eps0 = np.clip(np.asarray(resume_from.final_eps, float),
+                               eps_resume_floor, 1.0)
+        elif seed_trials:
+            best_seed = min(seed_trials, key=lambda t: t.cost)
+            best_cost = float(best_seed.cost)
+            best_table = self.base_table.copy()
+            for zq, vq in zip(best_seed.keys.tolist(),
+                              best_seed.values.tolist()):
+                best_table.counts[int(zq)] = float(vq)
+
+        if seed_trials:
+            # the GP and proposal ranking see the seed immediately: the
+            # very first trial of this window is already history-guided
+            if len(history) >= 3:
+                X = np.stack([np.log1p(t.values) for t in history])
+                y = np.array([t.cost for t in history])
+                self.gp.fit(X, y)
+            z, v = self._propose(np.clip(eps0, 0.0, 1.0), history,
+                                 limit_tokens)
+        else:
+            z, v = self._init_variables()
+        # running best including any seed: identical to min(costs[:i+1])
+        # on a cold start, and the convergence signal a warm start needs
+        run_min: List[float] = []
+        eps = np.clip(eps0, 0.0, 1.0)
 
         for tau in range(1, self.max_iters + 1):
-            eps = self.eps0 / (1 + self.rho * tau)            # line 3
+            eps = eps0 / (1 + self.rho * tau)                 # line 3
             table = self.base_table.copy()                    # line 4
             for zq, vq in zip(z.tolist(), v.tolist()):
                 table.counts[int(zq)] = float(vq)
@@ -249,20 +351,25 @@ class BOOptimizer:
             if outcome.cost < best_cost:
                 best_cost = outcome.cost
                 best_table = table
+            run_min.append(best_cost)
             if len(history) >= 3:
                 X = np.stack([np.log1p(t.values) for t in history])
                 y = np.array([t.cost for t in history])
                 self.gp.fit(X, y)
             z, v = self._propose(eps, history, limit_tokens)  # lines 30-31
 
-            # convergence (line 33)
+            # convergence (line 33) on the running best (seed included):
+            # bit-identical to the historical min(costs[:i+1]) window on
+            # a cold start
             if len(costs) > self.lam:
-                window = [min(costs[:i + 1]) for i in
-                          range(len(costs) - self.lam - 1, len(costs))]
+                window = run_min[-(self.lam + 1):]
                 if max(window) - min(window) < self.zeta * max(window[0], 1e-12):
                     converged = True
                     break
 
         return BOResult(best_table=best_table, best_cost=best_cost,
                         history=history, costs=costs,
-                        iterations=len(costs), converged=converged)
+                        iterations=len(costs), converged=converged,
+                        limit_tokens=limit_tokens.copy(),
+                        final_eps=np.asarray(eps, float).copy(),
+                        seeded_trials=len(seed_trials))

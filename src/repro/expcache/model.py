@@ -323,6 +323,52 @@ class ContainerCacheModel:
 
     # --- the simulator/backend surface --------------------------------
 
+    def resize_to_plan(self, plan) -> int:
+        """Re-size the fleet to a RE-PLANNED deployment, preserving
+        resident-expert state.
+
+        The fleet bound and per-expert memory sizes were set by
+        ``from_plan`` at construction; a re-plan that changes replicas
+        or memory would otherwise leave them stale for the rest of the
+        trace — a shrinking re-plan kept billing keep-alive on a fleet
+        the planner no longer pays for, and byte capacity tracked the
+        old memory sizes. Per layer: the container bound becomes the
+        new plan's replica total (plus any surviving packed seeds), the
+        memory matrix is replaced, and fleets over the new bound retire
+        their least valuable containers first (unused before used,
+        lowest policy rank first; pending-boot packed seeds are never
+        dropped — they still owe their one amortized boot). Surviving
+        containers keep their resident weights, ticks, and idle ages.
+
+        Returns the number of containers retired by the shrink.
+        """
+        mem = np.asarray(plan.mem_mb, float)
+        if mem.shape != (self.L, self.E):
+            raise ValueError(
+                f"re-planned geometry {mem.shape} != cache geometry "
+                f"{(self.L, self.E)}")
+        self.mem_mb = mem.copy()
+        bound = np.asarray(plan.replicas, np.int64).sum(axis=1)
+        dropped = 0
+        for layer in range(self.L):
+            packed = sum(1 for c in self.layers[layer] if c.packed)
+            bound[layer] = max(int(bound[layer]) + packed, 1)
+            fleet = self.layers[layer]
+            excess = len(fleet) - int(bound[layer])
+            if excess <= 0:
+                continue
+            victims = sorted(
+                (c for c in fleet if not c.pending_boot),
+                key=lambda c: (c.used, -c.idle_windows,
+                               self.policy.rank_container(layer, c),
+                               c.cid))[:excess]
+            drop = {c.cid for c in victims}
+            self.layers[layer] = [c for c in fleet if c.cid not in drop]
+            self.stats["retired"] += len(victims)
+            dropped += len(victims)
+        self.max_containers = np.maximum(bound, 1)
+        return dropped
+
     def update_forecast(self, forecast: Optional[np.ndarray]) -> None:
         """Feed the predictor policy the demand forecast for the
         upcoming window (no-op for LRU)."""

@@ -20,10 +20,13 @@ __all__ = [
     "ExecutionBackend", "SimulatorBackend", "ServingBackend",
     "register_backend", "get_backend", "available_backends",
     "run_plan_over_trace",
+    "IncrementalODSPlanner", "layer_drift",
 ]
 
 _LOCATIONS = {
     "run_plan_over_trace": "repro.plan.backends",
+    "IncrementalODSPlanner": "repro.plan.incremental",
+    "layer_drift": "repro.plan.incremental",
     "DeploymentPlan": "repro.plan.schema",
     "ExecutionReport": "repro.plan.schema",
     "Workload": "repro.plan.schema",
@@ -51,6 +54,8 @@ if TYPE_CHECKING:   # pragma: no cover — static-analysis-only eager imports
                                      ServingBackend, SimulatorBackend,
                                      available_backends, get_backend,
                                      register_backend)
+    from repro.plan.incremental import (IncrementalODSPlanner,  # noqa: F401
+                                        layer_drift)
     from repro.plan.planner import (BOPlanner, FixedMethodPlanner,  # noqa: F401
                                     LambdaMLPlanner, ODSPlanner, Planner,
                                     RandomPlanner, available_planners,

@@ -205,6 +205,29 @@ class SimulatorBackend:
                                    cache=cache)["reports"]
 
 
+def _plan_fn_extra_kw(plan_fn, delta, planning_budget_s) -> dict:
+    """Keyword arguments an incremental-aware ``plan_fn`` can consume.
+
+    ``delta`` / ``budget_s`` are forwarded only when the callable's
+    signature accepts them (directly or via ``**kwargs``), so plain
+    ``demand -> plan`` callables keep working unmodified."""
+    if delta is None and planning_budget_s is None:
+        return {}
+    import inspect
+    try:
+        params = inspect.signature(plan_fn).parameters
+    except (TypeError, ValueError):
+        return {}
+    var_kw = any(p.kind == inspect.Parameter.VAR_KEYWORD
+                 for p in params.values())
+    kw = {}
+    if delta is not None and (var_kw or "delta" in params):
+        kw["delta"] = delta
+    if planning_budget_s is not None and (var_kw or "budget_s" in params):
+        kw["budget_s"] = planning_budget_s
+    return kw
+
+
 def run_plan_over_trace(plan: DeploymentPlan, trace,
                         sim: ServerlessSimulator, profile: ModelProfile,
                         platform: PlatformSpec, *,
@@ -213,7 +236,9 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
                         alpha: float = 2.0,
                         predictor=None,
                         prewarm: Optional[str] = None,
-                        cache=None) -> dict:
+                        cache=None,
+                        delta: Optional[float] = None,
+                        planning_budget_s: Optional[float] = None) -> dict:
     """Drive a deployment through a demand trace window-by-window.
 
     The single implementation of the trace-feedback loop, shared by
@@ -249,7 +274,27 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
     (``"lru"``/``"predictor"``) to build one from the initial plan. The
     predictor policy is fed each window's demand forecast before the
     window executes, so evictions/swap targets track predicted drift.
-    ``None`` disables (bit-identical to the cache-less loop).
+    ``None`` disables (bit-identical to the cache-less loop). When a
+    re-plan changes replicas or memory, the cache fleet is re-sized to
+    the new plan (:meth:`~repro.expcache.ContainerCacheModel.
+    resize_to_plan`) while preserving resident-expert state — fleet
+    bounds and byte capacity track the DEPLOYED plan, not the initial
+    one.
+
+    **Incremental re-planning** (``delta``, ``planning_budget_s``):
+    with ``delta`` set, each feedback-triggered re-plan first computes
+    per-layer drift (:func:`repro.plan.incremental.layer_drift`)
+    between the serving plan's ``demand`` and the new re-plan demand.
+    If ``delta > 0`` and NO layer drifts beyond it, the re-plan is
+    skipped entirely (the feedback-adjusted replicas still apply).
+    Otherwise ``plan_fn`` runs — and an incremental-aware planner
+    (e.g. :class:`~repro.plan.incremental.IncrementalODSPlanner`, or
+    any callable accepting ``delta=``/``budget_s=`` keywords) receives
+    the threshold and the per-window planning budget so it can re-solve
+    only shifted layers. ``delta=0`` forces a full re-solve on every
+    feedback window — bit-identical to the historical loop — and
+    ``delta=None`` (default) forwards nothing. Per-window planning
+    wall-clock is always recorded under ``"planning_s"``.
 
     NOTE on ``replan_diff`` cost deltas: a plan's ``layer_cost`` is
     always the PLANNER'S estimate at plan time (as everywhere else in
@@ -257,9 +302,12 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
     realized cost of a window lives in its ``ExecutionReport``.
 
     Returns ``{"reports", "plans", "final_plan", "replans",
-    "prediction_errors"}``: one report per window, the plan that served
-    each window, the plan left deployed, how many windows triggered a
-    re-plan, and one error dict per forecasted window.
+    "prediction_errors", "planning_s", "replans_skipped"}``: one report
+    per window, the plan that served each window, the plan left
+    deployed, how many windows triggered a re-plan, one error dict per
+    forecasted window, per-window planning seconds (0.0 where no
+    planner ran), and how many feedback windows skipped re-planning on
+    sub-``delta`` drift.
     """
     if prewarm not in (None, "predicted", "oracle"):
         raise ValueError(f"unknown prewarm mode {prewarm!r}")
@@ -270,12 +318,17 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
         from repro.expcache import CacheConfig, ContainerCacheModel
         cache = ContainerCacheModel.from_plan(
             plan, profile, platform, config=CacheConfig(policy=cache))
+    plan_kw = _plan_fn_extra_kw(plan_fn, delta, planning_budget_s) \
+        if plan_fn is not None else {}
     reports: List[ExecutionReport] = []
     plans: List[DeploymentPlan] = []
     prediction_errors: List[dict] = []
+    planning_s: List[float] = []
     replans = 0
+    replans_skipped = 0
     cur = plan
-    for w in trace.windows:
+    windows = list(trace.windows)
+    for i, w in enumerate(windows):
         plans.append(cur)
         forecast = predictor.forecast_demand(w.num_tokens) \
             if predictor is not None else None
@@ -298,6 +351,7 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
             predictor.update_demand(rep.real_demand, int(w.num_tokens))
             predictor.advance()
         if plan_fn is None:
+            planning_s.append(0.0)
             continue
         adjusted, rho_case, _ = apply_failure_feedback(
             cur, rep.real_demand, profile, platform, alpha=alpha)
@@ -308,18 +362,44 @@ def run_plan_over_trace(plan: DeploymentPlan, trace,
             # else from the oracle's observed demand
             replan_demand = rep.real_demand
             if predictor is not None:
-                f = predictor.forecast_demand(w.num_tokens)
+                # the re-plan serves the UPCOMING window: scale the
+                # forecast rates to the next window's token count (the
+                # just-served w.num_tokens is already history after
+                # advance()); the last window has no successor, so its
+                # own count is the only scale left
+                nxt = int(windows[i + 1].num_tokens) \
+                    if i + 1 < len(windows) else int(w.num_tokens)
+                f = predictor.forecast_demand(nxt)
                 if f is not None:
                     replan_demand = f
-            fresh = plan_fn(replan_demand)
+            if delta is not None and delta > 0:
+                from repro.plan.incremental import layer_drift
+                drift = layer_drift(cur.demand, replan_demand)
+                if not (drift > delta).any():
+                    # every layer's demand is within delta of what the
+                    # serving plan was solved for: keep it (with the
+                    # feedback-boosted replicas), spend no planning time
+                    replans_skipped += 1
+                    planning_s.append(0.0)
+                    cur = adjusted
+                    continue
+            t_plan = time.perf_counter()
+            fresh = plan_fn(replan_demand, **plan_kw)
+            planning_s.append(time.perf_counter() - t_plan)
             fresh.replicas = np.maximum(fresh.replicas, adjusted.replicas)
             fresh.metadata["replan_diff"] = plan_diff(cur, fresh)
             cur = fresh
             replans += 1
+            if cache is not None:
+                # a re-plan changed replicas/memory: the cache fleet's
+                # bounds and byte capacity must track the DEPLOYED plan
+                cache.resize_to_plan(cur)
         else:
+            planning_s.append(0.0)
             cur = adjusted
     return {"reports": reports, "plans": plans, "final_plan": cur,
-            "replans": replans, "prediction_errors": prediction_errors}
+            "replans": replans, "prediction_errors": prediction_errors,
+            "planning_s": planning_s, "replans_skipped": replans_skipped}
 
 
 class ServingBackend:

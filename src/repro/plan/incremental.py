@@ -1,0 +1,158 @@
+"""Warm-started incremental re-planning for the trace control loop.
+
+``run_plan_over_trace`` re-runs the full Alg. 1/2 search on every
+re-plan — fine for one model, unaffordable for a fleet. This module
+makes the ODS half of a re-plan incremental:
+
+* :func:`layer_drift` scores how far each layer's demand has moved
+  since its deployment row was last solved (relative L1 per layer);
+* :class:`IncrementalODSPlanner` caches the per-method
+  :class:`~repro.core.deployment.MethodSolution` rows of its last solve
+  and, on the next ``plan()``, re-solves ONLY the layers whose drift
+  exceeds ``delta`` — splicing the cached rows for unshifted layers —
+  before running the cheap ODS mixing step over the full layer set.
+  A ``planning_budget_s`` wall-clock cap bounds per-window planning
+  latency: shifted layers are re-solved in descending-drift order and
+  once the budget is exhausted the remaining layers keep their cached
+  rows (the worst-drifted layer is always re-solved).
+
+The per-method subproblem is separable per layer for methods 2 and 3
+(``beta`` is fixed at 1), so spliced rows are bit-identical to a full
+re-solve of the same demand. Method 1's pipeline degree ``beta`` is
+searched globally across layers; an incremental re-solve pins it to the
+cached solve's beta so spliced rows stay mutually coherent — a full
+re-plan (``delta=0``, or a fresh planner) re-opens the beta search.
+
+``delta <= 0`` (or a geometry change) always triggers a full re-solve
+of every layer, making the ``delta=0`` incremental path bit-identical
+to the historical full re-planning loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import comm
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.deployment import MethodSolution, ods, solve_fixed_method
+from repro.plan.schema import DeploymentPlan
+
+INF = float("inf")
+
+
+def layer_drift(old: np.ndarray, new: np.ndarray) -> np.ndarray:
+    """(L,) relative per-layer demand drift: ``|new - old|_1 / |old|_1``.
+
+    ``old`` is the demand each layer's deployment row was last solved
+    at; a layer whose traffic did not move scores exactly 0.0. Layers
+    with no prior traffic score their full new demand (denominator
+    floored), so cold layers always register as shifted.
+    """
+    old = np.asarray(old, float)
+    new = np.asarray(new, float)
+    assert old.shape == new.shape, (old.shape, new.shape)
+    denom = np.maximum(np.abs(old).sum(axis=1), 1e-12)
+    return np.abs(new - old).sum(axis=1) / denom
+
+
+class IncrementalODSPlanner:
+    """Alg. 1 with per-layer solution reuse across ``plan()`` calls.
+
+    Stateful: each instance carries the per-method solutions and the
+    per-layer demand they were solved at. The first ``plan()`` (or any
+    call with ``delta <= 0`` / a changed geometry) performs the exact
+    full solve of :class:`~repro.plan.planner.ODSPlanner`; subsequent
+    calls re-solve only drifted layers. ``last_info`` and the emitted
+    plan's ``metadata["incremental"]`` record what was reused.
+    """
+
+    name = "ods-incremental"
+
+    def __init__(self, methods: Sequence[int] = comm.METHODS, *,
+                 delta: float = 0.05,
+                 planning_budget_s: Optional[float] = None):
+        self.methods = tuple(methods)
+        self.delta = float(delta)
+        self.planning_budget_s = planning_budget_s
+        self._solutions: Optional[Dict[int, MethodSolution]] = None
+        self._solved_demand: Optional[np.ndarray] = None
+        self.last_info: Dict = {}
+
+    def reset(self) -> None:
+        """Drop the cached solutions (next ``plan()`` solves fully)."""
+        self._solutions = None
+        self._solved_demand = None
+
+    # ------------------------------------------------------------- solving
+    def _full_solve(self, demand: np.ndarray, profile: ModelProfile,
+                    platform: PlatformSpec) -> Dict[int, MethodSolution]:
+        return {a: solve_fixed_method(a, demand, profile, platform)
+                for a in self.methods}
+
+    def _resolve_layer(self, layer: int, demand: np.ndarray,
+                       profile: ModelProfile,
+                       platform: PlatformSpec) -> None:
+        """Re-solve one layer's per-method rows and splice them into the
+        cached solutions (method-1 beta pinned to the cached solve)."""
+        row = demand[layer:layer + 1]
+        for a in self.methods:
+            cached = self._solutions[a]
+            beta_c = [cached.beta] if a == 1 else None
+            sub = solve_fixed_method(a, row, profile, platform,
+                                     beta_candidates=beta_c)
+            cached.mem_mb[layer] = sub.mem_mb[0]
+            cached.replicas[layer] = sub.replicas[0]
+            cached.layer_cost[layer] = sub.layer_cost[0]
+            cached.layer_latency[layer] = sub.layer_latency[0]
+            cached.feasible[layer] = sub.feasible[0]
+        self._solved_demand[layer] = demand[layer]
+
+    def plan(self, demand: np.ndarray, profile: ModelProfile,
+             platform: PlatformSpec, *, t_limit_s: float = INF,
+             seed: int = 0, delta: Optional[float] = None,
+             budget_s: Optional[float] = None) -> DeploymentPlan:
+        t0 = time.perf_counter()
+        demand = np.asarray(demand, float)
+        L = demand.shape[0]
+        delta = self.delta if delta is None else float(delta)
+        budget = self.planning_budget_s if budget_s is None else budget_s
+
+        full = (self._solutions is None or delta <= 0.0
+                or self._solved_demand.shape != demand.shape)
+        if full:
+            self._solutions = self._full_solve(demand, profile, platform)
+            self._solved_demand = demand.copy()
+            resolved = list(range(L))
+            reused = []
+            budget_hit = False
+        else:
+            drift = layer_drift(self._solved_demand, demand)
+            shifted = np.nonzero(drift > delta)[0]
+            shifted = shifted[np.argsort(-drift[shifted], kind="stable")]
+            resolved = []
+            budget_hit = False
+            for layer in shifted.tolist():
+                if budget is not None and resolved \
+                        and time.perf_counter() - t0 > budget:
+                    budget_hit = True
+                    break           # remaining layers keep cached rows
+                self._resolve_layer(layer, demand, profile, platform)
+                resolved.append(layer)
+            reused = [int(e) for e in range(L) if e not in resolved]
+
+        plan = ods(self._solutions, demand, profile, platform,
+                   t_limit_s=t_limit_s)
+        plan.planner = self.name
+        planning_s = time.perf_counter() - t0
+        self.last_info = {
+            "planning_s": planning_s,
+            "full": bool(full),
+            "resolved_layers": [int(e) for e in resolved],
+            "reused_layers": len(reused),
+            "budget_hit": budget_hit,
+            "delta": float(delta),
+        }
+        plan.metadata["incremental"] = dict(self.last_info)
+        return plan

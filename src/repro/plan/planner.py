@@ -132,6 +132,15 @@ class BOPlanner:
     production plans. After BO converges, the best table's predictor
     re-estimates demand over ``tokens`` (when given) and the ``inner``
     planner produces the final plan.
+
+    **Warm-starting (default on).** Repeated ``plan()`` calls on the
+    same planner instance — the shape of a re-planning trace loop —
+    automatically thread ``last_result`` into the next search via
+    ``BOOptimizer.run(resume_from=...)``: the GP surrogate, epsilon
+    schedule, and feedback set L all carry over, so a window's search
+    refines the previous window's instead of restarting cold.
+    ``warm_start=False`` restores the historical independent-run
+    behavior. The first ``plan()`` call is identical either way.
     """
 
     name = "bo"
@@ -139,7 +148,8 @@ class BOPlanner:
     def __init__(self, table=None, eval_fn=None, *, top_k: int = 1,
                  demand_mode: str = "expected",
                  tokens: Optional[np.ndarray] = None,
-                 inner: Optional[Planner] = None, **bo_kwargs):
+                 inner: Optional[Planner] = None,
+                 warm_start: bool = True, **bo_kwargs):
         if table is None or eval_fn is None:
             raise ValueError(
                 "BOPlanner needs a profiled KVTable and an eval_fn: "
@@ -152,17 +162,26 @@ class BOPlanner:
         self.demand_mode = demand_mode
         self.tokens = tokens
         self.inner = inner or ODSPlanner()
+        self.warm_start = warm_start
         self.bo_kwargs = dict(bo_kwargs)
         self.last_result: Optional[BOResult] = None
+        self._plan_calls = 0
 
     def plan(self, demand: np.ndarray, profile: ModelProfile,
              platform: PlatformSpec, *, t_limit_s: float = INF,
              seed: int = 0) -> DeploymentPlan:
         from repro.core.predictor import ExpertPredictor
         kw = dict(self.bo_kwargs)
-        kw.setdefault("seed", seed)
-        res = BOOptimizer(self.table, self.eval_fn, **kw).run()
+        resume = self.last_result if self.warm_start else None
+        # resumed searches get a fresh exploration stream per window
+        # (same seed would replay the previous window's proposals);
+        # the first call keeps the historical seed exactly
+        kw.setdefault("seed", seed + (self._plan_calls
+                                      if resume is not None else 0))
+        res = BOOptimizer(self.table, self.eval_fn,
+                          **kw).run(resume_from=resume)
         self.last_result = res
+        self._plan_calls += 1
         if self.tokens is not None:
             pred = ExpertPredictor(res.best_table, top_k=self.top_k).fit()
             demand = pred.predict_demand(self.tokens, mode=self.demand_mode)
@@ -170,7 +189,9 @@ class BOPlanner:
                                t_limit_s=t_limit_s, seed=seed)
         plan.metadata["bo"] = {"best_cost": res.best_cost,
                                "iterations": res.iterations,
-                               "converged": res.converged}
+                               "converged": res.converged,
+                               "warm_started": resume is not None,
+                               "seeded_trials": res.seeded_trials}
         return _tag(plan, self.name)
 
 
@@ -208,6 +229,12 @@ def _cache_aware_planner(**kwargs) -> Planner:
     return CacheAwarePlanner(**kwargs)
 
 
+def _incremental_planner(**kwargs) -> Planner:
+    # lazy for symmetry with the other satellite planners
+    from repro.plan.incremental import IncrementalODSPlanner
+    return IncrementalODSPlanner(**kwargs)
+
+
 register_planner("ods", ODSPlanner)
 for _m in comm.METHODS:
     register_planner(f"fixed-{_m}",
@@ -216,3 +243,4 @@ register_planner("lambdaml", LambdaMLPlanner)
 register_planner("random", RandomPlanner)
 register_planner("bo", BOPlanner)
 register_planner("ods-cached", _cache_aware_planner)
+register_planner("ods-incremental", _incremental_planner)

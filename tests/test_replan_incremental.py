@@ -1,0 +1,455 @@
+"""Warm-started incremental re-planning: BO resume, per-layer ODS reuse,
+and the trace-loop staleness fixes.
+
+Tentpole coverage:
+
+* ``BOOptimizer.run(resume_from=...)`` — determinism (same seed + same
+  resume history => bit-identical search), monotonicity (a warm-started
+  run never ENDS with a higher ``best_cost`` than its seed), and the
+  ``BOPlanner`` threading that turns consecutive ``plan()`` calls into
+  a warm-start chain;
+* ``IncrementalODSPlanner`` — ``delta=0`` and unchanged-demand calls are
+  bit-identical to the full Alg. 1 solve; a single-layer shift re-solves
+  exactly that layer yet matches the full re-solve; ``budget_s`` caps
+  planning but always re-solves the worst-drifted layer;
+* the ``run_plan_over_trace`` satellite fixes — GP Cholesky jitter under
+  duplicate trials, cache-fleet resize on re-plan, and the re-plan
+  forecast scaling to the NEXT window's token count.
+"""
+import numpy as np
+import pytest
+
+from repro.core.bo import BOOptimizer, EvalOutcome, GPSurrogate, Trial
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.core.table import KVTable, pack_key
+from repro.expcache import ContainerCacheModel
+from repro.plan.backends import run_plan_over_trace
+from repro.plan.incremental import IncrementalODSPlanner, layer_drift
+from repro.plan.planner import BOPlanner, ODSPlanner, get_planner
+from repro.predict import OnlinePredictor
+from repro.traces import (bursty_arrivals, demand_trace, drift_popularity,
+                          zipf_popularity)
+
+pytestmark = pytest.mark.timeout(300)
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4, intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+FAULTS = FaultProfile(cold_start_prob=0.8, warm_pool=2)
+
+
+def _demand(L=4, E=8, seed=0, scale=400):
+    rng = np.random.default_rng(seed)
+    zipf = (1.0 / np.arange(1, E + 1)) ** 1.2
+    d = scale * zipf / zipf.sum() * E
+    return np.stack([rng.permutation(d) for _ in range(L)])
+
+
+def _profiled_table(seed=0) -> KVTable:
+    t = KVTable(num_layers=2, num_experts=4, vocab_size=32)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 32, 400)
+    t.observe_tokens(toks)
+    for tok in toks:
+        t.set_entry(0, int(tok), 0, int(tok), int(tok) % 4,
+                    t.get_entry(0, int(tok), 0, int(tok), int(tok) % 4) + 1)
+    return t
+
+
+def _toy_eval_fn(target_key):
+    def fn(table: KVTable) -> EvalOutcome:
+        v = table.counts.get(target_key, 0.0)
+        return EvalOutcome(cost=1.0 / (1.0 + v), rho_case=3,
+                           problem_token_ids=np.zeros(0, np.int64),
+                           demand_pred=np.zeros((1, 2)),
+                           demand_real=np.zeros((1, 2)))
+    return fn
+
+
+def _bo(seed=0, **kw):
+    kw.setdefault("Q", 16)
+    kw.setdefault("max_iters", 8)
+    key = int(pack_key(0, 3, 0, 3, 1))
+    return BOOptimizer(_profiled_table(), _toy_eval_fn(key), seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# GP surrogate: duplicate trials must not kill the fit
+# ---------------------------------------------------------------------------
+
+def test_gp_fit_survives_duplicate_trials():
+    """REGRESSION: near-duplicate trial vectors make the raw RBF kernel
+    singular; with zero observation noise the old ``np.linalg.solve``
+    path raised LinAlgError. Warm-started histories replay prior trials,
+    so exact duplicates are the NORM, not a corner case."""
+    gp = GPSurrogate(noise=0.0)
+    X = np.array([[1.0, 2.0], [1.0, 2.0], [1.0, 2.0], [3.0, 1.0]])
+    y = np.array([5.0, 5.0, 5.0, 2.0])
+    gp.fit(X, y)            # must not raise
+    pred = gp.predict(X)
+    assert np.isfinite(pred).all()
+    # the (consistent) duplicated observation is essentially interpolated
+    assert abs(pred[0] - 5.0) < 0.1
+
+
+def test_bo_run_survives_duplicated_seed_history():
+    r1 = _bo(seed=3).run()
+    dup = list(r1.history) + [Trial(t.keys.copy(), t.values.copy(), t.cost)
+                              for t in r1.history]
+    r1.history = dup
+    r2 = _bo(seed=4).run(resume_from=r1)     # GP fits duplicated rows
+    assert np.isfinite(r2.best_cost)
+    assert r2.best_cost <= r1.best_cost
+
+
+# ---------------------------------------------------------------------------
+# warm-started BO
+# ---------------------------------------------------------------------------
+
+def test_warm_start_determinism():
+    """Same seed + same resume history => bit-identical warm search."""
+    r1 = _bo(seed=5).run()
+    a = _bo(seed=6).run(resume_from=r1)
+    b = _bo(seed=6).run(resume_from=r1)
+    assert a.costs == b.costs
+    assert a.best_cost == b.best_cost
+    assert a.seeded_trials == b.seeded_trials > 0
+    for t1, t2 in zip(a.history, b.history):
+        np.testing.assert_array_equal(t1.keys, t2.keys)
+        np.testing.assert_array_equal(t1.values, t2.values)
+        assert t1.cost == t2.cost
+    assert dict(a.best_table.counts) == dict(b.best_table.counts)
+
+
+def test_warm_start_never_worse_than_seed():
+    r1 = _bo(seed=0).run()
+    for s in (1, 2, 3):
+        r2 = _bo(seed=s).run(resume_from=r1)
+        assert r2.best_cost <= r1.best_cost
+        assert r2.seeded_trials == len(r1.history[-32:]) or \
+            r2.seeded_trials == len(r1.history)
+
+
+def test_warm_start_carries_eps_and_limit_tokens():
+    r1 = _bo(seed=0).run()
+    assert r1.final_eps is not None and len(r1.final_eps) == 16
+    assert r1.limit_tokens is not None
+    r2 = _bo(seed=1).run(resume_from=r1)
+    # epsilon carried over (floored), never re-inflated to eps0=0.6
+    assert (r2.final_eps <= r1.final_eps + 1e-12).all()
+
+
+def test_warm_start_q_mismatch_raises():
+    r1 = _bo(seed=0, Q=16).run()
+    with pytest.raises(ValueError, match="Q="):
+        _bo(seed=1, Q=8).run(resume_from=r1)
+    with pytest.raises(ValueError, match="not both"):
+        _bo(seed=1).run(resume_from=r1, warm_start=r1.history)
+
+
+def test_boplanner_threads_last_result_across_plans():
+    key = int(pack_key(0, 3, 0, 3, 1))
+    demand = _demand()
+    p = BOPlanner(table=_profiled_table(), eval_fn=_toy_eval_fn(key),
+                  Q=16, max_iters=6)
+    plan1 = p.plan(demand, PROF, SPEC, t_limit_s=1e9)
+    assert plan1.metadata["bo"]["warm_started"] is False
+    assert plan1.metadata["bo"]["seeded_trials"] == 0
+    plan2 = p.plan(demand, PROF, SPEC, t_limit_s=1e9)
+    assert plan2.metadata["bo"]["warm_started"] is True
+    assert plan2.metadata["bo"]["seeded_trials"] > 0
+    assert plan2.metadata["bo"]["best_cost"] \
+        <= plan1.metadata["bo"]["best_cost"]
+
+    cold = BOPlanner(table=_profiled_table(), eval_fn=_toy_eval_fn(key),
+                     Q=16, max_iters=6, warm_start=False)
+    cold.plan(demand, PROF, SPEC, t_limit_s=1e9)
+    plan2c = cold.plan(demand, PROF, SPEC, t_limit_s=1e9)
+    assert plan2c.metadata["bo"]["warm_started"] is False
+
+
+def test_boplanner_first_plan_matches_historical_cold_run():
+    """Warm-start default must not perturb the FIRST search: same seed,
+    same proposals as an independent cold BOOptimizer run."""
+    key = int(pack_key(0, 3, 0, 3, 1))
+    p = BOPlanner(table=_profiled_table(), eval_fn=_toy_eval_fn(key),
+                  Q=16, max_iters=6)
+    plan1 = p.plan(_demand(), PROF, SPEC, t_limit_s=1e9, seed=9)
+    ref = BOOptimizer(_profiled_table(), _toy_eval_fn(key), Q=16,
+                      max_iters=6, seed=9).run()
+    assert plan1.metadata["bo"]["best_cost"] == ref.best_cost
+    assert p.last_result.costs == ref.costs
+
+
+# ---------------------------------------------------------------------------
+# incremental ODS planning
+# ---------------------------------------------------------------------------
+
+def _plans_equal(a, b):
+    np.testing.assert_array_equal(a.method, b.method)
+    np.testing.assert_array_equal(a.mem_mb, b.mem_mb)
+    np.testing.assert_array_equal(a.replicas, b.replicas)
+    np.testing.assert_array_equal(a.layer_cost, b.layer_cost)
+    np.testing.assert_array_equal(a.layer_latency, b.layer_latency)
+    assert a.beta == b.beta
+
+
+def test_layer_drift_zero_for_identical_rows():
+    d = _demand()
+    drift = layer_drift(d, d)
+    np.testing.assert_array_equal(drift, np.zeros(d.shape[0]))
+    d2 = d.copy()
+    d2[1] *= 2.0
+    drift = layer_drift(d, d2)
+    assert drift[1] == pytest.approx(1.0)
+    assert drift[0] == drift[2] == drift[3] == 0.0
+
+
+def test_incremental_delta_zero_bit_identical_to_full():
+    d = _demand()
+    inc = IncrementalODSPlanner(delta=0.0)
+    full = ODSPlanner()
+    for seed in (0, 1):
+        dd = _demand(seed=seed)
+        _plans_equal(inc.plan(dd, PROF, SPEC, t_limit_s=1e9),
+                     full.plan(dd, PROF, SPEC, t_limit_s=1e9))
+        assert inc.last_info["full"] is True
+
+
+def test_incremental_unchanged_demand_reuses_every_layer():
+    d = _demand()
+    inc = IncrementalODSPlanner(delta=0.05)
+    p1 = inc.plan(d, PROF, SPEC, t_limit_s=1e9)
+    p2 = inc.plan(d, PROF, SPEC, t_limit_s=1e9)
+    assert inc.last_info["full"] is False
+    assert inc.last_info["resolved_layers"] == []
+    assert inc.last_info["reused_layers"] == PROF.num_moe_layers
+    _plans_equal(p1, p2)
+
+
+def test_incremental_single_layer_shift_matches_full_resolve():
+    d = _demand()
+    inc = IncrementalODSPlanner(delta=0.05)
+    inc.plan(d, PROF, SPEC, t_limit_s=1e9)
+    d2 = d.copy()
+    d2[2] *= 2.0
+    p_inc = inc.plan(d2, PROF, SPEC, t_limit_s=1e9)
+    assert inc.last_info["resolved_layers"] == [2]
+    assert inc.last_info["reused_layers"] == 3
+    p_full = ODSPlanner().plan(d2, PROF, SPEC, t_limit_s=1e9)
+    _plans_equal(p_inc, p_full)
+
+
+def test_incremental_budget_always_resolves_worst_layer():
+    d = _demand()
+    inc = IncrementalODSPlanner(delta=0.05)
+    inc.plan(d, PROF, SPEC, t_limit_s=1e9)
+    d2 = d.copy()
+    d2[0] *= 1.5
+    d2[1] *= 4.0            # worst drift
+    d2[3] *= 2.0
+    inc.plan(d2, PROF, SPEC, t_limit_s=1e9, budget_s=0.0)
+    assert inc.last_info["budget_hit"] is True
+    assert inc.last_info["resolved_layers"] == [1]   # descending drift
+    # the skipped layers re-solve on the next call once the budget allows
+    inc.plan(d2, PROF, SPEC, t_limit_s=1e9)
+    assert sorted(inc.last_info["resolved_layers"]) == [0, 3]
+    _plans_equal(inc.plan(d2, PROF, SPEC, t_limit_s=1e9, delta=0.0),
+                 ODSPlanner().plan(d2, PROF, SPEC, t_limit_s=1e9))
+
+
+def test_incremental_planner_registered():
+    p = get_planner("ods-incremental", delta=0.1)
+    assert isinstance(p, IncrementalODSPlanner)
+    assert p.delta == 0.1
+
+
+# ---------------------------------------------------------------------------
+# trace-loop integration: drift gate, cache resize, forecast scale
+# ---------------------------------------------------------------------------
+
+def _bursty_trace(steps=6, tokens_per_request=200):
+    pop = zipf_popularity(PROF.num_moe_layers, PROF.experts_per_layer,
+                          seed=0)
+    arr = np.maximum(bursty_arrivals(1.0, steps, burst_mult=8.0, seed=1), 1)
+    arr[3] = 8                                 # guaranteed burst window
+    return demand_trace(arr, drift_popularity(pop, steps, drift=0.35,
+                                              seed=2),
+                        tokens_per_request=tokens_per_request)
+
+
+def _loop(trace, spec, plan_fn, **kw):
+    predictor = OnlinePredictor(PROF.num_moe_layers,
+                                PROF.experts_per_layer, 16, decay=0.7)
+    plan = get_planner("ods").plan(trace.windows[0].demand, PROF, spec,
+                                   t_limit_s=1e9)
+    return run_plan_over_trace(
+        plan, trace, ServerlessSimulator(PROF, spec, seed=7, faults=FAULTS),
+        PROF, spec, plan_fn=plan_fn, predictor=predictor,
+        prewarm="predicted", **kw)
+
+
+def test_loop_delta_zero_matches_delta_none_bitwise():
+    """``delta=0`` (gate disabled, full re-solve) must be bit-identical
+    to the historical ``delta=None`` loop."""
+    trace = _bursty_trace()
+    spec = PlatformSpec(payload_mb=0.4)
+
+    def plan_fn(d, **kw):
+        return get_planner("ods").plan(d, PROF, spec, t_limit_s=1e9)
+
+    a = _loop(trace, spec, plan_fn)
+    b = _loop(trace, spec, plan_fn, delta=0.0)
+    assert a["replans"] == b["replans"] >= 1
+    assert b["replans_skipped"] == 0
+    assert len(a["planning_s"]) == len(trace)
+    for ra, rb in zip(a["reports"], b["reports"]):
+        assert ra.to_dict() == rb.to_dict()
+    np.testing.assert_array_equal(a["final_plan"].replicas,
+                                  b["final_plan"].replicas)
+
+
+def test_loop_drift_gate_skips_replans_entirely():
+    trace = _bursty_trace()
+    spec = PlatformSpec(payload_mb=0.4)
+    calls = []
+
+    def plan_fn(d, **kw):
+        calls.append(d)
+        return get_planner("ods").plan(d, PROF, spec, t_limit_s=1e9)
+
+    out = _loop(trace, spec, plan_fn, delta=1e9)   # nothing ever drifts far
+    assert out["replans"] == 0 and not calls
+    assert out["replans_skipped"] >= 1
+    assert all(t == 0.0 for t in out["planning_s"])
+
+
+def test_loop_records_planning_latency_per_window():
+    trace = _bursty_trace()
+    spec = PlatformSpec(payload_mb=0.4)
+
+    def plan_fn(d, **kw):
+        return get_planner("ods").plan(d, PROF, spec, t_limit_s=1e9)
+
+    out = _loop(trace, spec, plan_fn)
+    assert len(out["planning_s"]) == len(trace)
+    assert sum(t > 0 for t in out["planning_s"]) == out["replans"] >= 1
+
+
+def test_replan_forecast_scales_to_next_window_tokens():
+    """REGRESSION: the post-feedback re-plan forecast was scaled by the
+    JUST-SERVED window's token count even though the fresh plan serves
+    the UPCOMING window. Pin: every re-plan-site forecast call uses the
+    next window's count (fall back to the current on the last window)."""
+    pop = zipf_popularity(PROF.num_moe_layers, PROF.experts_per_layer,
+                          seed=0)
+    # all-distinct token counts so call sites are unambiguous
+    arr = np.array([2, 8, 3, 9, 4, 10])
+    trace = demand_trace(arr, drift_popularity(pop, 6, drift=0.35, seed=2),
+                         tokens_per_request=100)
+    spec = PlatformSpec(payload_mb=0.4)
+
+    class SpyPredictor(OnlinePredictor):
+        calls = []
+
+        def forecast_demand(self, num_tokens):
+            self.calls.append(int(num_tokens))
+            return super().forecast_demand(num_tokens)
+
+    predictor = SpyPredictor(PROF.num_moe_layers, PROF.experts_per_layer,
+                             16, decay=0.7)
+    plan = get_planner("ods").plan(trace.windows[0].demand, PROF, spec,
+                                   t_limit_s=1e9)
+    out = run_plan_over_trace(
+        plan, trace, ServerlessSimulator(PROF, spec, seed=7, faults=FAULTS),
+        PROF, spec,
+        plan_fn=lambda d, **kw: get_planner("ods").plan(d, PROF, spec,
+                                                        t_limit_s=1e9),
+        predictor=predictor, prewarm="predicted")
+    assert out["replans"] >= 1
+    # planning time is only spent at re-plan windows: reconstruct the
+    # expected forecast-call sequence from the per-window latency record
+    replanned_at = [i for i, t in enumerate(out["planning_s"]) if t > 0]
+    assert len(replanned_at) == out["replans"]
+    expected = []
+    toks = [int(w.num_tokens) for w in trace.windows]
+    for i in range(len(trace)):
+        expected.append(toks[i])                    # start-of-window call
+        if i in replanned_at:
+            expected.append(toks[i + 1] if i + 1 < len(toks) else toks[i])
+    assert predictor.calls == expected
+
+
+def test_replan_resizes_cache_fleet():
+    """REGRESSION: the cache fleet kept the INITIAL plan's container
+    bounds and memory sizes after a re-plan. A replication-shrinking
+    re-plan must shrink the billed fleet."""
+    rng = np.random.default_rng(0)
+    big = rng.uniform(200, 800, size=(4, 8))
+    plan_big = get_planner("ods").plan(big, PROF, SPEC, t_limit_s=1e9)
+    cache = ContainerCacheModel.from_plan(plan_big, PROF, SPEC)
+    for layer in range(4):
+        for e in range(8):
+            cache._admit(layer, e)
+    n0 = cache.num_containers()
+
+    import copy
+    plan_small = copy.deepcopy(plan_big)
+    plan_small.replicas = plan_small.replicas.copy()
+    plan_small.replicas[:, 4:] = 0
+    dropped = cache.resize_to_plan(plan_small)
+    assert dropped == 16 and cache.stats["retired"] == 16
+    assert cache.num_containers() == n0 - dropped
+    np.testing.assert_array_equal(
+        cache.max_containers,
+        np.maximum(plan_small.replicas.sum(axis=1), 1))
+    np.testing.assert_array_equal(cache.mem_mb, plan_small.mem_mb)
+    # survivors keep their resident weights (state preserved, not rebuilt)
+    assert all(c.residents for fleet in cache.layers for c in fleet)
+
+
+def test_loop_replan_keeps_cache_bounds_in_sync():
+    trace = _bursty_trace()
+    spec = PlatformSpec(payload_mb=0.4)
+    plan0 = get_planner("ods").plan(trace.windows[0].demand, PROF, spec,
+                                    t_limit_s=1e9)
+    cache = ContainerCacheModel.from_plan(plan0, PROF, spec)
+    predictor = OnlinePredictor(PROF.num_moe_layers,
+                                PROF.experts_per_layer, 16, decay=0.7)
+    out = run_plan_over_trace(
+        plan0, trace, ServerlessSimulator(PROF, spec, seed=7, faults=FAULTS),
+        PROF, spec,
+        plan_fn=lambda d, **kw: get_planner("ods").plan(d, PROF, spec,
+                                                        t_limit_s=1e9),
+        predictor=predictor, prewarm="predicted", cache=cache)
+    assert out["replans"] >= 1
+    packed = np.array([sum(1 for c in fleet if c.packed)
+                       for fleet in cache.layers])
+    np.testing.assert_array_equal(
+        cache.max_containers,
+        np.maximum(out["final_plan"].replicas.sum(axis=1) + packed, 1))
+    np.testing.assert_array_equal(cache.mem_mb, out["final_plan"].mem_mb)
+
+
+def test_resize_rejects_geometry_change():
+    rng = np.random.default_rng(0)
+    plan = get_planner("ods").plan(rng.uniform(100, 500, (4, 8)), PROF,
+                                   SPEC, t_limit_s=1e9)
+    cache = ContainerCacheModel.from_plan(plan, PROF, SPEC)
+    other = get_planner("ods").plan(rng.uniform(100, 500, (2, 8)),
+                                    ModelProfile(
+                                        num_moe_layers=2,
+                                        experts_per_layer=8,
+                                        expert_param_bytes=28e6,
+                                        token_in_bytes=3072.0,
+                                        token_out_bytes=3072.0,
+                                        u_ref_s=2e-4,
+                                        intermediate_bytes=4e6,
+                                        nonmoe_param_bytes=9e6),
+                                    SPEC, t_limit_s=1e9)
+    with pytest.raises(ValueError, match="geometry"):
+        cache.resize_to_plan(other)
