@@ -1,0 +1,136 @@
+"""Multi-tenant consolidation: one shared fleet vs N independent fleets.
+
+A bursty latency-bound tenant (p99 target) and a diurnal cost-bound
+tenant share one expert pool. The shared configuration plans the POOLED
+demand through ``MultiTenantPlanner`` (joint SLO = the tightest
+latency-bound tenant's p99 target, per-tenant cache residency quotas,
+per-tenant billing attribution); the baseline plans, simulates, and
+bills each tenant on its OWN fleet (``run_tenants_independently``, with
+the concurrent-fleet wall-clock merge).
+
+Rows report total billed GB-seconds, the per-tenant p99 per-window
+latency, and the planner's consolidation-savings estimate. Results land
+machine-readable in ``BENCH_tenancy.json``. ``--smoke`` (CI)
+additionally ASSERTS the acceptance contract: the shared fleet bills
+strictly fewer GB-seconds than the independent fleets while NO
+latency-bound tenant's p99 regresses past its SLO target.
+
+Pure numpy (no JAX model) so the suite runs in seconds.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/run.py --only tenancy_bench
+    PYTHONPATH=src:. python benchmarks/tenancy_bench.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.simulator import FaultProfile
+from repro.plan.tenancy import (MultiTenantPlanner,
+                                run_tenants_independently,
+                                run_tenants_over_traces)
+from repro.traces import mixed_tenant_pair
+
+SPEC = PlatformSpec()
+PROF = ModelProfile(
+    num_moe_layers=4, experts_per_layer=8,
+    expert_param_bytes=28e6, token_in_bytes=3072.0, token_out_bytes=3072.0,
+    u_ref_s=2e-4,           # pinned: bench numerics must not depend on
+    #                         wall-clock calibration
+    intermediate_bytes=4e6, nonmoe_param_bytes=9e6)
+
+FAULTS = FaultProfile(cold_start_prob=0.3, warm_pool=1,
+                      straggler_prob=0.05, concurrency_limit=8)
+
+
+def _tenant_rows(name: str, merged) -> dict:
+    out = {}
+    for tname, blk in merged.tenants.items():
+        out[tname] = {
+            "billed_cost": blk["billed_cost"],
+            "p99_latency_s": blk["p99_latency_s"],
+            "max_latency_s": blk["max_latency_s"],
+            "num_tokens": blk["num_tokens"],
+            "cold_starts": blk["cold_starts"],
+        }
+        emit(f"tenancy_{name}_{tname}", 0.0,
+             f"cost=${blk['billed_cost']:.6f} "
+             f"p99={blk['p99_latency_s']:.2f}s "
+             f"cold={blk['cold_starts']}")
+    return out
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_tenancy.json") -> None:
+    steps = 8 if smoke else 24
+    tenants = list(mixed_tenant_pair(PROF.num_moe_layers,
+                                     PROF.experts_per_layer,
+                                     steps=steps, seed=0))
+    slos = {t.name: t.slo for t in tenants}
+
+    planner = MultiTenantPlanner(tenants)
+    shared = run_tenants_over_traces(tenants, PROF, SPEC, planner=planner,
+                                     seed=0, faults=FAULTS, cache="lru")
+    s_merged = shared["merged"]
+    meta = shared["final_plan"].metadata.get("tenants", {})
+    emit("tenancy_shared_total",
+         float(np.mean(shared["planning_s"])) * 1e6,
+         f"cost=${s_merged.billed_cost:.6f} replans={shared['replans']} "
+         f"savings_est=${meta.get('consolidation_savings', 0.0):.6f}")
+    s_tenants = _tenant_rows("shared", s_merged)
+
+    indep = run_tenants_independently(tenants, PROF, SPEC, seed=0,
+                                      faults=FAULTS, cache="lru")
+    i_merged = indep["merged"]
+    emit("tenancy_independent_total", 0.0,
+         f"cost=${i_merged.billed_cost:.6f} "
+         f"wall={i_merged.extras.get('wall_clock_s', 0.0):.1f}s")
+    i_tenants = _tenant_rows("independent", i_merged)
+
+    saving = 1.0 - s_merged.billed_cost / max(i_merged.billed_cost, 1e-12)
+    results = {
+        "windows": steps,
+        "shared": {"billed_cost": s_merged.billed_cost,
+                   "replans": shared["replans"],
+                   "planner_meta": meta,
+                   "tenants": s_tenants},
+        "independent": {"billed_cost": i_merged.billed_cost,
+                        "wall_clock_s": i_merged.extras.get(
+                            "wall_clock_s", 0.0),
+                        "tenants": i_tenants},
+        "slos": {n: {"kind": s.kind, "p99_target_s": s.p99_target_s}
+                 for n, s in slos.items()},
+        "consolidation_saving_frac": saving,
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    emit("tenancy_consolidation", 0.0,
+         f"shared bills {100 * saving:.1f}% fewer GB-s -> {out_path}")
+
+    if smoke:
+        # acceptance contract: consolidation saves GB-seconds AND no
+        # latency-bound tenant's p99 regresses past its SLO target
+        assert s_merged.billed_cost < i_merged.billed_cost, \
+            (s_merged.billed_cost, i_merged.billed_cost)
+        for name, slo in slos.items():
+            if slo.kind != "latency":
+                continue
+            p99 = s_merged.tenants[name]["p99_latency_s"]
+            assert p99 <= slo.p99_target_s, \
+                f"{name}: p99 {p99:.2f}s > SLO {slo.p99_target_s:.2f}s"
+        print("tenancy_smoke,0.0,ok")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scales for CI + acceptance asserts")
+    ap.add_argument("--out", default="BENCH_tenancy.json",
+                    help="machine-readable results path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out_path=args.out)

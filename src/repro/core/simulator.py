@@ -79,12 +79,26 @@ taken. The same two determinism contracts hold: ``cache=None`` is the
 exact historical path (golden-pinned), and with a cache attached the
 cold stream draws once per invocation unconditionally, so the cache can
 only MASK cold starts, never create them.
+
+**Multi-tenant accounting** (``run(..., tenants=...)``): a list of
+``(name, demand)`` or ``(name, demand, num_tokens)`` entries whose
+demands sum to ``real_demand``. Replicas of each (layer, expert) are
+apportioned to tenants by largest-remainder on their demand shares
+(:func:`replica_accounts`), the wave keys its concurrency heap by
+account (tenant A's queue can never delay tenant B — the documented
+per-account semantics), and a :class:`TenantAccounting` splits every
+billed second exactly across tenants: shared closed-form time by demand
+share, fault extras to the tenant whose invocation drew them, fleet-wide
+keep-alive by token share. Per-tenant totals land in the report's
+conditional ``"tenants"`` block (absent for tenant-less runs, so every
+committed golden stays bit-identical); the fleet-level numbers are
+unchanged by construction (tenant splits always sum to the totals).
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -157,6 +171,25 @@ class InvocationEvent:
     end_s: float            # completion time within the wave
     prewarmed: bool = False  # served by a speculatively warmed container
     swapped: bool = False    # cold draw masked by an expert-weight swap
+    account: int = 0         # tenant/account index (0 = single-account)
+
+
+@dataclass
+class _AccountTally:
+    """One account's share of a wave's extras (multi-tenant attribution):
+    only the invocations dispatched under this account accumulate here,
+    so fault extras land on the tenant whose replica drew them."""
+
+    extra_billed: np.ndarray        # (E,) billed seconds beyond g * t_rep
+    cold_starts: int = 0
+    cold_start_s: float = 0.0
+    retries: int = 0
+    stragglers: int = 0
+    queue_delay_s: float = 0.0
+    makespan: float = 0.0           # latest end time among own invocations
+    prewarm_hits: int = 0
+    cache_hits: int = 0
+    cache_swaps: int = 0
 
 
 @dataclass
@@ -176,6 +209,8 @@ class _WaveResult:
     cache_hits: int = 0
     cache_swaps: int = 0
     swap_s_by_expert: Optional[np.ndarray] = None   # (E,) billed swap s
+    base_makespan: float = 0.0      # fault-free makespan max(t_rep)
+    accounts: Optional[Dict[int, _AccountTally]] = None
     events: List[InvocationEvent] = field(default_factory=list)
 
 
@@ -184,14 +219,28 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
                     faults: FaultProfile,
                     rng: np.random.Generator,
                     prewarmed: Optional[np.ndarray] = None,
-                    cache_wave=None) -> _WaveResult:
+                    cache_wave=None,
+                    accounts: Optional[List[np.ndarray]] = None,
+                    account_names: Optional[Sequence[str]] = None
+                    ) -> _WaveResult:
     """Discrete-event simulation of one layer's invocation wave.
 
     Invocations dispatch in deterministic (expert, replica) order; a
-    min-heap of running-invocation end times models the per-account
-    concurrency limit. Everything is accumulated as EXTRAS relative to
-    the fault-free closed form (start at t=0, run for ``t_rep``), so a
+    min-heap of running-invocation end times PER ACCOUNT models the
+    per-account concurrency limit — one account's backlog never queues
+    another's. Everything is accumulated as EXTRAS relative to the
+    fault-free closed form (start at t=0, run for ``t_rep``), so a
     zero-knob profile contributes exact float zeros.
+
+    ``accounts`` assigns each invocation to an account: per expert, a
+    ``(g[expert],)`` int array of account indices (built by
+    :func:`replica_accounts`). ``None`` is the single-account historical
+    path — every invocation shares account 0 and one heap, bit-identical
+    to the pre-tenancy engine. With accounts given, per-account extras
+    are additionally tallied in ``_WaveResult.accounts`` (the global
+    accumulators are untouched, so totals never shift).
+    ``account_names`` maps account index -> tenant name so an attached
+    cache can enforce per-tenant residency quotas.
 
     ``prewarmed`` (E,) counts speculatively warmed containers per expert:
     consumed before the reactive warm pool, each consumption a prewarm
@@ -211,7 +260,14 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
     res = _WaveResult(extra_billed=np.zeros(E), extra_latency=0.0)
     if cache_wave is not None:
         res.swap_s_by_expert = np.zeros(E)
-    busy: List[float] = []       # end times of running invocations
+    tallies: Optional[Dict[int, _AccountTally]] = \
+        {} if accounts is not None else None
+    # end times of running invocations, keyed by ACCOUNT: the
+    # concurrency limit is per account (tenant), so one tenant's burst
+    # cannot serialize another's traffic. The single-account path
+    # (accounts=None) keys everything under 0 — one heap, the exact
+    # historical push/pop order.
+    busy: Dict[int, List[float]] = {}
     # fault DECISIONS come from the shared dispatch-policy draws (one
     # definition across this simulator and the repro.dist gateway); the
     # draw order per invocation — temperature, straggler, failures —
@@ -226,16 +282,24 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
         if dur <= 0.0:
             continue                      # no tokens routed: never invoked
         base_makespan = max(base_makespan, dur)
+        acct_row = accounts[expert] if accounts is not None else None
         for replica in range(int(g[expert])):
+            acct = int(acct_row[replica]) \
+                if acct_row is not None and replica < len(acct_row) else 0
+            q = busy.setdefault(acct, [])
             start = 0.0
-            if limit and len(busy) >= limit:
-                start = heapq.heappop(busy)
+            if limit and len(q) >= limit:
+                start = heapq.heappop(q)
+            tenant = account_names[acct] if account_names is not None \
+                else None
             swap_billed = 0.0
             swapped = False
+            was_hit = False
             if cache_wave is not None:
-                acc = cache_wave.access(expert, rng, state)
+                acc = cache_wave.access(expert, rng, state, tenant=tenant)
                 cold, pre_hit = acc.cold, acc.pre_hit
                 if acc.kind == "hit":
+                    was_hit = True
                     res.cache_hits += 1
                 elif acc.kind == "swap":
                     swapped = True
@@ -282,18 +346,176 @@ def _run_layer_wave(layer: int, t_rep: np.ndarray, g: np.ndarray,
                 res.cold_start_s += cold_billed
             end = t + final
             if limit:
-                heapq.heappush(busy, end)
+                heapq.heappush(q, end)
             res.extra_billed[expert] += extra_billed
             res.queue_delay_s += start
             makespan = max(makespan, end)
+            if tallies is not None:
+                tal = tallies.get(acct)
+                if tal is None:
+                    tal = tallies[acct] = _AccountTally(
+                        extra_billed=np.zeros(E))
+                tal.extra_billed[expert] += extra_billed
+                tal.queue_delay_s += start
+                tal.makespan = max(tal.makespan, end)
+                tal.retries += attempts - 1
+                if cold:
+                    tal.cold_starts += 1
+                    tal.cold_start_s += cold_billed
+                if straggled:
+                    tal.stragglers += 1
+                if pre_hit:
+                    tal.prewarm_hits += 1
+                if was_hit:
+                    tal.cache_hits += 1
+                if swapped:
+                    tal.cache_swaps += 1
             res.events.append(InvocationEvent(
                 layer=layer, expert=expert, replica=replica, start_s=start,
                 attempts=attempts, cold=cold, straggled=straggled,
                 extra_billed_s=extra_billed, end_s=end,
-                prewarmed=pre_hit, swapped=swapped))
+                prewarmed=pre_hit, swapped=swapped, account=acct))
     res.extra_latency = makespan - base_makespan
+    res.base_makespan = base_makespan
     res.prewarm_leftover = state.pre_left
+    res.accounts = tallies
     return res
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant apportionment + attribution (shared with repro.dist)
+# ---------------------------------------------------------------------------
+
+def split_replicas(g: int, shares: np.ndarray) -> np.ndarray:
+    """Largest-remainder apportionment of ``g`` replicas over accounts.
+
+    ``shares`` (T,) sums to 1; the result (T,) sums to ``g``.
+    Deterministic: remainder ties break toward the lower account index
+    (stable argsort), so re-planning loops replay identically.
+    """
+    shares = np.asarray(shares, float)
+    quota = g * shares
+    base = np.floor(quota).astype(np.int64)
+    rem = int(g - base.sum())
+    if rem > 0:
+        frac = quota - base
+        order = np.argsort(-frac, kind="stable")
+        base[order[:rem]] += 1
+    return base
+
+
+def replica_accounts(g_layer: np.ndarray,
+                     demand_by_acct: np.ndarray) -> List[np.ndarray]:
+    """Per-expert arrays of per-replica account indices for one layer.
+
+    ``g_layer`` (E,) replica counts; ``demand_by_acct`` (T, E) each
+    account's routed tokens. Replicas of expert ``i`` are apportioned to
+    accounts proportionally to their demand share (largest remainder);
+    the returned replica order groups by ascending account index, so
+    dispatch order inside an expert stays deterministic.
+    """
+    T, E = demand_by_acct.shape
+    out: List[np.ndarray] = []
+    for i in range(E):
+        gi = int(g_layer[i])
+        tot = float(demand_by_acct[:, i].sum())
+        if gi <= 0 or tot <= 0.0:
+            out.append(np.zeros(gi, np.int64))
+            continue
+        counts = split_replicas(gi, demand_by_acct[:, i] / tot)
+        out.append(np.repeat(np.arange(T), counts))
+    return out
+
+
+class TenantAccounting:
+    """Splits one run's billed cost / latency / fault breakdown exactly
+    across tenants.
+
+    Attribution contract (conservation by construction — per layer the
+    tenant costs sum to the fleet's ``layer_cost`` float-exactly up to
+    summation order):
+
+    * the SHARED closed-form seconds of each expert (base time plus
+      overrun penalties, minus all accounts' wave extras) split by the
+      tenants' demand shares of that expert (token share where an expert
+      served no demand);
+    * each account's WAVE EXTRAS (cold init, retries, straggle,
+      swap seconds) bill to the tenant whose invocation drew them;
+    * fleet-wide GB-seconds with no owning invocation (wasted prewarm
+      keep-alive, cache keep-alive, seeded boots) split by token share;
+    * latency: every tenant carries the layer's fault-free critical path
+      (all tenants wait for the shared wave), plus the excess of its OWN
+      account's makespan over it.
+    """
+
+    INT_KEYS = ("cold_starts", "retries", "stragglers", "prewarm_hits",
+                "cache_hits", "cache_swaps")
+    FLOAT_KEYS = ("cold_start_s", "queue_delay_s")
+
+    def __init__(self, names: Sequence[str], demands: np.ndarray,
+                 tokens: np.ndarray, overhead_s: float, price: float):
+        self.names = list(names)
+        self.demands = np.asarray(demands, float)      # (T, L, E)
+        self.tokens = np.asarray(tokens, float)        # (T,)
+        T = len(self.names)
+        tot = float(self.tokens.sum())
+        self.token_share = (self.tokens / tot if tot > 0.0
+                            else np.full(T, 1.0 / T))
+        self.price = float(price)
+        self.cost = np.zeros(T)
+        self.lat = np.full(T, float(overhead_s))
+        self.counters = {k: np.zeros(T)
+                         for k in self.INT_KEYS + self.FLOAT_KEYS}
+
+    def layer_shares(self, layer: int) -> np.ndarray:
+        """(T, E) fraction of each expert's time owed by each tenant."""
+        d = self.demands[:, layer, :]
+        tot = d.sum(axis=0)
+        return np.where(tot > 0.0, d / np.maximum(tot, 1e-300),
+                        self.token_share[:, None])
+
+    def wave_tallies(self, wave: Optional[_WaveResult],
+                     E: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Fold a wave's per-account tallies into the running counters;
+        returns ``(extras (T, E), extra_latency (T,))``."""
+        T = len(self.names)
+        extras = np.zeros((T, E))
+        extra_lat = np.zeros(T)
+        if wave is not None and wave.accounts:
+            for a, tal in wave.accounts.items():
+                extras[a] = tal.extra_billed
+                extra_lat[a] = max(tal.makespan - wave.base_makespan, 0.0)
+                for k in self.INT_KEYS:
+                    self.counters[k][a] += getattr(tal, k)
+                self.counters["cold_start_s"][a] += tal.cold_start_s
+                self.counters["queue_delay_s"][a] += tal.queue_delay_s
+        return extras, extra_lat
+
+    def add_layer(self, layer: int, *, t_total: np.ndarray,
+                  extras_by_acct: np.ndarray, mem_mb: np.ndarray,
+                  base_lat: float, extra_lat: np.ndarray,
+                  shared_gb_s: float = 0.0) -> None:
+        f = self.layer_shares(layer)
+        shared = np.asarray(t_total, float) - extras_by_acct.sum(axis=0)
+        gb_s = ((f * shared[None, :] + extras_by_acct)
+                * np.asarray(mem_mb, float)[None, :] / 1024.0).sum(axis=1)
+        self.cost += (gb_s + self.token_share * shared_gb_s) * self.price
+        self.lat += float(base_lat) + extra_lat
+
+    def finalize(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for t, name in enumerate(self.names):
+            d = {"billed_cost": float(self.cost[t]),
+                 "latency_s": float(self.lat[t]),
+                 "num_tokens": int(self.tokens[t]),
+                 "throughput_tps": float(self.tokens[t]
+                                         / max(self.lat[t], 1e-9))}
+            for k in self.INT_KEYS:
+                d[k] = int(self.counters[k][t])
+            for k in self.FLOAT_KEYS:
+                d[k] = float(self.counters[k][t])
+            out[name] = d
+        return out
 
 
 class ServerlessSimulator:
@@ -326,20 +548,70 @@ class ServerlessSimulator:
         assert (out >= 0).all(), "negative prewarm container counts"
         return out
 
+    @staticmethod
+    def _normalize_tenants(tenants, real_demand: np.ndarray,
+                           num_tokens: int):
+        """``tenants`` -> ``(names, demands (T, L, E), tokens (T,))``.
+
+        Accepts a mapping ``name -> (L, E) demand`` or a sequence of
+        ``(name, demand)`` / ``(name, demand, num_tokens)`` entries.
+        Token counts default to the tenant's share of total demand.
+        The per-tenant demands must sum to ``real_demand``."""
+        if tenants is None:
+            return None
+        entries = list(tenants.items()) if isinstance(tenants, dict) \
+            else [tuple(t) for t in tenants]
+        if not entries:
+            return None
+        names: List[str] = []
+        demands: List[np.ndarray] = []
+        toks: List[Optional[float]] = []
+        for ent in entries:
+            name, d = str(ent[0]), np.asarray(ent[1], float)
+            if d.shape != real_demand.shape:
+                raise ValueError(
+                    f"tenant {name!r} demand shape {d.shape} != "
+                    f"{real_demand.shape}")
+            names.append(name)
+            demands.append(d)
+            toks.append(float(ent[2]) if len(ent) > 2 else None)
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names in {names}")
+        stack = np.stack(demands)
+        if not np.allclose(stack.sum(axis=0), real_demand,
+                           rtol=1e-6, atol=1e-6):
+            raise ValueError(
+                "per-tenant demands must sum to real_demand")
+        sums = stack.sum(axis=(1, 2))
+        all_tok = max(float(sums.sum()), 1e-300)
+        tokens = np.array([
+            t if t is not None else num_tokens * sums[i] / all_tok
+            for i, t in enumerate(toks)])
+        return names, stack, tokens
+
     def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
             num_tokens: int, *, prewarm=None,
-            cache=None) -> ExecutionReport:
+            cache=None, tenants=None) -> ExecutionReport:
         """Execute ``plan`` against the observed routing counts.
 
         ``prewarm``: speculative container hints (see module docstring).
         ``cache``: a :class:`repro.expcache.ContainerCacheModel` whose
         resident-weight state PERSISTS across calls — pass the same
         object window after window to model a long-lived warm fleet.
+        ``tenants``: per-tenant demand split (see module docstring);
+        the report gains a ``"tenants"`` block whose per-tenant costs
+        sum to the fleet totals. ``None`` (default) is the historical
+        single-account path, bit-identical to committed goldens.
         """
         prof, spec, faults = self.prof, self.spec, self.faults
         real_demand = np.asarray(real_demand, float)
         L, E = real_demand.shape
         pw = self._prewarm_matrix(prewarm, L, E)
+        tn = self._normalize_tenants(tenants, real_demand, num_tokens)
+        acct = TenantAccounting(
+            tn[0], tn[1], tn[2],
+            prof.t_head_s + prof.t_tail_s + L * prof.t_nonmoe_s,
+            spec.price_per_gb_s) if tn is not None else None
         # single source of truth for per-layer chunks: the shared
         # ChunkPlan (full_chunk_schedule() fallback included), the same
         # object the serving rounds and the process gateway consume
@@ -390,6 +662,7 @@ class ServerlessSimulator:
                     breakdown["cold_starts"] += 1
                     breakdown["cold_start_s"] += cold_extra_s
                     cache_gb_s += boot_mem / 1024.0 * cold_extra_s
+            wave = None
             if faults.enabled or pw is not None or cache is not None:
                 # --- discrete-event invocation wave: faults ride as
                 # extras on top of the closed form. With every knob at
@@ -408,7 +681,13 @@ class ServerlessSimulator:
                                                   else None),
                                        cache_wave=(cache.wave(e, faults)
                                                    if cache is not None
-                                                   else None))
+                                                   else None),
+                                       accounts=(replica_accounts(
+                                           plan.replicas[e], tn[1][:, e, :])
+                                           if tn is not None else None),
+                                       account_names=(tn[0]
+                                                      if tn is not None
+                                                      else None))
                 t_total = t_total + wave.extra_billed
                 t_lat += wave.extra_latency
                 self.last_events.extend(wave.events)
@@ -456,15 +735,30 @@ class ServerlessSimulator:
                 t_lat += float(np.max(np.where(retry, penalty, 0.0)))
             if payload_bad[e].any():
                 t_lat += spec.t_warm_start_s       # rejected attempt
+            jfac = None
             if self.jitter > 0:
-                t_total = t_total * (1 + self.jitter
-                                     * self.rng.standard_normal(E))
+                jfac = 1 + self.jitter * self.rng.standard_normal(E)
+                t_total = t_total * jfac
                 t_total = np.maximum(t_total, 0.0)
             layer_cost[e] = comm.layer_billed_cost(
                 comm.LayerTimes(times.t_rep, t_total, t_lat, times.feasible),
                 mem, spec) + wasted_gb_s * spec.price_per_gb_s \
                 + cache_gb_s * spec.price_per_gb_s
             layer_lat[e] = t_lat
+            if acct is not None:
+                extras_a, extra_lat_a = acct.wave_tallies(wave, E)
+                if jfac is not None:
+                    # extras scale with the same platform-noise factor
+                    # their expert's total did (clamped like t_total),
+                    # so shared + extras still reconstructs t_total
+                    extras_a = extras_a * np.maximum(jfac, 0.0)[None, :]
+                acct.add_layer(
+                    e, t_total=t_total, extras_by_acct=extras_a,
+                    mem_mb=mem,
+                    base_lat=t_lat - (wave.extra_latency
+                                      if wave is not None else 0.0),
+                    extra_lat=extra_lat_a,
+                    shared_gb_s=wasted_gb_s + cache_gb_s)
 
         total_lat = (prof.t_head_s + prof.t_tail_s
                      + layer_lat.sum() + L * prof.t_nonmoe_s)
@@ -495,6 +789,7 @@ class ServerlessSimulator:
             packed_experts=(int(cache.packed_expert_count())
                             if cache is not None else 0),
             cache_keepalive_gb_s=float(breakdown["cache_keepalive_gb_s"]),
+            tenants=(acct.finalize() if acct is not None else {}),
         )
 
 

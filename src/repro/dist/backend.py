@@ -129,7 +129,8 @@ class DistributedBackend:
                            head_s: float, cold_extra_s: float,
                            state: WaveState, chunks: ChunkPlan,
                            kill: set, inv_id0: int, scale: float,
-                           cache_wave=None
+                           cache_wave=None, accounts=None,
+                           account_names=None
                            ) -> Tuple[List[Invocation], List[dict]]:
         """Draw this wave's faults and decompose each invocation's
         ``t_rep`` into chunk targets summing (to the ulp) to the closed
@@ -159,7 +160,11 @@ class DistributedBackend:
                 t_tail = tdl + beta * d_o / bs
             else:
                 n_mb, t_blk, t_tail = 1, 0.0, 0.0
+            acct_row = accounts[expert] if accounts is not None else None
             for replica in range(int(g[expert])):
+                acct_id = int(acct_row[replica]) \
+                    if acct_row is not None and replica < len(acct_row) \
+                    else 0
                 swap_s, kind = 0.0, ""
                 if cache_wave is not None:
                     # the cache's access discipline replaces the bare
@@ -167,7 +172,10 @@ class DistributedBackend:
                     # as the simulator): residency hits and weight swaps
                     # mask cold draws; a swap's seconds ride in the
                     # success attempt's first chunk target below
-                    acc = cache_wave.access(expert, rng, state)
+                    tenant = account_names[acct_id] \
+                        if account_names is not None else None
+                    acc = cache_wave.access(expert, rng, state,
+                                            tenant=tenant)
                     cold, pre_hit = acc.cold, acc.pre_hit
                     swap_s, kind = acc.swap_s, acc.kind
                 else:
@@ -222,6 +230,7 @@ class DistributedBackend:
                     d_pay=self.d_pay))
                 metas.append(dict(
                     inv_id=inv_id, expert=expert, replica=replica,
+                    account=acct_id,
                     dur=dur, cold=cold, pre_hit=pre_hit,
                     straggled=straggled, cold_billed=cold_billed,
                     die=die_attempt > 0, hit=(kind == "hit"),
@@ -231,15 +240,23 @@ class DistributedBackend:
 
     # --------------------------------------------------------------- run
     def run(self, plan: DeploymentPlan, real_demand: np.ndarray,
-            num_tokens: int, *, prewarm=None, cache=None,
+            num_tokens: int, *, prewarm=None, cache=None, tenants=None,
             kill_plan: Optional[Sequence[Tuple[int, int, int]]] = None
             ) -> ExecutionReport:
         """Execute the plan's chunked scatter-gather for real; same
         signature and accounting surface as ``ServerlessSimulator.run``
         (``cache``: a :class:`repro.expcache.ContainerCacheModel` —
         workers' containers hold resident expert sets; swap counts and
-        GB-seconds land in the report's conditional cache block)."""
-        from repro.core.simulator import ServerlessSimulator
+        GB-seconds land in the report's conditional cache block;
+        ``tenants``: the simulator's per-tenant split — measured wave
+        extras bill to the account whose replica drew them, while
+        queue delay and the wave's global makespan excess, which the
+        dispatcher does not attribute per invocation, split by token
+        share / accrue to every tenant (coarser than the simulator's
+        per-account makespans, documented here)."""
+        from repro.core.simulator import (ServerlessSimulator,
+                                          TenantAccounting,
+                                          replica_accounts)
         prof, spec, faults = self.profile, self.platform, self.faults
         tr = self._ensure_transport()
         scale = self.time_scale if tr.realtime else 1.0
@@ -248,6 +265,12 @@ class DistributedBackend:
         real_demand = np.asarray(real_demand, float)
         L, E = real_demand.shape
         pw = ServerlessSimulator._prewarm_matrix(prewarm, L, E)
+        tn = ServerlessSimulator._normalize_tenants(
+            tenants, real_demand, int(num_tokens))
+        acct = TenantAccounting(
+            tn[0], tn[1], tn[2],
+            prof.t_head_s + prof.t_tail_s + L * prof.t_nonmoe_s,
+            spec.price_per_gb_s) if tn is not None else None
         kill = set(map(tuple, kill_plan)) if kill_plan else set()
         chunks = ChunkPlan.from_plan(plan)
         layer_cost = np.zeros(L)
@@ -303,9 +326,15 @@ class DistributedBackend:
                 e, eff_a, beta, times.t_rep, g, r_real, mem, head_s,
                 cold_extra_s, state, chunks, kill, inv_id0, scale,
                 cache_wave=(cache.wave(e, faults) if cache is not None
-                            else None))
+                            else None),
+                accounts=(replica_accounts(plan.replicas[e],
+                                           tn[1][:, e, :])
+                          if tn is not None else None),
+                account_names=(tn[0] if tn is not None else None))
             inv_id0 += len(invs)
             wasted_gb_s = 0.0
+            extras_t = np.zeros((len(tn[0]), E)) if tn is not None \
+                else None
             if invs:
                 out = disp.run_wave(invs)
                 for m in metas:
@@ -334,9 +363,30 @@ class DistributedBackend:
                         breakdown["cache_swaps"] += 1
                         breakdown["swap_gb_s"] += m["swap_s"] \
                             * float(mem[m["expert"]]) / 1024.0
+                    if acct is not None:
+                        a = m["account"]
+                        extras_t[a, m["expert"]] += max(extra, 0.0)
+                        c = acct.counters
+                        c["retries"][a] += n_retries
+                        if m["cold"]:
+                            c["cold_starts"][a] += 1
+                            c["cold_start_s"][a] += m["cold_billed"]
+                        if m["straggled"]:
+                            c["stragglers"][a] += 1
+                        if m["pre_hit"]:
+                            c["prewarm_hits"][a] += 1
+                        if m["hit"]:
+                            c["cache_hits"][a] += 1
+                        if m["swap"]:
+                            c["cache_swaps"][a] += 1
                 makespan = out.makespan_s / scale
                 t_lat += max(makespan - base_makespan, 0.0)
                 breakdown["queue_delay_s"] += out.queue_delay_s / scale
+                if acct is not None:
+                    # the dispatcher's queue delay is wave-global: split
+                    # by token share (no per-invocation attribution)
+                    acct.counters["queue_delay_s"] += \
+                        acct.token_share * (out.queue_delay_s / scale)
                 if self.verify_outputs:
                     v, mm = self._verify(invs, out.outputs)
                     verified += v
@@ -389,6 +439,15 @@ class DistributedBackend:
                 mem, spec) + wasted_gb_s * spec.price_per_gb_s \
                 + cache_gb_s * spec.price_per_gb_s
             layer_lat[e] = t_lat
+            if acct is not None:
+                # every tenant carries the full layer latency (the wave's
+                # makespan excess is global here — no per-account
+                # makespans from the dispatcher)
+                acct.add_layer(e, t_total=t_total,
+                               extras_by_acct=extras_t, mem_mb=mem,
+                               base_lat=t_lat,
+                               extra_lat=np.zeros(len(tn[0])),
+                               shared_gb_s=wasted_gb_s + cache_gb_s)
 
         total_lat = (prof.t_head_s + prof.t_tail_s
                      + layer_lat.sum() + L * prof.t_nonmoe_s)
@@ -419,6 +478,7 @@ class DistributedBackend:
             packed_experts=(int(cache.packed_expert_count())
                             if cache is not None else 0),
             cache_keepalive_gb_s=float(breakdown["cache_keepalive_gb_s"]),
+            tenants=(acct.finalize() if acct is not None else {}),
         )
         rep.extras = {
             "transport": type(tr).__name__,

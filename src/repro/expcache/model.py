@@ -54,6 +54,7 @@ class Container:
     pending_boot: bool = False    # seeded but not yet booted (billed once)
     used: bool = False            # claimed/touched this window
     idle_windows: int = 0
+    tenant: Optional[str] = None  # owning tenant under residency quotas
 
 
 @dataclass(frozen=True)
@@ -98,10 +99,14 @@ class CacheWave:
                 best = c
         return best
 
-    def _swap_target(self, expert: int) -> Optional[Container]:
+    def _swap_target(self, expert: int,
+                     tenant: Optional[str] = None) -> Optional[Container]:
         """An unclaimed warm container the expert could swap into:
         enough container memory to run it, and enough weight capacity
-        once the policy evicts. Lowest policy rank = disturbed first."""
+        once the policy evicts. Lowest policy rank = disturbed first.
+        Under residency quotas a tenant may only disturb its OWN or
+        unowned containers — swapping over another tenant's residents
+        would let a bursty tenant evict a quiet one's working set."""
         m = self.model
         need_mem = float(m.mem_mb[self.layer, expert])
         need_bytes = m.expert_nbytes(expert)
@@ -109,14 +114,16 @@ class CacheWave:
                  if c.cid not in self._claimed
                  and not c.pending_boot
                  and c.mem_mb + 1e-9 >= need_mem
-                 and need_bytes <= m.config.capacity_bytes(c.mem_mb)]
+                 and need_bytes <= m.config.capacity_bytes(c.mem_mb)
+                 and (not m.tenant_quotas
+                      or c.tenant in (None, tenant))]
         if not cands:
             return None
         return min(cands, key=lambda c: (
             m.policy.rank_container(self.layer, c), c.cid))
 
     def access(self, expert: int, rng: np.random.Generator,
-               state) -> CacheAccess:
+               state, tenant: Optional[str] = None) -> CacheAccess:
         """One invocation's temperature decision under the cache.
 
         Mirrors :func:`repro.dispatch.policy.draw_temperature` with a
@@ -134,29 +141,32 @@ class CacheWave:
             # a speculatively prewarmed container: fresh, holds the
             # expert — admit it into the resident fleet
             state.pre_left[expert] -= 1
-            self._claim(m._admit(self.layer, expert))
+            self._claim(m._admit(self.layer, expert, tenant))
             return CacheAccess("prewarm", False, True, 0.0)
         c = self._find_resident(expert)
         if c is not None:
+            # residency hits stay UNRESTRICTED across tenants: sharing
+            # already-resident weights is the consolidation win quotas
+            # must not tax (quotas bound ownership, not reads)
             m._touch(c, expert)
             self._claim(c)
             return CacheAccess("hit", False, False, 0.0)
         if state.warm_left > 0:
             state.warm_left -= 1
-            self._claim(m._admit(self.layer, expert))
+            self._claim(m._admit(self.layer, expert, tenant))
             return CacheAccess("warm_pool", False, False, 0.0)
         if draw < faults.cold_start_prob:
-            c = self._swap_target(expert)
+            c = self._swap_target(expert, tenant)
             if c is not None:
-                m._swap_in(c, self.layer, expert)
+                m._swap_in(c, self.layer, expert, tenant)
                 self._claim(c)
                 return CacheAccess(
                     "swap", False, False,
                     m.swap.swap_s(m.expert_nbytes(expert)))
-            self._claim(m._admit(self.layer, expert))
+            self._claim(m._admit(self.layer, expert, tenant))
             return CacheAccess("cold", True, False, 0.0)
         # platform-warm start: the container it lands on joins the fleet
-        self._claim(m._admit(self.layer, expert))
+        self._claim(m._admit(self.layer, expert, tenant))
         return CacheAccess("warm", False, False, 0.0)
 
 
@@ -195,7 +205,12 @@ class ContainerCacheModel:
         # lifetime counters (the serving engine's residency_stats and
         # the report breakdown read these)
         self.stats = dict(hits=0, swaps=0, evictions=0, admissions=0,
-                          retired=0, seeded_boots=0, prefetch_swaps=0)
+                          retired=0, seeded_boots=0, prefetch_swaps=0,
+                          quota_denials=0)
+        # tenant -> residency quota (fraction of each layer's container
+        # bound a tenant may OWN). Empty = quotas off (single-tenant
+        # historical behavior, bit-identical).
+        self.tenant_quotas: Dict[str, float] = {}
         if packing is not None:
             self._seed_packing(packing)
 
@@ -278,9 +293,11 @@ class ContainerCacheModel:
         c.residents[expert] = self._next_tick()
         self.stats["hits"] += 1
 
-    def _swap_in(self, c: Container, layer: int, expert: int) -> None:
+    def _swap_in(self, c: Container, layer: int, expert: int,
+                 tenant: Optional[str] = None) -> None:
         """Evict per policy until the expert fits capacity AND degree,
-        then make it resident."""
+        then make it resident. An unowned container claimed under
+        quotas becomes the swapping tenant's."""
         need = self.expert_nbytes(expert)
         cap = self.config.capacity_bytes(c.mem_mb)
         order = self.policy.eviction_order(layer, c)
@@ -294,19 +311,54 @@ class ContainerCacheModel:
             self.stats["evictions"] += 1
         c.residents[expert] = self._next_tick()
         c.used = True
+        if tenant is not None and self.tenant_quotas and c.tenant is None:
+            c.tenant = tenant
         self.stats["swaps"] += 1
 
-    def _admit(self, layer: int, expert: int) -> Optional[Container]:
+    def _owned(self, layer: int, tenant: str) -> int:
+        return sum(1 for c in self.layers[layer] if c.tenant == tenant)
+
+    def _quota_cap(self, layer: int, tenant: str) -> int:
+        q = float(self.tenant_quotas.get(tenant, 1.0))
+        return max(1, int(np.ceil(q * int(self.max_containers[layer]))))
+
+    def _admit(self, layer: int, expert: int,
+               tenant: Optional[str] = None) -> Optional[Container]:
         """Register the container a fresh (cold/warm/prewarmed) start
         landed on: it now holds the expert's weights and joins the
         resident fleet. At the container bound, the lowest-ranked
         unused container is repurposed; if every container is in use
-        this window, the start is transient (not tracked)."""
+        this window, the start is transient (not tracked).
+
+        Under residency quotas a tenant at its ownership cap may only
+        repurpose one of its OWN idle containers; with none idle the
+        start stays transient (``quota_denials``) rather than growing
+        the tenant's footprint at the pool's expense. Repurposing at
+        the shared bound is likewise limited to own/unowned idles.
+        """
         fleet = self.layers[layer]
         mem = float(self.mem_mb[layer, expert])
-        if len(fleet) >= int(self.max_containers[layer]):
-            idle = [c for c in fleet if not c.used and not c.pending_boot]
+        quotas_on = bool(self.tenant_quotas) and tenant is not None
+        if quotas_on and self._owned(layer, tenant) >= \
+                self._quota_cap(layer, tenant):
+            idle = [c for c in fleet if not c.used and not c.pending_boot
+                    and c.tenant == tenant]
             if not idle:
+                self.stats["quota_denials"] += 1
+                return None
+            c = min(idle, key=lambda c: (
+                self.policy.rank_container(layer, c), c.cid))
+            self.stats["evictions"] += len(c.residents)
+            c.residents = {}
+            c.mem_mb = mem
+            c.packed = False
+            c.idle_windows = 0
+        elif len(fleet) >= int(self.max_containers[layer]):
+            idle = [c for c in fleet if not c.used and not c.pending_boot
+                    and (not quotas_on or c.tenant in (None, tenant))]
+            if not idle:
+                if quotas_on:
+                    self.stats["quota_denials"] += 1
                 return None
             c = min(idle, key=lambda c: (
                 self.policy.rank_container(layer, c), c.cid))
@@ -317,6 +369,8 @@ class ContainerCacheModel:
             c.idle_windows = 0
         else:
             c = self._new_container(layer, mem)
+        if quotas_on:
+            c.tenant = tenant
         c.residents[expert] = self._next_tick()
         self.stats["admissions"] += 1
         return c
@@ -373,6 +427,29 @@ class ContainerCacheModel:
         """Feed the predictor policy the demand forecast for the
         upcoming window (no-op for LRU)."""
         self.policy.set_forecast(forecast)
+
+    def set_tenant_quotas(self,
+                          quotas: Optional[Dict[str, float]]) -> None:
+        """Enable per-tenant residency quotas on the shared pool.
+
+        ``quotas`` maps tenant name -> fraction of each layer's
+        container bound that tenant may OWN (caps apply to ownership
+        for swaps/admissions; residency HITS remain shared across
+        tenants). ``None``/``{}`` disables quotas — the single-tenant
+        historical behavior, bit-identical. Quota fractions may sum
+        above 1.0 (overcommit is the point of consolidation; quotas
+        bound worst-case monopolization, not steady-state shares).
+        """
+        if not quotas:
+            self.tenant_quotas = {}
+            return
+        for name, q in quotas.items():
+            if not (0.0 < float(q) <= 1.0):
+                raise ValueError(
+                    f"tenant quota for {name!r} must be in (0, 1], "
+                    f"got {q}")
+        self.tenant_quotas = {str(n): float(q)
+                              for n, q in quotas.items()}
 
     def wave(self, layer: int, faults) -> CacheWave:
         """Start one layer window's invocation wave under the given

@@ -21,12 +21,17 @@ __all__ = [
     "register_backend", "get_backend", "available_backends",
     "run_plan_over_trace",
     "IncrementalODSPlanner", "layer_drift",
+    "MultiTenantPlanner", "run_tenants_over_traces",
+    "run_tenants_independently",
 ]
 
 _LOCATIONS = {
     "run_plan_over_trace": "repro.plan.backends",
     "IncrementalODSPlanner": "repro.plan.incremental",
     "layer_drift": "repro.plan.incremental",
+    "MultiTenantPlanner": "repro.plan.tenancy",
+    "run_tenants_over_traces": "repro.plan.tenancy",
+    "run_tenants_independently": "repro.plan.tenancy",
     "DeploymentPlan": "repro.plan.schema",
     "ExecutionReport": "repro.plan.schema",
     "Workload": "repro.plan.schema",
@@ -62,6 +67,9 @@ if TYPE_CHECKING:   # pragma: no cover — static-analysis-only eager imports
                                     get_planner, register_planner)
     from repro.plan.schema import (PLAN_VERSION, DeploymentPlan,  # noqa: F401
                                    ExecutionReport, Workload, plan_diff)
+    from repro.plan.tenancy import (MultiTenantPlanner,  # noqa: F401
+                                    run_tenants_independently,
+                                    run_tenants_over_traces)
 
 
 def __getattr__(name: str):

@@ -76,11 +76,63 @@ def _carried_cache(r: ExecutionReport) -> bool:
                 or getattr(r, "cache_keepalive_gb_s", 0.0))
 
 
-def _merge_reports(reports: List[ExecutionReport], *,
-                   backend: str) -> ExecutionReport:
+_TENANT_SUM_INT = ("num_tokens", "cold_starts", "retries", "stragglers",
+                   "prewarm_hits", "cache_hits", "cache_swaps")
+_TENANT_SUM_FLOAT = ("billed_cost", "cold_start_s", "queue_delay_s")
+
+
+def _merge_tenants(reports: List[ExecutionReport]) -> Dict[str, dict]:
+    """Merge the conditional per-tenant blocks across window reports.
+
+    Counters sum; per-window latencies are kept as ``latency_samples``
+    (re-merging a merged report keeps the original samples) so the
+    merged block can report the p99 each tenant's SLO is judged on.
+    """
+    names: List[str] = []
+    for r in reports:
+        for n in getattr(r, "tenants", {}) or {}:
+            if n not in names:
+                names.append(n)
+    out: Dict[str, dict] = {}
+    for n in names:
+        acc: Dict[str, float] = {k: 0 for k in _TENANT_SUM_INT}
+        acc.update({k: 0.0 for k in _TENANT_SUM_FLOAT})
+        samples: List[float] = []
+        for r in reports:
+            t = (getattr(r, "tenants", {}) or {}).get(n)
+            if not t:
+                continue
+            for k in _TENANT_SUM_INT:
+                acc[k] = int(acc[k]) + int(t.get(k, 0))
+            for k in _TENANT_SUM_FLOAT:
+                acc[k] = float(acc[k]) + float(t.get(k, 0.0))
+            samples.extend(t.get("latency_samples",
+                                 [t.get("latency_s", 0.0)]))
+        lat = float(sum(samples))
+        acc["latency_s"] = lat
+        acc["latency_samples"] = [float(s) for s in samples]
+        acc["p99_latency_s"] = float(np.percentile(samples, 99.0)) \
+            if samples else 0.0
+        acc["max_latency_s"] = float(max(samples)) if samples else 0.0
+        acc["throughput_tps"] = acc["num_tokens"] / max(lat, 1e-9)
+        out[n] = acc
+    return out
+
+
+def _merge_reports(reports: List[ExecutionReport], *, backend: str,
+                   wall_clock_s: Optional[float] = None
+                   ) -> ExecutionReport:
     assert reports, "cannot merge zero reports"
     total_lat = float(sum(r.latency_s for r in reports))
     n_tok = int(sum(r.num_tokens for r in reports))
+    # Throughput: the historical convention divides by the SUM of the
+    # merged latencies — correct when the reports executed back-to-back
+    # (sequential windows of one trace). When they ran CONCURRENTLY
+    # (N tenants' fleets serving side by side), that sum overstates the
+    # elapsed time and understates throughput; the multi-tenant path
+    # passes the true elapsed wall clock instead. latency_s stays the
+    # sum either way (it is the billed serial latency, not wall time).
+    wall = total_lat if wall_clock_s is None else float(wall_clock_s)
     # the prewarm block is CONDITIONAL: a report only carries it when a
     # prewarmer actually ran. Merge over the carrying subset (reports
     # without the attributes — duck-typed or pre-prewarm-era objects —
@@ -88,10 +140,15 @@ def _merge_reports(reports: List[ExecutionReport], *,
     # a mixed prewarm-on/off merge stays distinguishable from all-on
     prewarm_batches = sum(1 for r in reports if _carried_prewarm(r))
     cache_batches = sum(1 for r in reports if _carried_cache(r))
+    extras = {"num_batches": len(reports),
+              "prewarm_batches": prewarm_batches,
+              "cache_batches": cache_batches}
+    if wall_clock_s is not None:
+        extras["wall_clock_s"] = float(wall_clock_s)
     return ExecutionReport(
         billed_cost=float(sum(r.billed_cost for r in reports)),
         latency_s=total_lat,
-        throughput_tps=n_tok / max(total_lat, 1e-9),
+        throughput_tps=n_tok / max(wall, 1e-9),
         layer_cost=np.sum([r.layer_cost for r in reports], axis=0),
         layer_latency=np.sum([r.layer_latency for r in reports], axis=0),
         mem_overrun=np.any([r.mem_overrun for r in reports], axis=0),
@@ -127,9 +184,10 @@ def _merge_reports(reports: List[ExecutionReport], *,
                                for r in reports)),
         cache_keepalive_gb_s=float(sum(getattr(r, "cache_keepalive_gb_s",
                                                0.0) for r in reports)),
-        extras={"num_batches": len(reports),
-                "prewarm_batches": prewarm_batches,
-                "cache_batches": cache_batches},
+        # tenants is conditional like prewarm/cache: tenant-less merges
+        # produce {} and serialize without the block
+        tenants=_merge_tenants(reports),
+        extras=extras,
     )
 
 
@@ -210,20 +268,55 @@ def _plan_fn_extra_kw(plan_fn, delta, planning_budget_s) -> dict:
 
     ``delta`` / ``budget_s`` are forwarded only when the callable's
     signature accepts them (directly or via ``**kwargs``), so plain
-    ``demand -> plan`` callables keep working unmodified."""
+    ``demand -> plan`` callables keep working unmodified. Wrapped
+    callables are sniffed through: ``functools.partial`` chains and
+    ``__wrapped__`` decorators are unwrapped explicitly (not just via
+    ``inspect.signature``'s own following, which a ``partial`` over a
+    builtin or an unhinted C callable can defeat), ``VAR_KEYWORD``
+    counts as accepting, and a keyword already PINNED by a partial
+    (``partial(fn, delta=0.2)``) is never clobbered — the caller bound
+    it on purpose; forwarding it again would raise ``TypeError`` on
+    Python's duplicate-keyword rule or silently override the binding.
+    """
     if delta is None and planning_budget_s is None:
         return {}
+    import functools
     import inspect
-    try:
-        params = inspect.signature(plan_fn).parameters
-    except (TypeError, ValueError):
+    pinned: set = set()
+    fn = plan_fn
+    for _ in range(32):      # bounded unwrap: partial chains + decorators
+        if isinstance(fn, functools.partial):
+            pinned.update(fn.keywords)
+            fn = fn.func
+        elif hasattr(fn, "__wrapped__"):
+            fn = fn.__wrapped__
+        else:
+            break
+    params = None
+    for candidate in (plan_fn, fn):
+        try:
+            params = inspect.signature(candidate).parameters
+            break
+        except (TypeError, ValueError):
+            continue
+    if params is None:
         return {}
     var_kw = any(p.kind == inspect.Parameter.VAR_KEYWORD
                  for p in params.values())
+
+    def _accepts(name: str) -> bool:
+        if name in pinned:
+            return False
+        if name in params:
+            return params[name].kind not in (
+                inspect.Parameter.POSITIONAL_ONLY,
+                inspect.Parameter.VAR_POSITIONAL)
+        return var_kw
+
     kw = {}
-    if delta is not None and (var_kw or "delta" in params):
+    if delta is not None and _accepts("delta"):
         kw["delta"] = delta
-    if planning_budget_s is not None and (var_kw or "budget_s" in params):
+    if planning_budget_s is not None and _accepts("budget_s"):
         kw["budget_s"] = planning_budget_s
     return kw
 

@@ -235,6 +235,12 @@ def _incremental_planner(**kwargs) -> Planner:
     return IncrementalODSPlanner(**kwargs)
 
 
+def _tenant_planner(**kwargs) -> Planner:
+    # lazy: multi-tenant planning pulls in repro.traces.tenancy
+    from repro.plan.tenancy import MultiTenantPlanner
+    return MultiTenantPlanner(**kwargs)
+
+
 register_planner("ods", ODSPlanner)
 for _m in comm.METHODS:
     register_planner(f"fixed-{_m}",
@@ -244,3 +250,4 @@ register_planner("random", RandomPlanner)
 register_planner("bo", BOPlanner)
 register_planner("ods-cached", _cache_aware_planner)
 register_planner("ods-incremental", _incremental_planner)
+register_planner("ods-tenant", _tenant_planner)

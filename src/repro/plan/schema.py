@@ -196,7 +196,10 @@ class ExecutionReport:
     (hits, misses, wasted keep-alive GB-seconds — all zero unless a
     prewarmer ran), and the expert-weight cache breakdown (residency
     hits, swaps, swap/keep-alive GB-seconds, packed experts — all zero
-    unless a ``repro.expcache`` model was attached to the run).
+    unless a ``repro.expcache`` model was attached to the run), and the
+    multi-tenant breakdown (``tenants``: per-tenant cost / latency /
+    fault counters summing to the fleet totals — empty unless the run
+    was given a tenant split).
     """
 
     billed_cost: float                 # total $ for all MoE layers
@@ -228,6 +231,10 @@ class ExecutionReport:
     #                                    containers at end of run (gauge)
     cache_keepalive_gb_s: float = 0.0  # billed idle keep-alive of resident
     #                                    containers between windows
+    # per-tenant accounting: tenant name -> plain-typed breakdown dict
+    # (billed_cost / latency_s / cold_starts / ... summing to the fleet
+    # totals). Empty unless the run was given a tenant split.
+    tenants: Dict[str, Dict[str, Any]] = field(default_factory=dict)
     extras: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -280,6 +287,13 @@ class ExecutionReport:
                 "packed_experts": int(self.packed_experts),
                 "cache_keepalive_gb_s": float(self.cache_keepalive_gb_s),
             }
+        # and for multi-tenant accounting: the "tenants" block appears
+        # ONLY when the run was given a tenant split, so tenant-less
+        # reports (and every pre-tenancy golden fixture) keep the exact
+        # historical wire schema
+        if self.tenants:
+            d["tenants"] = {name: dict(t)
+                            for name, t in self.tenants.items()}
         return d
 
     def to_json(self, **json_kwargs) -> str:

@@ -1,0 +1,320 @@
+"""Multi-tenant planning: one shared fleet, N tenants, per-tenant SLOs.
+
+The paper plans one MoE deployment for one owner. A serverless
+platform's consolidation win is planning ONE container fleet + expert
+residency pool across N tenants (FaaSMoE in PAPERS.md): their traffic
+peaks rarely coincide, so the pooled fleet needs fewer replicas than
+the sum of per-tenant fleets, the shared warm pool and weight cache
+mask more cold starts, and one fleet bills one set of keep-alives.
+
+:class:`MultiTenantPlanner` (registry name ``"ods-tenant"``) plans the
+POOLED demand through a warm-started
+:class:`~repro.plan.incremental.IncrementalODSPlanner` under the
+tightest latency-bound tenant's p99 target, keeps per-tenant standalone
+planners for savings attribution, and stamps tenant shares / residency
+quotas / SLOs into ``plan.metadata["tenants"]``.
+
+:func:`run_tenants_over_traces` drives the shared plan through the
+tenants' aligned traces with per-tenant accounting
+(``ServerlessSimulator.run(..., tenants=...)``) and per-tenant cache
+residency quotas; :func:`run_tenants_independently` is the baseline it
+must beat — each tenant planned, simulated, and billed alone, merged
+with the concurrent-fleet wall-clock override.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import comm
+from repro.core.costmodel import ModelProfile, PlatformSpec
+from repro.core.deployment import apply_failure_feedback
+from repro.core.simulator import FaultProfile, ServerlessSimulator
+from repro.plan.incremental import IncrementalODSPlanner, layer_drift
+from repro.plan.schema import DeploymentPlan, ExecutionReport, plan_diff
+
+INF = float("inf")
+
+
+class MultiTenantPlanner:
+    """Plan one shared fleet for N tenants under per-tenant SLOs.
+
+    ``plan()`` satisfies the :class:`~repro.plan.planner.Planner`
+    protocol (the demand argument is the POOLED (L, E) demand); the
+    joint latency limit is the minimum over latency-bound tenants'
+    ``p99_target_s`` and the caller's ``t_limit_s`` — a plan whose
+    per-window latency meets the tightest tenant meets every tenant.
+
+    Residency quotas (``quota_floor``): each tenant may own at least
+    ``quota_floor`` and at least its token share of every layer's
+    container fleet. Quotas may overcommit (sum > 1) — they bound
+    worst-case monopolization by a bursty tenant, not steady shares.
+    """
+
+    name = "ods-tenant"
+
+    def __init__(self, tenants: Sequence = (), *,
+                 quota_floor: float = 0.25,
+                 methods: Sequence[int] = comm.METHODS,
+                 delta: float = 0.05,
+                 planning_budget_s: Optional[float] = None):
+        if not tenants:
+            raise ValueError("MultiTenantPlanner needs >= 1 tenants")
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        if not (0.0 < quota_floor <= 1.0):
+            raise ValueError("quota_floor must be in (0, 1]")
+        self.tenants = list(tenants)
+        self.quota_floor = float(quota_floor)
+        self._pooled = IncrementalODSPlanner(
+            methods, delta=delta, planning_budget_s=planning_budget_s)
+        self._standalone = {
+            t.name: IncrementalODSPlanner(
+                methods, delta=delta,
+                planning_budget_s=planning_budget_s)
+            for t in self.tenants}
+        self.last_info: Dict = {}
+
+    # ------------------------------------------------------------ shares
+    def token_shares(self) -> np.ndarray:
+        toks = np.asarray([max(t.num_tokens, 0) for t in self.tenants],
+                          float)
+        total = toks.sum()
+        if total <= 0:
+            return np.full(len(self.tenants), 1.0 / len(self.tenants))
+        return toks / total
+
+    def residency_quotas(self) -> Dict[str, float]:
+        shares = self.token_shares()
+        return {t.name: min(1.0, max(float(s), self.quota_floor))
+                for t, s in zip(self.tenants, shares)}
+
+    def joint_t_limit(self, t_limit_s: float = INF) -> float:
+        lims = [t.slo.p99_target_s for t in self.tenants
+                if t.slo.kind == "latency"]
+        return min([float(t_limit_s)] + [float(x) for x in lims])
+
+    def pooled_demand(self) -> np.ndarray:
+        return np.sum([t.total_demand() for t in self.tenants], axis=0)
+
+    # ---------------------------------------------------------- planning
+    def plan(self, demand: np.ndarray, profile: ModelProfile,
+             platform: PlatformSpec, *, t_limit_s: float = INF,
+             seed: int = 0, delta: Optional[float] = None,
+             budget_s: Optional[float] = None) -> DeploymentPlan:
+        t0 = time.perf_counter()
+        t_lim = self.joint_t_limit(t_limit_s)
+        plan = self._pooled.plan(demand, profile, platform,
+                                 t_limit_s=t_lim, seed=seed,
+                                 delta=delta, budget_s=budget_s)
+        plan.planner = self.name
+        # standalone per-tenant plans: the consolidation counterfactual
+        # (each tenant provisioned alone, under its own SLO). Warm-
+        # started across plan() calls like the pooled solve.
+        standalone_cost = 0.0
+        for t in self.tenants:
+            lim = t.slo.p99_target_s if t.slo.kind == "latency" \
+                else t_limit_s
+            p = self._standalone[t.name].plan(
+                t.total_demand(), profile, platform,
+                t_limit_s=float(lim), seed=seed,
+                delta=delta, budget_s=budget_s)
+            standalone_cost += float(p.layer_cost.sum())
+        pooled_cost = float(plan.layer_cost.sum())
+        shares = self.token_shares()
+        self.last_info = {
+            "names": [t.name for t in self.tenants],
+            "shares": [float(s) for s in shares],
+            "quotas": self.residency_quotas(),
+            "slos": [{"kind": t.slo.kind,
+                      "p99_target_s": t.slo.p99_target_s,
+                      "priority": t.slo.priority,
+                      "weight": t.slo.weight}
+                     for t in self.tenants],
+            "t_limit_s": t_lim,
+            "standalone_cost": standalone_cost,
+            "pooled_cost": pooled_cost,
+            "consolidation_savings": standalone_cost - pooled_cost,
+            "planning_s": time.perf_counter() - t0,
+        }
+        plan.metadata["tenants"] = dict(self.last_info)
+        return plan
+
+    def plan_shared(self, profile: ModelProfile, platform: PlatformSpec,
+                    *, t_limit_s: float = INF,
+                    seed: int = 0) -> DeploymentPlan:
+        """Plan from the tenants' own pooled total demand."""
+        return self.plan(self.pooled_demand(), profile, platform,
+                         t_limit_s=t_limit_s, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Trace loops: shared fleet vs independent fleets
+# ---------------------------------------------------------------------------
+
+def _tenant_windows(tenants) -> List[list]:
+    from repro.traces.tenancy import align_tenant_windows
+    return align_tenant_windows(tenants)
+
+
+def run_tenants_over_traces(tenants: Sequence, profile: ModelProfile,
+                            platform: PlatformSpec, *,
+                            planner: Optional[MultiTenantPlanner] = None,
+                            sim: Optional[ServerlessSimulator] = None,
+                            jitter: float = 0.0, seed: int = 0,
+                            faults: Optional[FaultProfile] = None,
+                            prewarm: Optional[str] = None,
+                            cache=None, alpha: float = 2.0,
+                            t_limit_s: float = INF) -> dict:
+    """Drive ONE shared plan through N tenants' aligned traces.
+
+    Per window the pooled demand executes on one simulator with
+    per-tenant attribution (``sim.run(..., tenants=...)``); failure
+    feedback re-plans the POOLED demand through the multi-tenant
+    planner (replica floors kept, cache fleet re-sized, residency
+    quotas re-applied). ``prewarm="oracle"`` warms from each window's
+    true pooled demand; ``cache`` is a
+    :class:`~repro.expcache.ContainerCacheModel` or a policy name.
+
+    Returns ``{"reports", "merged", "plans", "final_plan", "replans",
+    "planning_s"}`` — ``merged`` is the sequential merge (windows of
+    one shared fleet run back-to-back; no wall-clock override).
+    """
+    if planner is None:
+        planner = MultiTenantPlanner(tenants)
+    if sim is None:
+        sim = ServerlessSimulator(profile, platform, jitter=jitter,
+                                  seed=seed, faults=faults)
+    from repro.plan.backends import _merge_reports
+    from repro.predict import prewarm_containers
+    if prewarm not in (None, "oracle"):
+        raise ValueError(f"unsupported prewarm mode {prewarm!r}")
+    cur = planner.plan_shared(profile, platform, t_limit_s=t_limit_s,
+                              seed=seed)
+    quotas = planner.residency_quotas()
+    if isinstance(cache, str):
+        from repro.expcache import CacheConfig, ContainerCacheModel
+        cache = ContainerCacheModel.from_plan(
+            cur, profile, platform, config=CacheConfig(policy=cache))
+    if cache is not None:
+        cache.set_tenant_quotas(quotas)
+    delta = planner._pooled.delta
+    reports: List[ExecutionReport] = []
+    plans: List[DeploymentPlan] = []
+    planning_s: List[float] = [planner.last_info.get("planning_s", 0.0)]
+    replans = 0
+    for row in _tenant_windows(tenants):
+        plans.append(cur)
+        demand = np.sum([w.demand for w in row], axis=0)
+        tokens = int(sum(w.num_tokens for w in row))
+        pw = prewarm_containers(cur, demand) if prewarm == "oracle" \
+            else None
+        per_tenant = [(t.name, w.demand, w.num_tokens)
+                      for t, w in zip(tenants, row)]
+        rep = sim.run(cur, demand, tokens, prewarm=pw, cache=cache,
+                      tenants=per_tenant)
+        reports.append(rep)
+        adjusted, rho_case, _ = apply_failure_feedback(
+            cur, rep.real_demand, profile, platform, alpha=alpha)
+        if rho_case < 3:
+            if delta > 0 and not (
+                    layer_drift(cur.demand, rep.real_demand)
+                    > delta).any():
+                planning_s.append(0.0)
+                cur = adjusted
+                continue
+            fresh = planner.plan(rep.real_demand, profile, platform,
+                                 t_limit_s=t_limit_s, seed=seed)
+            planning_s.append(planner.last_info["planning_s"])
+            fresh.replicas = np.maximum(fresh.replicas,
+                                        adjusted.replicas)
+            fresh.metadata["replan_diff"] = plan_diff(cur, fresh)
+            cur = fresh
+            replans += 1
+            if cache is not None:
+                cache.resize_to_plan(cur)
+                cache.set_tenant_quotas(planner.residency_quotas())
+        else:
+            planning_s.append(0.0)
+            cur = adjusted
+    merged = _merge_reports(reports, backend="simulator")
+    return {"reports": reports, "merged": merged, "plans": plans,
+            "final_plan": cur, "replans": replans,
+            "planning_s": planning_s}
+
+
+def run_tenants_independently(tenants: Sequence, profile: ModelProfile,
+                              platform: PlatformSpec, *,
+                              jitter: float = 0.0, seed: int = 0,
+                              faults: Optional[FaultProfile] = None,
+                              prewarm: Optional[str] = None,
+                              cache: Optional[str] = None,
+                              alpha: float = 2.0,
+                              t_limit_s: float = INF,
+                              delta: float = 0.05) -> dict:
+    """The consolidation baseline: every tenant planned and served on
+    its OWN fleet (own planner, own simulator stream, own cache built
+    from its own plan when ``cache`` names a policy).
+
+    The merged report uses the wall-clock override of
+    ``_merge_reports``: N independent fleets run CONCURRENTLY, so the
+    elapsed time is the slowest tenant's serial latency, not the sum.
+    Per-tenant blocks are attached so shared-vs-independent p99 and
+    cost compare like-for-like.
+
+    Returns ``{"merged", "per_tenant"}`` (``per_tenant`` maps name ->
+    the tenant's own ``run_plan_over_trace`` result).
+    """
+    from repro.plan.backends import _merge_reports, run_plan_over_trace
+    per_tenant: Dict[str, dict] = {}
+    all_reports: List[ExecutionReport] = []
+    tenant_blocks: Dict[str, dict] = {}
+    wall = 0.0
+    for k, t in enumerate(tenants):
+        pl = IncrementalODSPlanner(delta=delta)
+        lim = t.slo.p99_target_s if t.slo.kind == "latency" else t_limit_s
+        s = ServerlessSimulator(profile, platform, jitter=jitter,
+                                seed=seed + 101 * k, faults=faults)
+        plan0 = pl.plan(t.total_demand(), profile, platform,
+                        t_limit_s=float(lim), seed=seed)
+        res = run_plan_over_trace(
+            plan0, t.trace, s, profile, platform,
+            plan_fn=lambda d, _pl=pl, _lim=lim, **kw: _pl.plan(
+                d, profile, platform, t_limit_s=float(_lim),
+                seed=seed, **kw),
+            alpha=alpha, prewarm=prewarm, cache=cache, delta=delta)
+        per_tenant[t.name] = res
+        reps = res["reports"]
+        all_reports.extend(reps)
+        samples = [float(r.latency_s) for r in reps]
+        serial = float(sum(samples))
+        wall = max(wall, serial)
+        tenant_blocks[t.name] = {
+            "billed_cost": float(sum(r.billed_cost for r in reps)),
+            "latency_s": serial,
+            "latency_samples": samples,
+            "p99_latency_s": float(np.percentile(samples, 99.0))
+            if samples else 0.0,
+            "max_latency_s": float(max(samples)) if samples else 0.0,
+            "num_tokens": int(sum(r.num_tokens for r in reps)),
+            "throughput_tps": sum(r.num_tokens for r in reps)
+            / max(serial, 1e-9),
+            "cold_starts": int(sum(r.cold_starts for r in reps)),
+            "cold_start_s": float(sum(r.cold_start_s for r in reps)),
+            "retries": int(sum(r.retries for r in reps)),
+            "stragglers": int(sum(r.stragglers for r in reps)),
+            "queue_delay_s": float(sum(r.queue_delay_s for r in reps)),
+            "prewarm_hits": int(sum(getattr(r, "prewarm_hits", 0)
+                                    for r in reps)),
+            "cache_hits": int(sum(getattr(r, "cache_hits", 0)
+                                  for r in reps)),
+            "cache_swaps": int(sum(getattr(r, "cache_swaps", 0)
+                                   for r in reps)),
+        }
+    merged = _merge_reports(all_reports, backend="simulator",
+                            wall_clock_s=wall)
+    merged.tenants = tenant_blocks
+    return {"merged": merged, "per_tenant": per_tenant}

@@ -54,7 +54,9 @@ class ServingEngine:
                  batch_size: int = 4, eos_id: Optional[int] = None,
                  collect_telemetry: bool = True, prompt_bucket: int = 8,
                  moe_executor: str = "grouped", predictor=None,
-                 cache=None):
+                 cache=None, fair_aging: float = 64.0,
+                 priority_aging: float = 0.0,
+                 tenant_weights: Optional[Dict[str, float]] = None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -70,7 +72,9 @@ class ServingEngine:
         self.batch_size = batch_size          # == number of decode slots
         self.num_slots = batch_size
         self.eos_id = eos_id
-        self.scheduler = SlotScheduler(self.num_slots)
+        self.scheduler = SlotScheduler(self.num_slots, aging=fair_aging,
+                                       priority_aging=priority_aging,
+                                       weights=tenant_weights)
         self.kv = SlotKVCache(model, self.num_slots, max_len)
         moe = self.cfg.moe
         self.telemetry: Optional[ExpertTelemetry] = (
@@ -170,7 +174,9 @@ class ServingEngine:
 
     # --------------------------------------------------------------- submit
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               tenant: Optional[str] = None,
+               priority: int = 0) -> Request:
         prompt = np.asarray(prompt, np.int32).ravel()
         if len(prompt) == 0:
             raise ValueError("empty prompt")
@@ -181,7 +187,9 @@ class ServingEngine:
         if self._enc_dec and self.cfg.encoder is not None:
             if len(prompt) > self.cfg.encoder.source_len:
                 raise ValueError("prompt exceeds encoder source_len")
-        return self.scheduler.submit(prompt, max_new_tokens, eos_id=eos_id)
+        return self.scheduler.submit(prompt, max_new_tokens, eos_id=eos_id,
+                                     tenant=tenant, priority=priority,
+                                     submit_step=self.step_count)
 
     # ------------------------------------------------------------ admission
     def _prefill_kwargs(self, prompt: np.ndarray) -> Dict[str, Any]:
@@ -425,7 +433,9 @@ class ServingEngine:
             while arr_i < len(queue_arr) \
                     and queue_arr[arr_i].arrival_step <= step:
                 r = queue_arr[arr_i]
-                self.submit(r.prompt, max_new_tokens=r.max_new_tokens)
+                self.submit(r.prompt, max_new_tokens=r.max_new_tokens,
+                            tenant=getattr(r, "tenant", None),
+                            priority=getattr(r, "priority", 0))
                 arr_i += 1
 
         _submit_due(0)
@@ -462,7 +472,9 @@ class ServingEngine:
         # the next run() serves them
         while arr_i < len(queue_arr):
             r = queue_arr[arr_i]
-            self.submit(r.prompt, max_new_tokens=r.max_new_tokens)
+            self.submit(r.prompt, max_new_tokens=r.max_new_tokens,
+                        tenant=getattr(r, "tenant", None),
+                        priority=getattr(r, "priority", 0))
             arr_i += 1
         if self.scheduler.has_work:
             for req in list(self.scheduler.active()):

@@ -9,9 +9,13 @@ from repro.traces.generators import (Trace, TraceRequest, TraceWindow,
                                      poisson_arrivals, replay_telemetry,
                                      request_trace, zipf_popularity,
                                      zipf_routing)
+from repro.traces.tenancy import (Tenant, TenantSLO,
+                                  align_tenant_windows,
+                                  mixed_tenant_pair)
 
 __all__ = [
     "Trace", "TraceRequest", "TraceWindow",
+    "Tenant", "TenantSLO", "align_tenant_windows", "mixed_tenant_pair",
     "poisson_arrivals", "bursty_arrivals", "diurnal_arrivals",
     "zipf_popularity", "drift_popularity", "zipf_routing",
     "demand_trace", "replay_telemetry", "request_trace",

@@ -38,6 +38,8 @@ class TraceRequest:
     arrival_step: int           # decode step at which the request arrives
     prompt: np.ndarray          # 1-D token ids
     max_new_tokens: int = 8
+    tenant: Optional[str] = None  # owning tenant (fair-share admission)
+    priority: int = 0           # higher admits first within fair-share
 
 
 @dataclass
@@ -227,14 +229,17 @@ def replay_telemetry(telemetry, *, num_windows: int = 1,
 
 def request_trace(arrivals: np.ndarray, vocab_size: int, *,
                   prompt_len: int = 8, max_new_tokens: int = 8,
-                  steps_per_window: int = 4,
-                  seed: int = 0) -> List[TraceRequest]:
+                  steps_per_window: int = 4, seed: int = 0,
+                  tenant: Optional[str] = None,
+                  priority: int = 0) -> List[TraceRequest]:
     """Expand per-window arrival counts into timed engine requests.
 
     Window ``t`` contributes ``arrivals[t]`` requests arriving at decode
     step ``t * steps_per_window``, each with a random ``prompt_len``-token
     prompt — input for ``ServingEngine.run(arrivals=...)`` /
-    ``ServingBackend.execute_requests``.
+    ``ServingBackend.execute_requests``. ``tenant``/``priority`` stamp
+    every request (interleave several calls for a multi-tenant arrival
+    schedule).
     """
     rng = np.random.default_rng(seed)
     out: List[TraceRequest] = []
@@ -244,5 +249,6 @@ def request_trace(arrivals: np.ndarray, vocab_size: int, *,
                 arrival_step=t * steps_per_window,
                 prompt=rng.integers(0, vocab_size, size=prompt_len,
                                     dtype=np.int64),
-                max_new_tokens=max_new_tokens))
+                max_new_tokens=max_new_tokens,
+                tenant=tenant, priority=priority))
     return out

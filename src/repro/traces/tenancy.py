@@ -1,0 +1,129 @@
+"""Tenant specifications: who shares the fleet, and on what terms.
+
+A serverless platform's whole value is consolidating many tenants onto
+one warm container fleet (FaaSMoE in PAPERS.md); this module gives the
+planner and simulator a first-class vocabulary for that. A
+:class:`Tenant` binds a name to a demand :class:`~repro.traces.Trace`
+and a :class:`TenantSLO` — either **latency-bound** (a p99 per-window
+latency target the shared plan must respect: the planner folds the
+tightest target into the joint ``t_limit_s``) or **cost-bound** (no
+latency constraint; the tenant rides whatever consolidation yields).
+
+Pure numpy, no JAX — importable by the simulator and benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .generators import Trace, TraceWindow, bursty_arrivals, \
+    demand_trace, diurnal_arrivals, zipf_popularity
+
+
+@dataclass(frozen=True)
+class TenantSLO:
+    """A tenant's service-level objective.
+
+    ``kind`` is ``"latency"`` (p99 per-window latency must stay under
+    ``p99_target_s``) or ``"cost"`` (cost-minimizing best-effort; no
+    latency bound). ``priority`` orders admission in the serving
+    engine's fair-share scheduler (higher first); ``weight`` scales the
+    tenant's fair share of slot throughput.
+    """
+
+    kind: str = "cost"
+    p99_target_s: Optional[float] = None
+    priority: int = 0
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("latency", "cost"):
+            raise ValueError(f"unknown SLO kind {self.kind!r}")
+        if self.kind == "latency" and (
+                self.p99_target_s is None or self.p99_target_s <= 0):
+            raise ValueError(
+                "latency-bound SLO needs a positive p99_target_s")
+        if self.weight <= 0:
+            raise ValueError("SLO weight must be positive")
+
+
+@dataclass
+class Tenant:
+    """One tenant of the shared fleet: a named trace plus its SLO."""
+
+    name: str
+    trace: Trace
+    slo: TenantSLO = field(default_factory=TenantSLO)
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("tenant needs a non-empty name")
+
+    @property
+    def num_tokens(self) -> int:
+        return self.trace.num_tokens
+
+    def total_demand(self) -> np.ndarray:
+        return self.trace.total_demand()
+
+
+def align_tenant_windows(tenants: Sequence[Tenant]
+                         ) -> List[List[TraceWindow]]:
+    """Align tenants' traces on a common window axis.
+
+    Returns one list per window index; shorter traces are padded with
+    zero-demand windows (shape taken from the tenant's own trace) so
+    every window has exactly one entry per tenant, in tenant order.
+    """
+    if not tenants:
+        raise ValueError("no tenants")
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    shapes = {t.name: t.trace.windows[0].demand.shape for t in tenants
+              if t.trace.windows}
+    if len(set(shapes.values())) > 1:
+        raise ValueError(f"tenant traces disagree on (L, E): {shapes}")
+    n = max(len(t.trace) for t in tenants)
+    shape = next(iter(shapes.values()))
+    out: List[List[TraceWindow]] = []
+    for i in range(n):
+        row = []
+        for t in tenants:
+            if i < len(t.trace):
+                row.append(t.trace.windows[i])
+            else:
+                row.append(TraceWindow(demand=np.zeros(shape),
+                                       num_tokens=0,
+                                       t_start_s=float(i)))
+        out.append(row)
+    return out
+
+
+def mixed_tenant_pair(num_layers: int, num_experts: int, *,
+                      steps: int = 12, rate: float = 3.0,
+                      tokens_per_request: int = 64,
+                      p99_target_s: float = 60.0,
+                      seed: int = 0) -> Tuple[Tenant, Tenant]:
+    """The ISSUE's canonical mixed pair: a bursty latency-bound tenant
+    and a diurnal cost-bound one, with distinct Zipf popularity
+    profiles (seeded independently so their hot experts differ — the
+    regime where a shared pool wins by statistical multiplexing: their
+    peaks do not coincide, so the pooled fleet is smaller than the sum
+    of per-tenant fleets)."""
+    burst = demand_trace(
+        bursty_arrivals(rate, steps, seed=seed),
+        zipf_popularity(num_layers, num_experts, seed=seed),
+        tokens_per_request=tokens_per_request)
+    slow = demand_trace(
+        diurnal_arrivals(rate, steps, period=steps, seed=seed + 1),
+        zipf_popularity(num_layers, num_experts, seed=seed + 1),
+        tokens_per_request=tokens_per_request)
+    return (
+        Tenant("bursty", burst,
+               TenantSLO(kind="latency", p99_target_s=p99_target_s,
+                         priority=1)),
+        Tenant("diurnal", slow, TenantSLO(kind="cost")),
+    )
