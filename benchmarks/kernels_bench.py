@@ -9,12 +9,17 @@ documented BlockSpec tiling, plus the allclose check against the oracle.
 path against the DROPLESS grouped ragged-GEMM path over Zipf routing
 skew: dense FLOPs stay pinned to ``E * capacity`` whatever the skew
 (padding cold experts with dead rows while dropping the hot experts'
-overflow), grouped FLOPs track the tokens actually routed. ``--smoke``
-runs one reduced sweep point + the dense-vs-grouped-vs-oracle parity
-check (CI).
+overflow), grouped FLOPs track the tokens actually routed.
+``fused_routing_bench`` times the single-pass fused routing front-end
+(one top_k + one-hot cumsum) against the separate-pass baseline
+(top_k, then argsort/bincount/cumsum inside the plan builder) and
+enforces a routed-pairs/s FLOOR on the fused path. ``--smoke`` runs one
+reduced sweep point + the parity checks + the fused-routing floor (CI).
+Every emitted row also lands machine-readable in ``BENCH_kernels.json``.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -116,6 +121,76 @@ def moe_dispatch_sweep(smoke: bool = False) -> None:
              f"allclose_err={err:.1e}")
 
 
+def fused_routing_bench(smoke: bool = False) -> None:
+    """Single-pass fused routing vs the separate-pass baseline.
+
+    Both paths produce the complete grouped-dispatch metadata a MoE
+    layer needs (indices, weights, within-expert ranks, counts, group
+    offsets): "reference" runs ``route`` and then the argsort + bincount
+    + cumsum plan builder (the pre-fusion front-end); "fused" runs
+    ``route_fused``'s one top_k + one-hot cumsum and derives the plan
+    arithmetically. Integer outputs must be bit-equal; the fused
+    Pallas kernel is parity-checked on the same inputs (interpret-mode
+    wall time measures the emulator, so it is not timed). The floor
+    assert guards order-of-magnitude regressions in the fused path, not
+    microarchitectural noise.
+    """
+    from repro.config import MoEConfig
+    from repro.models.moe import (build_grouped_dispatch,
+                                  grouped_dispatch_from_fused, route,
+                                  route_fused, route_fused_pallas)
+
+    N, D, E, k = (512, 64, 8, 2) if smoke else (2048, 256, 60, 4)
+    m = MoEConfig(num_experts=E, top_k=k, d_expert_ff=4 * D)
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = 0.3 * jax.random.normal(ks[0], (N, D))
+    w = jax.random.normal(ks[1], (D, E))
+
+    def ref_path(w, x):
+        r = route(w, x, m)
+        gd = build_grouped_dispatch(r.topk_idx, E, block_rows=8)
+        return r.topk_idx, r.topk_weight, gd
+
+    def fused_path(w, x):
+        fr = route_fused(w, x, m)
+        gd = grouped_dispatch_from_fused(fr, E, block_rows=8)
+        return fr.topk_idx, fr.topk_weight, gd
+
+    ref_fn, fus_fn = jax.jit(ref_path), jax.jit(fused_path)
+    us_ref = _time(ref_fn, w, x, reps=10)
+    us_fus = _time(fus_fn, w, x, reps=10)
+
+    idx_r, wt_r, gd_r = ref_fn(w, x)
+    idx_f, wt_f, gd_f = fus_fn(w, x)
+    assert bool((idx_r == idx_f).all()) and bool((wt_r == wt_f).all())
+    for gr, gf in zip(jax.tree.leaves(gd_r), jax.tree.leaves(gd_f)):
+        assert bool(np.all(np.asarray(gr) == np.asarray(gf))), \
+            "fused dispatch plan drifted"
+    fr_pal = route_fused_pallas(w, x, m)
+    assert bool((fr_pal.topk_idx == idx_f).all())
+    assert bool((fr_pal.expert_counts
+                 == np.bincount(np.asarray(idx_f).ravel(),
+                                minlength=E)).all())
+
+    pairs_ref = N * k / (us_ref * 1e-6)
+    pairs_fus = N * k / (us_fus * 1e-6)
+    emit("routing_fused", us_fus,
+         f"pairs_per_s={pairs_fus:.3e};reference_us={us_ref:.1f};"
+         f"speedup={us_ref / us_fus:.2f}x;pallas_parity=exact")
+    assert pairs_fus >= 0.5 * pairs_ref, (
+        f"fused routing regressed past the floor: "
+        f"{pairs_fus:.3e} pairs/s vs reference {pairs_ref:.3e}")
+
+
+def dump_rows(out_path: str = "BENCH_kernels.json") -> None:
+    """Persist every emitted CSV row machine-readable (CI artifact)."""
+    from benchmarks.common import ROWS
+    with open(out_path, "w") as f:
+        json.dump([{"name": n, "us_per_call": u, "derived": d}
+                   for n, u, d in ROWS], f, indent=1)
+    print(f"wrote {out_path} ({len(ROWS)} rows)")
+
+
 def run() -> None:
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
 
@@ -182,10 +257,13 @@ def run() -> None:
          f"tpu_us_at_peak={flops / PEAK * 1e6:.2f}")
 
     moe_dispatch_sweep()
+    fused_routing_bench()
 
 
 if __name__ == "__main__":
     if "--smoke" in sys.argv[1:]:
         moe_dispatch_sweep(smoke=True)
+        fused_routing_bench(smoke=True)
     else:
         run()
+    dump_rows()

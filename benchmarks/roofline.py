@@ -23,10 +23,10 @@ import json
 from pathlib import Path
 from typing import Dict, List, Optional
 
-# TPU v5e hardware constants (per chip), from the assignment brief
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-ICI_BW = 50e9                # bytes/s per link
+# TPU v5e hardware constants (per chip) live with the kernel autotuner,
+# which scores block-size candidates against the same roofline terms —
+# one source of truth for both analyses.
+from repro.kernels.autotune import HBM_BW, ICI_BW, PEAK_FLOPS
 
 WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                "all-to-all": 1.0, "collective-permute": 1.0}

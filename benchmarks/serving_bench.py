@@ -15,11 +15,20 @@ time-to-first-token. Emits CSV rows per the harness contract:
     serving.<engine>.tokens_per_s,us_total,tok_per_s
     serving.<engine>.ttft_ms,us_total,mean_ttft_ms
 
-Run:  PYTHONPATH=src python -m benchmarks.serving_bench
+``kernels_comparison`` additionally replays one workload through the
+engine's kernel paths: ``kernels="reference"`` (the PR-4 hot path, full
+``max_len`` attention reads every decode step) vs ``kernels="fused"``
+(fused single-pass routing + bucketed ragged ``kv_len`` decode). Outputs
+must match token-for-token; ``--smoke`` (CI) additionally enforces a
+steady-state tokens/s FLOOR on the fused path and writes
+``BENCH_serving.json``.
+
+Run:  PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import List
 
@@ -136,14 +145,84 @@ def run(arch: str = "gpt2-moe", n_requests: int = 12, slots: int = 4,
          f"{(n_new / dt_new) / (n_old / dt_old):.2f}x")
 
 
+def kernels_comparison(arch: str = "gpt2-moe", n_requests: int = 8,
+                       slots: int = 4, max_len: int = 256,
+                       max_new: int = 24, floor: float = 0.0) -> dict:
+    """Fused kernel path vs the reference engine on one ragged workload.
+
+    ``max_len`` is deliberately generous relative to the served lengths:
+    the reference path attends over all ``max_len`` cache rows every
+    decode step, while the fused path's bucketed ``kv_len`` reads only
+    the occupied prefix — that gap IS the optimisation being measured.
+    Outputs must match token-for-token (the fused path is equivalence-
+    pinned, not approximate). With ``floor > 0`` the fused tokens/s must
+    reach ``floor *`` the reference tokens/s; the CI floor is set well
+    under 1.0 so it catches the fused path falling off a cliff, not
+    scheduler jitter on shared runners.
+    """
+    cfg = reduced_config(get_arch(arch))
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 16))).astype(np.int32)
+               for _ in range(n_requests)]
+
+    rates, outs = {}, {}
+    for kern in ("reference", "fused"):
+        eng = ServingEngine(model, params, max_len=max_len,
+                            batch_size=slots, collect_telemetry=False,
+                            kernels=kern)
+        # warm pass: steady-state rates, measured after jit caches (and
+        # the fused path's kv_len buckets) exist for these shapes
+        for p in prompts:
+            eng.submit(p, max_new_tokens=max_new)
+        eng.run(max_steps=10_000)
+        t0 = time.perf_counter()
+        reqs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+        done = eng.run(max_steps=10_000)
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.output) for r in done)
+        rates[kern] = n_tok / dt
+        outs[kern] = [r.output for r in reqs]
+        emit(f"serving.kernels.{kern}.tokens_per_s", dt * 1e6,
+             f"{rates[kern]:.2f}")
+
+    assert outs["fused"] == outs["reference"], \
+        "fused kernel path drifted from the reference engine's outputs"
+    ratio = rates["fused"] / rates["reference"]
+    emit("serving.kernels.fused_speedup", 0.0, f"{ratio:.2f}x")
+    if floor > 0.0:
+        assert ratio >= floor, (
+            f"fused path fell past the throughput floor: "
+            f"{rates['fused']:.1f} tok/s vs reference "
+            f"{rates['reference']:.1f} tok/s (floor {floor}x)")
+    return {"tokens_per_s": rates, "fused_speedup": ratio,
+            "outputs_match": True, "arch": arch, "max_len": max_len}
+
+
+def smoke(out_path: str = "BENCH_serving.json") -> None:
+    results = kernels_comparison(n_requests=6, slots=3, max_len=192,
+                                 max_new=16, floor=0.8)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    print(f"wrote {out_path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-moe")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: fused-vs-reference floor + BENCH_serving.json")
     args = ap.parse_args()
-    run(args.arch, args.requests, args.slots, args.max_len)
+    if args.smoke:
+        smoke()
+    else:
+        run(args.arch, args.requests, args.slots, args.max_len)
+        kernels_comparison()
 
 
 if __name__ == "__main__":

@@ -75,6 +75,7 @@ class _InvState:
     done: bool = False
     busy_s: float = 0.0            # measured busy across all attempts
     backoff_s: float = 0.0         # virtual backoff waited (scaled)
+    queue_s: float = 0.0           # concurrency-gate wait, this invocation
     lost_attempts: int = 0         # attempts that died with the worker
     retries: int = 0
     dispatch_wall: float = 0.0
@@ -95,6 +96,12 @@ class WaveOutcome:
     chunk_msgs: int                        # chunk messages dispatched
     outputs: Dict[Tuple[int, int], object]  # (inv_id, chunk_id) -> y
     timeouts: int = 0
+    # per-invocation attribution surfaces: who waited at the concurrency
+    # gate and when each invocation's span ended, so a multi-tenant
+    # caller can bill queue delay / makespan excess to the account that
+    # incurred them instead of splitting globally
+    queue_delay_by_inv: Dict[int, float] = field(default_factory=dict)
+    span_by_inv: Dict[int, float] = field(default_factory=dict)
 
 
 class ChunkedDispatcher:
@@ -191,7 +198,9 @@ class ChunkedDispatcher:
                 if st.done:
                     continue
                 if limit:
-                    queue_delay += now - st.ready_wall
+                    qd = now - st.ready_wall
+                    queue_delay += qd
+                    st.queue_s += qd
                 chunk_msgs += self._dispatch(st, now)
                 inflight[iid] = st
             if remaining == 0:
@@ -250,13 +259,14 @@ class ChunkedDispatcher:
                     self._schedule_retry(st, retry_heap, now, lost=True)
 
         if tr.realtime:
-            makespan = max((st.end_wall for st in states.values()),
-                           default=wall0) - wall0
+            spans = {i: max(st.end_wall - wall0, 0.0)
+                     for i, st in states.items()}
         else:
             # virtual span: an invocation ends after its busy time plus
             # the backoffs it waited through; the wave spans the slowest
-            makespan = max((st.busy_s + st.backoff_s
-                            for st in states.values()), default=0.0)
+            spans = {i: st.busy_s + st.backoff_s
+                     for i, st in states.items()}
+        makespan = max(spans.values(), default=0.0)
         return WaveOutcome(
             busy_s={i: st.busy_s for i, st in states.items()},
             attempts={i: st.attempt for i, st in states.items()},
@@ -268,4 +278,6 @@ class ChunkedDispatcher:
             chunk_msgs=chunk_msgs,
             outputs=outputs,
             timeouts=timeouts,
+            queue_delay_by_inv={i: st.queue_s for i, st in states.items()},
+            span_by_inv=spans,
         )

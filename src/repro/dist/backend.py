@@ -249,11 +249,11 @@ class DistributedBackend:
         workers' containers hold resident expert sets; swap counts and
         GB-seconds land in the report's conditional cache block;
         ``tenants``: the simulator's per-tenant split — measured wave
-        extras bill to the account whose replica drew them, while
-        queue delay and the wave's global makespan excess, which the
-        dispatcher does not attribute per invocation, split by token
-        share / accrue to every tenant (coarser than the simulator's
-        per-account makespans, documented here)."""
+        extras AND queue delay bill to the account whose replica
+        incurred them (the dispatcher reports both per invocation), and
+        each account carries the excess of its OWN invocations' makespan
+        over the fault-free critical path, mirroring the simulator's
+        ``wave_tallies`` attribution)."""
         from repro.core.simulator import (ServerlessSimulator,
                                           TenantAccounting,
                                           replica_accounts)
@@ -333,8 +333,11 @@ class DistributedBackend:
                 account_names=(tn[0] if tn is not None else None))
             inv_id0 += len(invs)
             wasted_gb_s = 0.0
+            wave_excess = 0.0
             extras_t = np.zeros((len(tn[0]), E)) if tn is not None \
                 else None
+            extra_lat_t = np.zeros(len(tn[0])) if tn is not None else None
+            acct_span = np.zeros(len(tn[0])) if tn is not None else None
             if invs:
                 out = disp.run_wave(invs)
                 for m in metas:
@@ -367,6 +370,13 @@ class DistributedBackend:
                         a = m["account"]
                         extras_t[a, m["expert"]] += max(extra, 0.0)
                         c = acct.counters
+                        # queue delay bills to the account whose
+                        # invocation waited at the concurrency gate
+                        c["queue_delay_s"][a] += \
+                            out.queue_delay_by_inv.get(iid, 0.0) / scale
+                        acct_span[a] = max(
+                            acct_span[a],
+                            out.span_by_inv.get(iid, 0.0) / scale)
                         c["retries"][a] += n_retries
                         if m["cold"]:
                             c["cold_starts"][a] += 1
@@ -380,13 +390,15 @@ class DistributedBackend:
                         if m["swap"]:
                             c["cache_swaps"][a] += 1
                 makespan = out.makespan_s / scale
-                t_lat += max(makespan - base_makespan, 0.0)
+                wave_excess = max(makespan - base_makespan, 0.0)
+                t_lat += wave_excess
                 breakdown["queue_delay_s"] += out.queue_delay_s / scale
                 if acct is not None:
-                    # the dispatcher's queue delay is wave-global: split
-                    # by token share (no per-invocation attribution)
-                    acct.counters["queue_delay_s"] += \
-                        acct.token_share * (out.queue_delay_s / scale)
+                    # mirror the simulator's wave_tallies: each account's
+                    # extra latency is the excess of its OWN invocations'
+                    # makespan over the fault-free critical path
+                    extra_lat_t = np.maximum(acct_span - base_makespan,
+                                             0.0)
                 if self.verify_outputs:
                     v, mm = self._verify(invs, out.outputs)
                     verified += v
@@ -440,13 +452,13 @@ class DistributedBackend:
                 + cache_gb_s * spec.price_per_gb_s
             layer_lat[e] = t_lat
             if acct is not None:
-                # every tenant carries the full layer latency (the wave's
-                # makespan excess is global here — no per-account
-                # makespans from the dispatcher)
+                # every tenant carries the fault-free critical path (all
+                # wait for the shared wave) plus ITS OWN account's
+                # makespan excess — the simulator's latency contract
                 acct.add_layer(e, t_total=t_total,
                                extras_by_acct=extras_t, mem_mb=mem,
-                               base_lat=t_lat,
-                               extra_lat=np.zeros(len(tn[0])),
+                               base_lat=t_lat - wave_excess,
+                               extra_lat=extra_lat_t,
                                shared_gb_s=wasted_gb_s + cache_gb_s)
 
         total_lat = (prof.t_head_s + prof.t_tail_s

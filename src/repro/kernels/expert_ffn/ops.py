@@ -1,7 +1,9 @@
-"""Public jit'd wrapper for the expert FFN kernel.
+"""Public wrapper for the expert FFN kernel.
 
 On this CPU container the kernel body executes under ``interpret=True``;
 on a real TPU pass ``interpret=False`` (the BlockSpecs are TPU-shaped).
+``block_c=None`` / ``block_f=None`` defer the tile sizes to the
+autotuner (:mod:`repro.kernels.autotune`); explicit values bypass it.
 """
 from __future__ import annotations
 
@@ -11,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import resolve
 from repro.kernels.expert_ffn.kernel import expert_ffn_kernel
 
 
@@ -31,11 +34,10 @@ def aligned_block(block: int, dim: int, sublane: int = 8) -> int:
 
 @partial(jax.jit, static_argnames=("activation", "block_c", "block_f",
                                    "interpret"))
-def expert_ffn_pallas(buf: jnp.ndarray, w_gate: jnp.ndarray,
-                      w_up: Optional[jnp.ndarray], w_down: jnp.ndarray, *,
-                      activation: str = "swiglu", block_c: int = 128,
-                      block_f: int = 128,
-                      interpret: bool = True) -> jnp.ndarray:
+def _expert_ffn_jit(buf: jnp.ndarray, w_gate: jnp.ndarray,
+                    w_up: Optional[jnp.ndarray], w_down: jnp.ndarray, *,
+                    activation: str, block_c: int, block_f: int,
+                    interpret: bool) -> jnp.ndarray:
     # pad capacity / ffn dims up to the (sublane-aligned) block multiples
     E, C, D = buf.shape
     F = w_gate.shape[-1]
@@ -52,6 +54,23 @@ def expert_ffn_pallas(buf: jnp.ndarray, w_gate: jnp.ndarray,
                             activation=activation, block_c=bc, block_f=bf,
                             interpret=interpret)
     return out[:, :C] if pc else out
+
+
+def expert_ffn_pallas(buf: jnp.ndarray, w_gate: jnp.ndarray,
+                      w_up: Optional[jnp.ndarray], w_down: jnp.ndarray, *,
+                      activation: str = "swiglu",
+                      block_c: int | None = None,
+                      block_f: int | None = None,
+                      interpret: bool = True) -> jnp.ndarray:
+    E, C, D = buf.shape
+    F = w_gate.shape[-1]
+    if block_c is None or block_f is None:
+        knobs = resolve("expert_ffn", buf.dtype, E=E, C=C, D=D, F=F)
+        block_c = block_c if block_c is not None else knobs["block_c"]
+        block_f = block_f if block_f is not None else knobs["block_f"]
+    return _expert_ffn_jit(buf, w_gate, w_up, w_down, activation=activation,
+                           block_c=block_c, block_f=block_f,
+                           interpret=interpret)
 
 
 def moe_expert_ffn_adapter(params, buf, activation, *, interpret=True):

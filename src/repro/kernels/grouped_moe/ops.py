@@ -10,18 +10,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import resolve
 from repro.kernels.expert_ffn.ops import aligned_block
 from repro.kernels.grouped_moe.kernel import grouped_moe_kernel
 
 
 @partial(jax.jit, static_argnames=("activation", "block_f", "interpret"))
-def grouped_moe_pallas(x_sorted: jnp.ndarray, tile_expert: jnp.ndarray,
-                       w_gate: jnp.ndarray, w_up, w_down: jnp.ndarray, *,
-                       activation: str = "swiglu", block_f: int = 128,
-                       interpret: bool = True) -> jnp.ndarray:
-    """x_sorted: (R, D) expert-sorted token rows, each ``R // len(tile_expert)``
-    row tile owned by expert ``tile_expert[t]`` (group padding rows are
-    zero). Returns the per-row expert FFN output, same shape/dtype."""
+def _grouped_moe_jit(x_sorted: jnp.ndarray, tile_expert: jnp.ndarray,
+                     w_gate: jnp.ndarray, w_up, w_down: jnp.ndarray, *,
+                     activation: str, block_f: int,
+                     interpret: bool) -> jnp.ndarray:
     R, D = x_sorted.shape
     nt = tile_expert.shape[0]
     assert R % nt == 0, (R, nt)
@@ -37,6 +35,25 @@ def grouped_moe_pallas(x_sorted: jnp.ndarray, tile_expert: jnp.ndarray,
     return grouped_moe_kernel(x_sorted, tile_expert, w_gate, w_up, w_down,
                               activation=activation, block_rows=block_rows,
                               block_f=bf, interpret=interpret)
+
+
+def grouped_moe_pallas(x_sorted: jnp.ndarray, tile_expert: jnp.ndarray,
+                       w_gate: jnp.ndarray, w_up, w_down: jnp.ndarray, *,
+                       activation: str = "swiglu",
+                       block_f: int | None = None,
+                       interpret: bool = True) -> jnp.ndarray:
+    """x_sorted: (R, D) expert-sorted token rows, each ``R // len(tile_expert)``
+    row tile owned by expert ``tile_expert[t]`` (group padding rows are
+    zero). Returns the per-row expert FFN output, same shape/dtype.
+    ``block_f=None`` defers the FFN tile width to the autotuner."""
+    R, D = x_sorted.shape
+    F = w_gate.shape[-1]
+    if block_f is None:
+        block_f = resolve("grouped_moe", x_sorted.dtype,
+                          rows=R, D=D, F=F)["block_f"]
+    return _grouped_moe_jit(x_sorted, tile_expert, w_gate, w_up, w_down,
+                            activation=activation, block_f=block_f,
+                            interpret=interpret)
 
 
 def moe_grouped_ffn_adapter(params, x_sorted, tile_expert, activation, *,

@@ -249,6 +249,8 @@ def attention_decode_step(
     valid_len=None,                 # cross only: scalar or (B,) valid K/V len
     capture: bool = False,
     dense_threshold: int = 4096,
+    kv_len: Optional[int] = None,
+    backend: str = "jnp",
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], Optional[jnp.ndarray]]:
     """One-token decode against a KV cache. Returns (y, new_cache, argmax).
 
@@ -261,6 +263,20 @@ def attention_decode_step(
     partitioned over a sequence-sharded cache (small all-reduces instead of
     an all-gather of the cache) — see EXPERIMENTS.md §Perf (gemma3
     long_500k iteration).
+
+    ``kv_len`` is a STATIC ragged-decode hint from the serving engine:
+    every row's validity (``pos + 1``) is promised to be <= ``kv_len``
+    this step, so the attention read slices the cache to its first
+    ``kv_len`` slots instead of scoring all ``max_len`` padded positions
+    (the cache write above still targets the full buffer). Ignored for
+    windowed layers (their rolling cache wraps, so high slot indices stay
+    live) and cross-attention.
+
+    ``backend`` selects the attention realization: ``"jnp"`` (dense
+    einsum under ``dense_threshold``, blocked flash above) or
+    ``"pallas"`` — ``repro.kernels.decode_attention`` with per-row
+    ``valid_len`` (interpret-mode on CPU; falls back to dense when
+    ``capture`` needs the score matrix).
 
     Windowed layers use a rolling cache of ``window`` slots (write at
     ``pos % window``); full layers write at ``pos``. Cross-attention reads a
@@ -311,12 +327,21 @@ def attention_decode_step(
         valid = jnp.minimum(pos + 1, T) if window > 0 else pos + 1
         new_cache = {"k": k, "v": v}
 
+    # ragged-decode hint: score only the slots that can be valid
+    k_att, v_att, T_att = k, v, T
+    if (kv_len is not None and not cross and window == 0 and kv_len < T):
+        k_att, v_att, T_att = k[:, :kv_len], v[:, :kv_len], kv_len
+
     qg = jnp.moveaxis(q.reshape(B, 1, nkv, g, hd), 1, 3)
-    kt = jnp.moveaxis(k, 1, 2)
-    vt = jnp.moveaxis(v, 1, 2)
+    kt = jnp.moveaxis(k_att, 1, 2)
+    vt = jnp.moveaxis(v_att, 1, 2)
     attn_argmax = None
-    if T <= dense_threshold:
-        tpos = jnp.arange(T)
+    if backend == "pallas" and not capture:
+        from repro.kernels.decode_attention.ops import decode_attention_pallas
+        out = decode_attention_pallas(qg[:, :, :, 0, :], k_att, v_att,
+                                      valid)[:, :, :, None, :]
+    elif T_att <= dense_threshold:
+        tpos = jnp.arange(T_att)
         if jnp.ndim(valid) == 1:
             mask = jnp.where(tpos[None, :] < jnp.asarray(valid)[:, None],
                              0.0, NEG_INF)          # (B, T)

@@ -112,6 +112,7 @@ def block_forward(
     moe_layer_fn=None,
     moe_executor: str = "dense",
     moe_grouped_fn=None,
+    moe_router_impl: str = "fused",
 ) -> Tuple[jnp.ndarray, Dict[str, Any], Dict[str, Any]]:
     """Returns (x, cache, captured). ``captured`` may hold attn_argmax /
     topk_idx / expert_counts / routing (the executor's RoutingSummary)
@@ -167,7 +168,8 @@ def block_forward(
             y, aux = moe_forward(params["moe"], cfg, h, capture=capture,
                                  executor=moe_executor,
                                  expert_ffn_fn=moe_ffn_fn,
-                                 grouped_ffn_fn=moe_grouped_fn)
+                                 grouped_ffn_fn=moe_grouped_fn,
+                                 router_impl=moe_router_impl)
         x = x + y
         cap["lb_loss"] = aux["lb_loss"]
         cap["z_loss"] = aux["z_loss"]
@@ -199,7 +201,10 @@ def block_decode_step(
     moe_layer_fn=None,
     moe_executor: str = "dense",
     moe_grouped_fn=None,
+    moe_router_impl: str = "fused",
     dense_threshold: int = 4096,
+    kv_len: Optional[int] = None,
+    attn_backend: str = "jnp",
 ) -> Tuple[jnp.ndarray, Dict[str, Any], Dict[str, Any]]:
     """Returns (x, new_cache, captured). ``pos`` may be scalar or (B,).
 
@@ -207,7 +212,9 @@ def block_decode_step(
     dict for the single decoded token: ``attn_argmax`` (B, 1) and the MoE
     ``topk_idx``/``topk_weight`` (B, 1, k) — the serving engine's expert
     telemetry reads these. ``cross_valid`` masks encoder padding in
-    cross-attention (scalar or per-row).
+    cross-attention (scalar or per-row). ``kv_len`` / ``attn_backend``
+    forward the serving engine's ragged-decode hint and attention
+    realization to :func:`attention_decode_step`.
     """
     new_cache: Dict[str, Any] = {}
     cap: Dict[str, Any] = {}
@@ -220,7 +227,8 @@ def block_decode_step(
         y, kv, argmax = attention_decode_step(
             attn_p, cfg, h, cache["attn"], pos=pos, causal=cfg.causal,
             window=window, rope_theta=rope, capture=capture,
-            dense_threshold=dense_threshold)
+            dense_threshold=dense_threshold, kv_len=kv_len,
+            backend=attn_backend)
         new_cache["attn"] = kv
         if capture and argmax is not None:
             cap["attn_argmax"] = argmax
@@ -260,7 +268,8 @@ def block_decode_step(
             y, aux = moe_forward(params["moe"], cfg, h, capture=capture,
                                  executor=moe_executor,
                                  expert_ffn_fn=moe_ffn_fn,
-                                 grouped_ffn_fn=moe_grouped_fn)
+                                 grouped_ffn_fn=moe_grouped_fn,
+                                 router_impl=moe_router_impl)
         x = x + y
         if capture and "topk_idx" in aux:
             cap["topk_idx"] = aux["topk_idx"]

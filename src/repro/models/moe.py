@@ -44,6 +44,23 @@ from repro.models.mlp import init_mlp, mlp_forward
 
 MOE_EXECUTORS = ("dense", "grouped", "oracle")
 
+# how the routing front-end is computed (all three feed the same
+# executors through the same dispatch layouts):
+#   "fused"     -- single-pass jnp twin of the fused Pallas kernel: one
+#                  top_k plus a one-hot cumsum yields the within-expert
+#                  ranks and counts directly; no argsort, no second
+#                  bincount/cumsum pass. Integer outputs are bit-equal
+#                  to "reference".
+#   "reference" -- the original separate passes (top_k, then
+#                  argsort+bincount+cumsum inside build_dispatch /
+#                  build_grouped_dispatch). Kept as the differential
+#                  oracle.
+#   "pallas"    -- repro.kernels.router_topk.router_topk_fused_pallas:
+#                  the matmul+softmax+top-k+rank+counts kernel
+#                  (interpret-mode on CPU; tolerance-pinned, integers
+#                  exact).
+ROUTER_IMPLS = ("fused", "reference", "pallas")
+
 
 # ---------------------------------------------------------------------------
 # Params
@@ -101,6 +118,81 @@ def route(router_w: jnp.ndarray, x_flat: jnp.ndarray,
     lb = E * jnp.sum(frac_tokens * frac_probs)
     z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
     return RouterOut(topk_idx.astype(jnp.int32), topk_w, probs, lb, z)
+
+
+class FusedRouting(NamedTuple):
+    """Routing plus the dispatch metadata the executors need, in one pass.
+
+    ``pos_in_e`` is each routed (token, k) pair's stable rank among the
+    pairs of its expert, in flattened row-major pair order — exactly the
+    rank a stable argsort-by-expert assigns, so capacity slots
+    (``idx * C + pos_in_e``) and grouped rows
+    (``group_offsets[idx] + pos_in_e``) derived from it are bit-equal to
+    the :func:`build_dispatch` / :func:`build_grouped_dispatch` plans.
+    """
+
+    topk_idx: jnp.ndarray      # (N, k) int32
+    topk_weight: jnp.ndarray   # (N, k) f32, normalized
+    pos_in_e: jnp.ndarray      # (N, k) int32 stable within-expert rank
+    expert_counts: jnp.ndarray  # (E,) int32 routed pair counts
+    lb_loss: jnp.ndarray       # scalar
+    z_loss: jnp.ndarray        # scalar
+
+
+def route_fused(router_w: jnp.ndarray, x_flat: jnp.ndarray, m: MoEConfig,
+                valid_experts: Optional[int] = None) -> FusedRouting:
+    """Single-pass jnp twin of the fused router kernel.
+
+    Same gating math as :func:`route` (identical expressions, so the
+    losses and weights match bit-for-bit), but the within-expert ranks
+    and per-expert counts come from one exclusive cumsum over the
+    one-hot routed pairs instead of the argsort + bincount + cumsum
+    passes the separate-pass plan builders run per executor.
+    """
+    logits = (x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    E = logits.shape[-1]
+    if valid_experts is not None and valid_experts < E:
+        col = jnp.arange(E)
+        logits = jnp.where(col < valid_experts, logits, -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, m.top_k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    topk_idx = topk_idx.astype(jnp.int32)
+    N, k = topk_idx.shape
+    # stable within-expert rank via exclusive cumsum of the one-hot pairs
+    oh = (topk_idx.reshape(N * k)[:, None]
+          == jnp.arange(E, dtype=jnp.int32)[None, :]).astype(jnp.int32)
+    csum = jnp.cumsum(oh, axis=0)
+    pos_in_e = ((csum - oh) * oh).sum(-1).reshape(N, k)
+    counts = oh.sum(0).astype(jnp.int32)
+    ohot = jax.nn.one_hot(topk_idx[:, 0], E)           # primary choice
+    frac_tokens = ohot.mean(axis=0)
+    frac_probs = probs.mean(axis=0)
+    lb = E * jnp.sum(frac_tokens * frac_probs)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return FusedRouting(topk_idx, topk_w, pos_in_e, counts, lb, z)
+
+
+def route_fused_pallas(router_w: jnp.ndarray, x_flat: jnp.ndarray,
+                       m: MoEConfig, valid_experts: Optional[int] = None,
+                       *, interpret: bool = True) -> FusedRouting:
+    """Fused routing via the Pallas kernel (interpret-mode on CPU).
+
+    Integer outputs (indices, ranks, counts) are exact; weights and the
+    losses are tolerance-pinned against :func:`route_fused` (the kernel
+    reduces the loss statistics tile-by-tile, so float summation order
+    differs).
+    """
+    from repro.kernels.router_topk.ops import router_topk_fused_pallas
+    E = router_w.shape[-1]
+    N = x_flat.shape[0]
+    vals, idx, pos, counts, probs_sum, z_sq = router_topk_fused_pallas(
+        x_flat, router_w, k=m.top_k, valid_experts=valid_experts,
+        interpret=interpret)
+    ohot = jax.nn.one_hot(idx[:, 0], E)
+    lb = E * jnp.sum(ohot.mean(axis=0) * (probs_sum / N))
+    z = z_sq / N
+    return FusedRouting(idx, vals, pos, counts.astype(jnp.int32), lb, z)
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +270,30 @@ def build_dispatch(topk_idx: jnp.ndarray, num_experts: int,
         slot_of_pair=slot_of_flat.reshape(N, k),
         kept=kept_of_flat.reshape(N, k),
         expert_counts=counts.astype(jnp.int32),
+        capacity=C,
+    )
+
+
+def dispatch_plan_from_fused(fr: FusedRouting, num_experts: int,
+                             capacity: int) -> DispatchPlan:
+    """Capacity-buffer plan straight from fused routing — no argsort.
+
+    ``slot_of_pair = idx * C + pos_in_e`` for kept pairs (rank below
+    capacity), the out-of-range sentinel ``E * C`` otherwise; scatter
+    destinations are unique, so the buffers built from this plan are
+    bit-identical to :func:`build_dispatch`'s (which scatters the same
+    values in sorted order).
+    """
+    N, k = fr.topk_idx.shape
+    E, C = num_experts, capacity
+    kept = fr.pos_in_e < C
+    slot = jnp.where(kept, fr.topk_idx * C + fr.pos_in_e, E * C)
+    return DispatchPlan(
+        buffer_index=slot.reshape(N * k).astype(jnp.int32),
+        token_index=(jnp.arange(N * k, dtype=jnp.int32) // k),
+        slot_of_pair=slot.astype(jnp.int32),
+        kept=kept,
+        expert_counts=fr.expert_counts,
         capacity=C,
     )
 
@@ -264,6 +380,37 @@ def build_grouped_dispatch(topk_idx: jnp.ndarray, num_experts: int, *,
         jnp.searchsorted(ends, tile_start, side="right"), 0, E - 1)
     return GroupedDispatch(
         row_of_pair=row_of_flat.reshape(N, k),
+        tile_expert=tile_expert.astype(jnp.int32),
+        group_offsets=offsets.astype(jnp.int32),
+        expert_counts=counts.astype(jnp.int32),
+        block_rows=block_rows,
+        num_rows=R,
+    )
+
+
+def grouped_dispatch_from_fused(fr: FusedRouting, num_experts: int, *,
+                                block_rows: int = 8,
+                                row_multiple: int = 1) -> GroupedDispatch:
+    """Block-aligned ragged-group layout straight from fused routing.
+
+    The destination row of a pair is ``group_offsets[expert] + rank``;
+    offsets come from one cumsum over the block-padded counts. Bit-equal
+    to :func:`build_grouped_dispatch` (which recovers the same ranks via
+    a stable argsort).
+    """
+    N, k = fr.topk_idx.shape
+    E = num_experts
+    counts = fr.expert_counts
+    padded = ((counts + block_rows - 1) // block_rows) * block_rows
+    ends = jnp.cumsum(padded)
+    offsets = ends - padded
+    R = grouped_rows_for(N * k, E, block_rows, row_multiple)
+    row_of_pair = offsets[fr.topk_idx] + fr.pos_in_e
+    tile_start = jnp.arange(R // block_rows) * block_rows
+    tile_expert = jnp.clip(
+        jnp.searchsorted(ends, tile_start, side="right"), 0, E - 1)
+    return GroupedDispatch(
+        row_of_pair=row_of_pair.astype(jnp.int32),
         tile_expert=tile_expert.astype(jnp.int32),
         group_offsets=offsets.astype(jnp.int32),
         expert_counts=counts.astype(jnp.int32),
@@ -363,13 +510,17 @@ def _dropless_summary(counts: jnp.ndarray, drop_mask_shape: Tuple[int, int],
 def moe_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                 *, executor: str = "dense", capture: bool = False,
                 expert_ffn_fn=None, grouped_ffn_fn=None,
-                block_rows: int = 8
+                block_rows: int = 8, router_impl: str = "fused"
                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Local (data-parallel) MoE layer. x: (B, S, d).
 
     ``executor`` selects the dispatch path (see module docstring):
     ``"dense"`` capacity buffers (may drop tokens), ``"grouped"`` dropless
     ragged grouped GEMM, ``"oracle"`` all-experts reference.
+    ``router_impl`` selects the routing front-end (``ROUTER_IMPLS``): the
+    default single-pass ``"fused"`` twin, the separate-pass
+    ``"reference"``, or the ``"pallas"`` kernel — all three feed every
+    executor through the same dispatch layouts (integers bit-equal).
     ``expert_ffn_fn`` / ``grouped_ffn_fn`` swap in the Pallas kernels for
     the dense / grouped expert compute respectively. ``aux["routing"]``
     always carries the executor's :class:`RoutingSummary`.
@@ -379,14 +530,26 @@ def moe_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     if executor not in MOE_EXECUTORS:
         raise ValueError(f"unknown MoE executor {executor!r}; "
                          f"expected one of {MOE_EXECUTORS}")
+    if router_impl not in ROUTER_IMPLS:
+        raise ValueError(f"unknown router impl {router_impl!r}; "
+                         f"expected one of {ROUTER_IMPLS}")
     B, S, d = x.shape
     x_flat = x.reshape(B * S, d)
-    r = route(params["router"], x_flat, m, valid_experts=m.num_experts)
+    if router_impl == "reference":
+        r = route(params["router"], x_flat, m, valid_experts=m.num_experts)
+        fr = None
+    elif router_impl == "pallas":
+        r = fr = route_fused_pallas(params["router"], x_flat, m,
+                                    valid_experts=m.num_experts)
+    else:
+        r = fr = route_fused(params["router"], x_flat, m,
+                             valid_experts=m.num_experts)
     E = params["router"].shape[-1]
 
     if executor == "dense":
         C = capacity_for(B * S, m, E)
-        plan = build_dispatch(r.topk_idx, E, C)
+        plan = (build_dispatch(r.topk_idx, E, C) if fr is None
+                else dispatch_plan_from_fused(fr, E, C))
         buf = dispatch_tokens(x_flat, plan, E)
         fn = expert_ffn_fn or expert_ffn
         buf_out = fn(params, buf, cfg.activation)
@@ -402,7 +565,9 @@ def moe_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
             capacity=jnp.int32(C),
         )
     elif executor == "grouped":
-        gd = build_grouped_dispatch(r.topk_idx, E, block_rows=block_rows)
+        gd = (build_grouped_dispatch(r.topk_idx, E, block_rows=block_rows)
+              if fr is None else
+              grouped_dispatch_from_fused(fr, E, block_rows=block_rows))
         buf = dispatch_grouped(x_flat, gd)
         fn = grouped_ffn_fn or grouped_expert_ffn
         buf_out = fn(params, buf, gd.tile_expert, cfg.activation)
@@ -414,8 +579,9 @@ def moe_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray,
         sel = jnp.take_along_axis(
             jnp.moveaxis(all_out, 0, 1), r.topk_idx[..., None], axis=1)
         y = jnp.einsum("nkd,nk->nd", sel, r.topk_weight.astype(sel.dtype))
-        counts = jnp.bincount(r.topk_idx.reshape(-1),
-                              length=E).astype(jnp.int32)
+        counts = (jnp.bincount(r.topk_idx.reshape(-1),
+                               length=E).astype(jnp.int32)
+                  if fr is None else fr.expert_counts)
         summary = _dropless_summary(counts, (B * S, m.top_k),
                                     jnp.cumsum(counts) - counts)
 

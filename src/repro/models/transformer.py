@@ -37,6 +37,7 @@ class Model:
     def __init__(self, cfg: ModelConfig, *, expert_pad_multiple: int = 1,
                  moe_ffn_fn=None, moe_layer_fn=None,
                  moe_executor: str = "dense", moe_grouped_fn=None,
+                 moe_router_impl: str = "fused", attn_backend: str = "jnp",
                  remat: bool = True):
         self.cfg = cfg
         self.expert_pad_multiple = expert_pad_multiple
@@ -48,6 +49,11 @@ class Model:
         # mutating a shared Model instance
         self.moe_executor = moe_executor
         self.moe_grouped_fn = moe_grouped_fn
+        # routing front-end ("fused" | "reference" | "pallas") and decode
+        # attention realization ("jnp" | "pallas") — same per-call
+        # override convention as moe_executor
+        self.moe_router_impl = moe_router_impl
+        self.attn_backend = attn_backend
         self.remat = remat   # checkpoint each block in the training path
         self.decode_dense_threshold = 4096  # see attention_decode_step
         self.num_experts_padded = (
@@ -141,14 +147,16 @@ class Model:
         return_cache: bool = False,
         hidden_only: bool = False,
         moe_executor: Optional[str] = None,
+        moe_router_impl: Optional[str] = None,
     ) -> Tuple[jnp.ndarray, Dict[str, Any], Any]:
         """Returns (logits, aux, cache). ``aux`` carries MoE losses and,
         under ``capture``, per-block routing/attention features.
         ``hidden_only`` skips the LM head (the loss fuses head+CE).
-        ``moe_executor`` overrides the model's MoE dispatch path for this
-        call."""
+        ``moe_executor`` / ``moe_router_impl`` override the model's MoE
+        dispatch path / routing front-end for this call."""
         cfg = self.cfg
         executor = moe_executor or self.moe_executor
+        router_impl = moe_router_impl or self.moe_router_impl
         x = jnp.take(params["embed"], tokens, axis=0)
         n_front = 0
         if cfg.frontend == "vision_stub" and frontend is not None:
@@ -176,7 +184,8 @@ class Model:
                     return_cache=return_cache, moe_ffn_fn=self.moe_ffn_fn,
                     moe_layer_fn=self.moe_layer_fn,
                     moe_executor=executor,
-                    moe_grouped_fn=self.moe_grouped_fn)
+                    moe_grouped_fn=self.moe_grouped_fn,
+                    moe_router_impl=router_impl)
                 caches[f"pos{p}"] = c
                 caps[f"pos{p}"] = cap
             return h, (caches, caps)
@@ -275,7 +284,8 @@ class Model:
 
     def prefill(self, params: Params, tokens: jnp.ndarray, *,
                 frontend=None, enc_tokens=None, capture: bool = False,
-                moe_executor: Optional[str] = None):
+                moe_executor: Optional[str] = None,
+                moe_router_impl: Optional[str] = None):
         """Full-sequence pass that returns (logits, cache) for decoding.
 
         With ``capture=True`` returns (logits, cache, aux) where ``aux``
@@ -283,7 +293,8 @@ class Model:
         engine's telemetry source)."""
         logits, aux, cache = self.forward(
             params, tokens, frontend=frontend, enc_tokens=enc_tokens,
-            return_cache=True, capture=capture, moe_executor=moe_executor)
+            return_cache=True, capture=capture, moe_executor=moe_executor,
+            moe_router_impl=moe_router_impl)
         if capture:
             return logits, cache, aux
         return logits, cache
@@ -291,16 +302,25 @@ class Model:
     def decode_step(self, params: Params, tokens: jnp.ndarray,
                     cache: Dict[str, Any], pos, *,
                     capture: bool = False, cross_valid=None,
-                    moe_executor: Optional[str] = None):
+                    moe_executor: Optional[str] = None,
+                    moe_router_impl: Optional[str] = None,
+                    kv_len: Optional[int] = None,
+                    attn_backend: Optional[str] = None):
         """One-token step. tokens: (B, 1); ``pos``: absolute position —
         scalar (whole batch) or a (B,) vector of per-slot positions for
         ragged continuous batching. Returns (logits, new_cache), or
         (logits, new_cache, captures) under ``capture`` where ``captures``
         maps ``pos{p}`` -> stacked (num_blocks, ...) routing/attention
         captures. ``cross_valid`` masks encoder padding per row (enc-dec
-        slots prefilled from ragged sources)."""
+        slots prefilled from ragged sources). ``kv_len``: static promise
+        that every row's ``pos + 1 <= kv_len`` this step, letting
+        full-attention layers score a sliced cache instead of the whole
+        ``max_len`` buffer (callers re-jit per distinct value — bucket
+        it). ``attn_backend``: "jnp" | "pallas" decode attention."""
         cfg = self.cfg
         executor = moe_executor or self.moe_executor
+        router_impl = moe_router_impl or self.moe_router_impl
+        backend = attn_backend or self.attn_backend
         pos = jnp.asarray(pos)
         x = jnp.take(params["embed"], tokens, axis=0)
         if cfg.pos_embed == "learned":
@@ -323,7 +343,9 @@ class Model:
                     moe_layer_fn=self.moe_layer_fn,
                     moe_executor=executor,
                     moe_grouped_fn=self.moe_grouped_fn,
-                    dense_threshold=self.decode_dense_threshold)
+                    moe_router_impl=router_impl,
+                    dense_threshold=self.decode_dense_threshold,
+                    kv_len=kv_len, attn_backend=backend)
                 new_caches[f"pos{p}"] = nc
                 caps[f"pos{p}"] = cap
             return h, (new_caches, caps)

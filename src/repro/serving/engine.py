@@ -45,8 +45,19 @@ from repro.dispatch.rounds import RoundAccumulator
 from repro.models import Model
 from repro.models.frontends import stub_frontend_embeddings
 from repro.serving.kv_slots import SlotKVCache
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, RequestState, SlotScheduler
 from repro.serving.telemetry import ExpertTelemetry
+
+# Hot-path kernel realizations. "fused" (default) keeps everything in
+# jnp but uses the single-pass fused routing twin and ragged decode
+# attention (batched decode attends only over the longest LIVE slot,
+# bucketed, instead of the full max_len buffer). "pallas" additionally
+# routes MoE gating through the fused Pallas router kernel and decode
+# attention through the flash-decode Pallas kernel. "reference" is the
+# original separate-pass / full-buffer path, kept as the equivalence
+# baseline.
+ENGINE_KERNELS = ("fused", "pallas", "reference")
 
 
 class ServingEngine:
@@ -56,10 +67,24 @@ class ServingEngine:
                  moe_executor: str = "grouped", predictor=None,
                  cache=None, fair_aging: float = 64.0,
                  priority_aging: float = 0.0,
-                 tenant_weights: Optional[Dict[str, float]] = None):
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 kernels: str = "fused", kv_len_bucket: int = 16,
+                 prefix_cache_size: int = 0):
         self.model = model
         self.params = params
         self.cfg = model.cfg
+        if kernels not in ENGINE_KERNELS:
+            raise ValueError(f"kernels must be one of {ENGINE_KERNELS}, "
+                             f"got {kernels!r}")
+        self.kernels = kernels
+        self._moe_router_impl = {"fused": "fused", "pallas": "pallas",
+                                 "reference": "reference"}[kernels]
+        self._attn_backend = "pallas" if kernels == "pallas" else "jnp"
+        # ragged decode: pass a STATIC bucketed kv-length bound to the jit
+        # decode step so attention scans only the live prefix of the slot
+        # buffer. Bucketing bounds recompiles to max_len / kv_len_bucket.
+        self._ragged_decode = kernels != "reference"
+        self.kv_len_bucket = max(1, kv_len_bucket)
         # Serving dispatches MoE layers through the DROPLESS grouped
         # ragged-GEMM path by default: under the skewed expert popularity
         # the planner exploits, the dense capacity path silently drops
@@ -111,6 +136,20 @@ class ServingEngine:
         self._n_front = (self.cfg.frontend_tokens
                          if self.cfg.frontend == "vision_stub" else 0)
         self._enc_dec = self.cfg.is_encoder_decoder
+        # prompt prefix cache: reuse prepared KV state across requests
+        # sharing a prompt (exact) or a prompt prefix (extended by
+        # teacher-forcing the suffix through the decode path). Valid only
+        # for causal decoder-only stacks without frontend tokens — a
+        # prefix's KV rows are then exactly the full prompt's prefix rows.
+        if prefix_cache_size > 0:
+            if not self.cfg.causal or self._enc_dec or self._n_front:
+                raise ValueError(
+                    "prefix cache requires a causal decoder-only model "
+                    "without frontend tokens")
+            self.prefix_cache: Optional[PrefixCache] = \
+                PrefixCache(prefix_cache_size)
+        else:
+            self.prefix_cache = None
         # Prompt-length bucketing bounds prefill recompiles (one per bucket,
         # not one per distinct ragged length). Right-padding is invisible
         # ONLY for purely-causal full-attention DENSE stacks: causal prefill
@@ -134,38 +173,58 @@ class ServingEngine:
         self.step_count = 0
         self._finished: List[Request] = []
         self._jit_prefill = jax.jit(self._prefill_impl)
-        self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,),
+                                   static_argnums=(5,))
+        # batch-1 teacher-forced decode for prefix-cache extension. Never
+        # donates its cache argument: the stored entry cache must survive
+        # to serve future hits.
+        self._jit_prefix_step = jax.jit(self._prefix_step_impl)
 
     # ----------------------------------------------------------- jit bodies
     def _prefill_impl(self, params, toks, frontend, enc_tokens, last_idx):
         if self._capture:
             logits, cache, aux = self.model.prefill(
                 params, toks, frontend=frontend, enc_tokens=enc_tokens,
-                capture=True, moe_executor=self.moe_executor)
+                capture=True, moe_executor=self.moe_executor,
+                moe_router_impl=self._moe_router_impl)
             caps = aux["captures"]
         else:
             logits, cache = self.model.prefill(
                 params, toks, frontend=frontend, enc_tokens=enc_tokens,
-                moe_executor=self.moe_executor)
+                moe_executor=self.moe_executor,
+                moe_router_impl=self._moe_router_impl)
             caps = {}
         cache = self.model.prepare_decode_cache(cache, self.max_len)
         # last REAL token's logits (bucketed prompts are right-padded),
         # restricted to the valid vocab (the head spans padded_vocab).
         return logits[:, last_idx, :self.cfg.vocab_size], cache, caps
 
-    def _decode_impl(self, params, toks, cache, pos, cross_valid):
+    def _decode_impl(self, params, toks, cache, pos, cross_valid, kv_len):
         if self._capture:
             logits, cache, caps = self.model.decode_step(
                 params, toks, cache, pos, capture=True,
-                cross_valid=cross_valid, moe_executor=self.moe_executor)
+                cross_valid=cross_valid, moe_executor=self.moe_executor,
+                moe_router_impl=self._moe_router_impl, kv_len=kv_len,
+                attn_backend=self._attn_backend)
         else:
             logits, cache = self.model.decode_step(
                 params, toks, cache, pos, cross_valid=cross_valid,
-                moe_executor=self.moe_executor)
+                moe_executor=self.moe_executor,
+                moe_router_impl=self._moe_router_impl, kv_len=kv_len,
+                attn_backend=self._attn_backend)
             caps = {}
         # never emit padding-vocab ids: they corrupt telemetry keying and
         # downstream consumers of Request.output
         return logits[:, -1, :self.cfg.vocab_size], cache, caps
+
+    def _prefix_step_impl(self, params, tok, cache, pos):
+        # plain jnp attention: batch-1 single-token steps are launch-bound,
+        # not a kernel target; router impl still follows the engine knob so
+        # extension reproduces exactly what prefill would have routed.
+        logits, cache = self.model.decode_step(
+            params, tok, cache, pos, moe_executor=self.moe_executor,
+            moe_router_impl=self._moe_router_impl)
+        return logits[:, -1, :self.cfg.vocab_size], cache
 
     @property
     def pending(self) -> int:
@@ -235,18 +294,58 @@ class ServingEngine:
             assert req is not None
             kw = self._prefill_kwargs(req.prompt)
             true_len = len(req.prompt)
-            bucket = self.prompt_bucket
-            padded = -(-true_len // bucket) * bucket
-            # prefilled cache (padded + frontend) must fit the slot buffer
-            padded = min(padded, self.max_len - self._n_front)
-            toks = np.zeros(padded, np.int32)
-            toks[:true_len] = req.prompt
-            last_logits, cache, caps = self._jit_prefill(
-                self.params, jnp.asarray(toks[None]),
-                kw["frontend"], kw["enc_tokens"],
-                jnp.int32(self._n_front + true_len - 1))
-            self.kv.insert(cache, slot)
             s_tot = true_len + self._n_front
+            pc_kind, pc_entry = "miss", None
+            if self.prefix_cache is not None:
+                pc_kind, pc_entry = self.prefix_cache.lookup(req.prompt)
+                if pc_kind == "prefix" and self.telemetry is not None:
+                    # extension teacher-forces the suffix without capture,
+                    # so it cannot replay routing records — with telemetry
+                    # on, only exact hits skip the prefill
+                    pc_kind, pc_entry = "miss", None
+            caps_sliced: Dict[str, Any] = {}
+            if pc_kind == "exact":
+                # prefill is deterministic, so the stored prepared cache +
+                # last-token logits (and sliced captures, for telemetry
+                # replay) are bit-identical to re-prefilling this prompt
+                self.kv.insert(pc_entry.cache, slot, length=s_tot)
+                last_np = pc_entry.last_logits
+                caps_sliced = pc_entry.caps or {}
+            elif pc_kind == "prefix":
+                # extend the longest stored prefix by teacher-forcing the
+                # unseen suffix through the decode path, one token a step
+                cache = pc_entry.cache
+                logits = None
+                for t in range(len(pc_entry.prompt), true_len):
+                    logits, cache = self._jit_prefix_step(
+                        self.params,
+                        jnp.asarray(req.prompt[t][None, None]),
+                        cache, jnp.int32(t))
+                last_np = np.asarray(logits)[0]
+                self.prefix_cache.put(req.prompt, cache, last_np)
+                self.kv.insert(cache, slot, length=s_tot)
+            else:
+                bucket = self.prompt_bucket
+                padded = -(-true_len // bucket) * bucket
+                # prefilled cache (padded + frontend) must fit the slot
+                padded = min(padded, self.max_len - self._n_front)
+                toks = np.zeros(padded, np.int32)
+                toks[:true_len] = req.prompt
+                last_logits, cache, caps = self._jit_prefill(
+                    self.params, jnp.asarray(toks[None]),
+                    kw["frontend"], kw["enc_tokens"],
+                    jnp.int32(self._n_front + true_len - 1))
+                self.kv.insert(cache, slot, length=s_tot)
+                last_np = np.asarray(last_logits)[0]
+                if self.telemetry is not None:
+                    caps_h = jax.tree.map(np.asarray, caps)
+                    caps_sliced = self._sliced_prefill_captures(
+                        caps_h, true_len)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.put(
+                        req.prompt, cache, last_np,
+                        caps_sliced if self.telemetry is not None
+                        else None)
             self.pos[slot] = s_tot
             if self._enc_dec:
                 if self.cfg.frontend == "audio_stub":
@@ -254,22 +353,20 @@ class ServingEngine:
                 else:
                     self.enc_valid[slot] = len(req.prompt)
             if self.telemetry is not None:
-                caps_h = jax.tree.map(np.asarray, caps)
                 mark = self.telemetry.num_records
-                self.telemetry.record_prefill(
-                    req.prompt[None],
-                    self._sliced_prefill_captures(caps_h, true_len))
+                self.telemetry.record_prefill(req.prompt[None], caps_sliced)
                 if self.predictor is not None:
                     # prefill feeds learning only; hints are a decode-
                     # step concern (prefill routes are observed wholesale)
                     self.predictor.observe_tokens(req.prompt)
                     self.predictor.update_records(
                         self.telemetry.records_since(mark))
-            first = int(np.asarray(last_logits)[0].argmax())
+            first = int(last_np.argmax())
             req.first_token_time = time.perf_counter()
             if req.max_new_tokens < 1:
                 self.seqs[slot] = req.prompt.astype(np.int64)
                 self._finish(req, "length")
+                self.kv.release(slot)
             else:
                 req.output.append(first)
                 self.seqs[slot] = np.append(req.prompt.astype(np.int64),
@@ -278,8 +375,10 @@ class ServingEngine:
                 eos = req.eos_id if req.eos_id is not None else self.eos_id
                 if eos is not None and first == eos:
                     self._finish(req, "eos")
+                    self.kv.release(slot)
                 elif len(req.output) >= req.max_new_tokens:
                     self._finish(req, "length")
+                    self.kv.release(slot)
             admitted = True
         return admitted
 
@@ -308,9 +407,18 @@ class ServingEngine:
             self.cache.prefetch(hints)
         cross_valid = (jnp.asarray(self.enc_valid) if self._enc_dec
                        else None)
+        # ragged decode: a static attention bound covering the longest
+        # live slot AFTER this step's write (max valid rows + 1), rounded
+        # up to kv_len_bucket so recompiles stay bounded. Dead slots'
+        # rows are released, so the bound tracks live requests only.
+        kv_len = None
+        if self._ragged_decode:
+            need = self.kv.max_valid_len() + 1
+            b = self.kv_len_bucket
+            kv_len = min(-(-need // b) * b, self.max_len)
         logits, cache, caps = self._jit_decode(
             self.params, jnp.asarray(in_tok[:, None]), self.kv.cache,
-            jnp.asarray(in_pos), cross_valid)
+            jnp.asarray(in_pos), cross_valid, kv_len)
         self.kv.update(cache)
         if self.telemetry is not None:
             caps_h = jax.tree.map(np.asarray, caps)
@@ -343,13 +451,17 @@ class ServingEngine:
             self.seqs[i] = np.append(self.seqs[i], tok)
             self.pos[i] += 1
             self.cur_tok[i] = tok
+            self.kv.set_length(i, int(self.pos[i]))
             eos = req.eos_id if req.eos_id is not None else self.eos_id
             if eos is not None and tok == eos:
                 self._finish(req, "eos")
+                self.kv.release(i)
             elif len(req.output) >= req.max_new_tokens:
                 self._finish(req, "length")
+                self.kv.release(i)
             elif self.pos[i] >= self.max_len:
                 self._finish(req, "truncated")   # KV capacity exhausted
+                self.kv.release(i)
         self.step_count += 1
         return True
 
@@ -477,6 +589,9 @@ class ServingEngine:
                         priority=getattr(r, "priority", 0))
             arr_i += 1
         if self.scheduler.has_work:
+            for i, slot_req in enumerate(self.scheduler.slots):
+                if slot_req is not None:
+                    self.kv.release(i)
             for req in list(self.scheduler.active()):
                 self._finish(req, "truncated")
         return self._finished[mark:]

@@ -18,17 +18,25 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import Model
 
 
 class SlotKVCache:
-    """Slot-batched decode cache with jitted single-slot insertion."""
+    """Slot-batched decode cache with jitted single-slot insertion.
+
+    Tracks per-slot VALID lengths host-side (``lengths[slot]`` = number of
+    cache rows holding real tokens). The ragged-decode path reads
+    ``max_valid_len()`` to bound how far batched decode attention must
+    scan — everything past the longest live slot is pad by construction.
+    """
 
     def __init__(self, model: Model, num_slots: int, max_len: int):
         self.num_slots = num_slots
         self.max_len = max_len
         self.cache: Dict[str, Any] = model.init_cache(num_slots, max_len)
+        self.lengths = np.zeros(num_slots, np.int32)
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
 
     @staticmethod
@@ -44,11 +52,27 @@ class SlotKVCache:
 
         return jax.tree.map(put, big, small)
 
-    def insert(self, prepared_cache: Dict[str, Any], slot: int) -> None:
-        """Scatter a prepared batch-1 decode cache into ``slot``'s row."""
+    def insert(self, prepared_cache: Dict[str, Any], slot: int,
+               length: int = 0) -> None:
+        """Scatter a prepared batch-1 decode cache into ``slot``'s row.
+
+        ``length`` records how many of the row's cache positions hold
+        real tokens (prompt + frontend) for ragged-decode bounding."""
         self.cache = self._insert(self.cache, prepared_cache,
                                   jnp.int32(slot))
+        self.lengths[slot] = length
 
     def update(self, new_cache: Dict[str, Any]) -> None:
         """Adopt the cache returned by a batched decode step."""
         self.cache = new_cache
+
+    def set_length(self, slot: int, length: int) -> None:
+        self.lengths[slot] = length
+
+    def release(self, slot: int) -> None:
+        """Mark a slot's rows as dead (the next insert overwrites them)."""
+        self.lengths[slot] = 0
+
+    def max_valid_len(self) -> int:
+        """Longest valid row across slots — the ragged-decode bound."""
+        return int(self.lengths.max()) if self.num_slots else 0

@@ -190,6 +190,13 @@ def all_cases():
                            (512, 128, 16, 1), (100, 48, 40, 8)]:
             cases.append(_router_case(N, D, E, k, dtype,
                                       f"N{N}D{D}E{E}k{k}"))
+        # REGRESSION (padded-row inertness): N % block_n != 0 with an
+        # EXPLICIT block smaller than N — the zero-padded tail rows used
+        # to flow through softmax/top-k alongside real rows
+        cases.append(_router_case(100, 48, 40, 8, dtype, "pad-b64",
+                                  block_n=64))
+        cases.append(_router_case(130, 32, 8, 2, dtype, "pad-b32",
+                                  block_n=32))
         # decode_attention
         for B, N, G, D, T in [(2, 2, 4, 64, 1024), (1, 8, 1, 128, 512),
                               (4, 1, 2, 32, 2048), (2, 4, 4, 64, 640)]:
@@ -197,4 +204,13 @@ def all_cases():
                                            f"B{B}N{N}G{G}D{D}T{T}"))
         cases.append(_decode_attn_case(1, 2, 2, 32, 500, 96, dtype,
                                        "short-b128", block_t=128))
+        # per-slot RAGGED valid lengths (the serving engine's decode
+        # shape) at T % block_t != 0, so tail-tile padding and per-row
+        # masking compose
+        cases.append(_decode_attn_case(
+            3, 2, 2, 32, 640, jnp.asarray([5, 300, 640], jnp.int32),
+            dtype, "ragged-T640-b256", block_t=256))
+        cases.append(_decode_attn_case(
+            4, 1, 2, 32, 384, jnp.asarray([1, 64, 200, 384], jnp.int32),
+            dtype, "ragged-T384-b256", block_t=256))
     return cases

@@ -180,3 +180,52 @@ def test_unknown_executor_rejected():
     x = jnp.zeros((1, 4, cfg.d_model))
     with pytest.raises(ValueError, match="unknown MoE executor"):
         moe_forward(moe_p, cfg, x, executor="sparse")
+
+
+# ---------------------------------------------------------------------------
+# Fused routing: one kernel pass must equal the separate-pass reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["dense", "grouped", "oracle"])
+def test_fused_routing_bit_equal_to_reference(executor):
+    """``router_impl="fused"`` (single-pass routing with one-hot cumsum
+    ranks) must be BIT-EQUAL to the separate top_k/argsort/cumsum
+    reference for every executor — outputs, losses, and counts."""
+    cfg, moe_p = _moe_setup(num_experts=8, top_k=2, capacity_factor=1.1)
+    moe_p = _skew_router(moe_p, 1.2, seed=5)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (2, 17, cfg.d_model))
+    y_ref, aux_ref = moe_forward(moe_p, cfg, x, executor=executor,
+                                 router_impl="reference")
+    y_fus, aux_fus = moe_forward(moe_p, cfg, x, executor=executor,
+                                 router_impl="fused")
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_fus))
+    for key in ("lb_loss", "z_loss", "expert_counts"):
+        np.testing.assert_array_equal(np.asarray(aux_ref[key]),
+                                      np.asarray(aux_fus[key]))
+
+
+@pytest.mark.parametrize("executor", ["dense", "grouped"])
+def test_pallas_routing_matches_reference(executor):
+    """``router_impl="pallas"`` (the fused Pallas kernel feeding the
+    same dispatch builders) must agree with the reference executor
+    output within kernel tolerance, with identical routing decisions."""
+    cfg, moe_p = _moe_setup(num_experts=8, top_k=2, capacity_factor=1.1)
+    moe_p = _skew_router(moe_p, 1.2, seed=7)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(3), (2, 13, cfg.d_model))
+    y_ref, aux_ref = moe_forward(moe_p, cfg, x, executor=executor,
+                                 router_impl="reference", capture=True)
+    y_pal, aux_pal = moe_forward(moe_p, cfg, x, executor=executor,
+                                 router_impl="pallas", capture=True)
+    np.testing.assert_array_equal(np.asarray(aux_ref["expert_counts"]),
+                                  np.asarray(aux_pal["expert_counts"]))
+    np.testing.assert_array_equal(np.asarray(aux_ref["topk_idx"]),
+                                  np.asarray(aux_pal["topk_idx"]))
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_unknown_router_impl_rejected():
+    cfg, moe_p = _moe_setup()
+    x = jnp.zeros((1, 4, cfg.d_model))
+    with pytest.raises(ValueError, match="router impl"):
+        moe_forward(moe_p, cfg, x, router_impl="fast")

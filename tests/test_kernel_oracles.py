@@ -292,6 +292,111 @@ def test_decode_attention_ignores_invalid_slots():
                                rtol=1e-6, atol=1e-6)
 
 
+def test_router_fused_padded_rows_inert():
+    """REGRESSION: ``router_topk_pallas`` zero-pads token rows up to
+    ``block_n``; the padded rows used to flow through softmax/top-k like
+    real tokens. The fused kernel's routing statistics make the bug
+    observable: expert counts must cover exactly the N*k LIVE pairs and
+    the probability/z-loss sufficient statistics must match the pure-jnp
+    values computed over real rows only."""
+    from repro.kernels.router_topk.ops import router_topk_fused_pallas
+    N, D, E, k, bn = 100, 32, 16, 4, 64          # N % bn != 0
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = jax.random.normal(ks[0], (N, D))
+    w = jax.random.normal(ks[1], (D, E))
+    vals, idx, pos, counts, psum, zsq = router_topk_fused_pallas(
+        x, w, k=k, block_n=bn)
+    counts = np.asarray(counts)
+    np.testing.assert_array_equal(
+        counts, np.bincount(np.asarray(idx).ravel(), minlength=E),
+        err_msg="counts must cover live (token, k) pairs only")
+    assert counts.sum() == N * k
+    logits = np.asarray(x @ w, np.float64)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(psum), probs.sum(0),
+                               rtol=1e-4, atol=1e-4)
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True))
+                 .sum(-1)) + logits.max(-1)
+    np.testing.assert_allclose(float(zsq), float((lse ** 2).sum()),
+                               rtol=1e-3)
+    # pos_in_e is the row-major arrival rank within each expert: the
+    # ranks of each expert's pairs must be exactly 0..count-1
+    pos, idx = np.asarray(pos), np.asarray(idx)
+    for e in range(E):
+        ranks = np.sort(pos.ravel()[idx.ravel() == e])
+        np.testing.assert_array_equal(ranks, np.arange(counts[e]),
+                                      err_msg=f"expert {e} ranks")
+
+
+def test_router_fused_matches_jnp_fused_twin():
+    """The Pallas fused router must agree with the pure-jnp fused twin
+    (``route_fused``) on indices and arrival ranks EXACTLY, and on
+    weights within kernel tolerance — including at N % block_n != 0."""
+    from repro.kernels.router_topk.ops import router_topk_fused_pallas
+    from repro.models.moe import route_fused
+    N, D, E, k = 100, 32, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = jax.random.normal(ks[0], (N, D))
+    w = jax.random.normal(ks[1], (D, E))
+    m = type("M", (), {"num_experts": E, "top_k": k})()
+    fr = route_fused(w, x, m)
+    vals, idx, pos, counts, _, _ = router_topk_fused_pallas(
+        x, w, k=k, block_n=64)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.asarray(fr.topk_idx))
+    np.testing.assert_array_equal(np.asarray(pos),
+                                  np.asarray(fr.pos_in_e))
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(fr.expert_counts))
+    np.testing.assert_allclose(np.asarray(vals),
+                               np.asarray(fr.topk_weight),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_matches_flash_twin_ragged():
+    """Per-slot ragged valid lengths at T % block_t != 0 vs the model's
+    pure-jnp flash twin — the exact shape the serving engine decodes."""
+    from repro.models.attention import _flash_attend
+    B, N, G, D, T = 3, 2, 2, 32, 640
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, N, G, 1, D))
+    k = jax.random.normal(ks[1], (B, N, T, D))
+    v = jax.random.normal(ks[2], (B, N, T, D))
+    valid = jnp.asarray([7, 301, 640], jnp.int32)
+    want, _ = _flash_attend(q, k, v, causal=False, window=0,
+                            q_offset=jnp.asarray(0), kv_valid_len=valid)
+    got = decode_attention_pallas(
+        q[:, :, :, 0], jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        valid, block_t=256)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want[:, :, :, 0]),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_matches_flash_twin_sliding_window():
+    """A sliding-window layer's rolling cache reduces to slot validity
+    at decode (the window IS the cache): per-row valid = min(pos+1, W).
+    The kernel must agree with the flash twin on a partially wrapped
+    rolling cache, W % block_t != 0."""
+    from repro.models.attention import _flash_attend
+    B, N, G, D, W = 2, 2, 2, 32, 96
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (B, N, G, 1, D))
+    k = jax.random.normal(ks[1], (B, N, W, D))
+    v = jax.random.normal(ks[2], (B, N, W, D))
+    # row 0 wrapped (pos >= W: whole cache live), row 1 still filling
+    valid = jnp.asarray([W, 40], jnp.int32)
+    want, _ = _flash_attend(q, k, v, causal=False, window=0,
+                            q_offset=jnp.asarray(0), kv_valid_len=valid)
+    got = decode_attention_pallas(
+        q[:, :, :, 0], jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        valid, block_t=64)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want[:, :, :, 0]),
+                               rtol=3e-5, atol=3e-5)
+
+
 def test_decode_attention_matches_model_attention():
     """Kernel agrees with the model's decode path (same masking rules)."""
     from repro.models.attention import _flash_attend

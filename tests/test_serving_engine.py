@@ -401,3 +401,106 @@ def test_predictor_without_telemetry_is_rejected(gpt2_moe):
     with pytest.raises(ValueError, match="telemetry"):
         ServingEngine(model, params, max_len=32, batch_size=1,
                       collect_telemetry=False, predictor=pred)
+
+
+# ------------------------------------------------------------- kernel paths
+def _serve(model, params, prompts, **kw):
+    eng = ServingEngine(model, params, max_len=32, batch_size=len(prompts),
+                        collect_telemetry=False, **kw)
+    reqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    eng.run()
+    return eng, [r.output for r in reqs]
+
+
+@pytest.mark.parametrize("kernels", ["fused", "pallas"])
+def test_engine_kernel_paths_match_reference(gpt2_moe, kernels):
+    """The fused-routing/flash-decode hot paths must reproduce the
+    reference engine's outputs token-for-token: fused routing is
+    bit-equal routing-wise, and the ragged kv_len bound only excludes
+    cache rows that decode validity already masked."""
+    cfg, model, params = gpt2_moe
+    prompts = _prompts(cfg, [3, 7, 5], seed=6)
+    _, ref = _serve(model, params, prompts, kernels="reference")
+    _, got = _serve(model, params, prompts, kernels=kernels)
+    assert got == ref
+
+
+def test_kv_len_bucket_is_output_invariant(gpt2_moe):
+    """The bucketed static kv_len only bounds how much padded cache the
+    decode step reads; any bucket size must yield identical outputs."""
+    cfg, model, params = gpt2_moe
+    prompts = _prompts(cfg, [4, 9], seed=7)
+    outs = [_serve(model, params, prompts, kernels="fused",
+                   kv_len_bucket=b)[1] for b in (1, 4, 32)]
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_unknown_engine_kernels_rejected(gpt2_moe):
+    cfg, model, params = gpt2_moe
+    with pytest.raises(ValueError, match="kernels"):
+        ServingEngine(model, params, max_len=32, batch_size=1,
+                      collect_telemetry=False, kernels="turbo")
+
+
+# ------------------------------------------------------------- prefix cache
+def test_prefix_cache_exact_hit_is_bit_identical(gpt2_moe):
+    """A repeated prompt is served from the stored prepared cache + last
+    logits without re-prefilling, and the outputs match the uncached
+    engine exactly (prefill is deterministic)."""
+    cfg, model, params = gpt2_moe
+    (prompt,) = _prompts(cfg, [6], seed=8)
+    prompts = [prompt, prompt.copy(), prompt.copy()]
+    _, ref = _serve(model, params, prompts)
+    eng, got = _serve(model, params, prompts, prefix_cache_size=4)
+    assert got == ref
+    st = eng.prefix_cache.stats()
+    assert st["exact_hits"] == 2 and st["misses"] == 1
+    assert st["saved_tokens"] == 2 * len(prompt)
+
+
+def test_prefix_cache_exact_hit_replays_telemetry():
+    """With telemetry on, an exact hit replays the stored sliced prefill
+    captures: the demand matrix equals the uncached engine's."""
+    cfg, model = tiny_model("gpt2-moe")
+    params = model.init_params(jax.random.PRNGKey(0))
+    (prompt,) = _prompts(cfg, [6], seed=9)
+
+    def run(**kw):
+        eng = ServingEngine(model, params, max_len=32, batch_size=2, **kw)
+        reqs = [eng.submit(prompt.copy(), max_new_tokens=4)
+                for _ in range(2)]
+        eng.run()
+        return eng, [r.output for r in reqs]
+
+    ref_eng, ref = run()
+    hit_eng, got = run(prefix_cache_size=4)
+    assert got == ref
+    assert hit_eng.prefix_cache.stats()["exact_hits"] == 1
+    np.testing.assert_array_equal(hit_eng.telemetry.demand_matrix(),
+                                  ref_eng.telemetry.demand_matrix())
+
+
+def test_prefix_cache_extends_shared_prefix(gpt2_moe):
+    """A stored prompt that is a strict prefix of a new one seeds its
+    cache: only the unseen suffix is teacher-forced, and the outputs
+    still match the uncached engine token-for-token."""
+    cfg, model, params = gpt2_moe
+    (long_p,) = _prompts(cfg, [11], seed=10)
+    short_p = long_p[:6].copy()
+    prompts = [short_p, long_p]
+    _, ref = _serve(model, params, prompts)
+    eng, got = _serve(model, params, prompts, prefix_cache_size=4)
+    assert got == ref
+    st = eng.prefix_cache.stats()
+    assert st["prefix_hits"] == 1
+    assert st["saved_tokens"] == len(short_p)
+
+
+def test_prefix_cache_rejected_for_encoder_decoder():
+    """Prefix reuse rests on causal decoder-only KV semantics; the
+    engine must refuse to enable it elsewhere."""
+    cfg, model = tiny_model("whisper-small")
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="prefix cache"):
+        ServingEngine(model, params, max_len=32, batch_size=1,
+                      collect_telemetry=False, prefix_cache_size=4)

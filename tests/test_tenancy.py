@@ -191,6 +191,71 @@ class TestConservation:
 
 
 # ---------------------------------------------------------------------------
+# Distributed gateway: per-account queue-delay / makespan attribution
+# ---------------------------------------------------------------------------
+
+
+class TestDistributedAttribution:
+    """Bugfix: the distributed gateway split the dispatcher's wave-global
+    queue delay across tenants by TOKEN SHARE and folded the wave's
+    makespan excess into EVERY tenant's latency. Both now attribute to
+    the account whose invocation incurred them (the dispatcher reports
+    per-invocation queue waits and spans), mirroring the simulator's
+    ``wave_tallies`` contract — and conservation still holds."""
+
+    def _run(self, tenants, plan):
+        from repro.dist.backend import DistributedBackend
+        with DistributedBackend(PROF, SPEC, faults=HEAVY, seed=11,
+                                transport="inline",
+                                verify_outputs=False) as be:
+            return be.run(plan, REAL, N_TOK, tenants=tenants)
+
+    def test_conservation_under_per_account_attribution(self, plan):
+        mask = np.zeros_like(REAL)
+        mask[:, ::2] = 1.0
+        rep = self._run([("a", REAL * mask), ("b", REAL * (1.0 - mask))],
+                        plan)
+        blocks = rep.tenants.values()
+        np.testing.assert_allclose(
+            sum(b["billed_cost"] for b in blocks), rep.billed_cost,
+            rtol=1e-9, err_msg="tenant billed costs must conserve")
+        np.testing.assert_allclose(
+            sum(b["queue_delay_s"] for b in blocks), rep.queue_delay_s,
+            rtol=1e-9,
+            err_msg="per-account queue delay must sum to the fleet total")
+        for key, tot in (("cold_starts", rep.cold_starts),
+                         ("retries", rep.retries),
+                         ("stragglers", rep.stragglers)):
+            assert sum(b[key] for b in blocks) == tot, key
+        # each tenant carries the shared critical path plus only its OWN
+        # makespan excess, so nobody exceeds the fleet latency
+        for name, blk in rep.tenants.items():
+            assert blk["latency_s"] <= rep.latency_s + 1e-9, name
+
+    def test_unattributed_tenant_pays_nothing(self, plan):
+        """A tenant with zero demand owns no invocations: it must see
+        ZERO queue delay (the old token-share split handed it nearly
+        half) and none of the fault-driven makespan excess (the old
+        code put the global excess in every tenant's latency)."""
+        rep = self._run([("owner", REAL, 0.55 * N_TOK),
+                         ("idle", np.zeros_like(REAL), 0.45 * N_TOK)],
+                        plan)
+        owner, idle = rep.tenants["owner"], rep.tenants["idle"]
+        assert idle["queue_delay_s"] == 0.0
+        np.testing.assert_allclose(owner["queue_delay_s"],
+                                   rep.queue_delay_s, rtol=1e-9)
+        # the owner holds every invocation, so its makespan IS the
+        # wave's: owner latency reconstructs the fleet latency
+        assert owner["latency_s"] == pytest.approx(rep.latency_s,
+                                                   rel=1e-9)
+        # the heavy fault profile produced real wave excess; only the
+        # owner carries it
+        assert rep.retries + rep.stragglers + rep.cold_starts > 0
+        assert idle["latency_s"] < owner["latency_s"]
+        assert idle["billed_cost"] == pytest.approx(0.0, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
 # Replica apportionment
 # ---------------------------------------------------------------------------
 
